@@ -1,0 +1,107 @@
+"""Roofline table builder — turns dry-run artifacts into §Roofline rows.
+
+Hardware constants (TPU v5e class, per assignment):
+  197 TFLOP/s bf16 per chip · 819 GB/s HBM · ~50 GB/s/link ICI
+
+Terms (seconds, per step):
+  compute    = flops_per_chip / 197e12        (trip-count-corrected, traced)
+  memory     = hbm_bytes_per_chip / 819e9     (dot/gather HBM-traffic model)
+  collective = coll_bytes_per_chip / 50e9     (ring-weighted, loop-corrected)
+
+MODEL_FLOPS = 6·N·D (train), 2·N·D (prefill), 2·N_active·B (decode, per
+token) — N_active for MoE. The useful-compute ratio MODEL_FLOPS/HLO_FLOPS
+surfaces remat/attention/dispatch overhead.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ART_DIR = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def model_flops(art: dict) -> float:
+    """6·N_active·D (train) / 2·N_active·D (prefill) / 2·N_active·B (decode,
+    per token). Active = routed top-k + shared for MoE, total otherwise."""
+    n_active = art.get("active_param_count", art["param_count"])
+    d_tokens = art["global_batch"] * art["seq_len"]
+    kind = art["kind"]
+    if kind == "train":
+        return 6.0 * n_active * d_tokens
+    if kind == "prefill":
+        return 2.0 * n_active * d_tokens
+    return 2.0 * n_active * art["global_batch"]      # decode: one token/seq
+
+
+def row_from_artifact(art: dict) -> dict:
+    n_dev = art["n_devices"]
+    flops_chip = art["cost_traced_global"]["flops"] / n_dev
+    bytes_chip = art["cost_traced_global"]["bytes"] / n_dev
+    coll_chip = art["collectives"]["total_bytes"]
+    t_compute = flops_chip / PEAK_FLOPS
+    t_memory = bytes_chip / HBM_BW
+    t_coll = coll_chip / LINK_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = model_flops(art)
+    bound = max(t_compute, t_memory, t_coll)
+    return {
+        "arch": art["arch"], "shape": art["shape"], "mesh": art["mesh"],
+        "kind": art["kind"],
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops": art["cost_traced_global"]["flops"],
+        "useful_ratio": mf / max(art["cost_traced_global"]["flops"], 1.0),
+        # roofline fraction: useful model flops per chip-second at the
+        # binding term, relative to peak
+        "roofline_frac": (mf / n_dev / max(bound, 1e-12)) / PEAK_FLOPS,
+        "hbm_gib": art["memory"].get("total_hbm_bytes", 0) / 2**30,
+        "compile_s": art.get("compile_sec"),
+    }
+
+
+def load_rows(mesh: str = "single", art_dir: Path = ART_DIR) -> list[dict]:
+    rows = []
+    for f in sorted((art_dir / mesh).glob("*.json")):
+        art = json.loads(f.read_text())
+        if "skipped" in art:
+            rows.append({"arch": art["arch"], "shape": art["shape"],
+                         "mesh": mesh, "skipped": art["skipped"]})
+            continue
+        rows.append(row_from_artifact(art))
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':<24}{'shape':<13}{'cmp_s':>9}{'mem_s':>9}{'coll_s':>9}"
+           f"{'dominant':>11}{'useful':>8}{'roofl%':>8}{'hbm GiB':>9}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"{r['arch']:<24}{r['shape']:<13}  SKIP: {r['skipped'][:60]}")
+            continue
+        lines.append(
+            f"{r['arch']:<24}{r['shape']:<13}{r['compute_s']:>9.4f}"
+            f"{r['memory_s']:>9.4f}{r['collective_s']:>9.4f}"
+            f"{r['dominant']:>11}{r['useful_ratio']:>8.2f}"
+            f"{100*r['roofline_frac']:>8.2f}{r['hbm_gib']:>9.2f}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--dir", default=str(ART_DIR))
+    args = ap.parse_args()
+    rows = load_rows(args.mesh, Path(args.dir))
+    print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

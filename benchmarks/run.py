@@ -1,0 +1,49 @@
+"""Benchmark harness — one bench per paper table/figure + the roofline table.
+
+Prints ``name,value,derived`` CSV rows (and a human table for the roofline
+when dry-run artifacts exist).
+
+  bench_ingest_throughput   paper Fig. 3 (ingest → HDFS/log landing rate)
+  bench_backpressure        paper Fig. 5 (sink outage, clamp at 10k, replay)
+  bench_recovery            paper §II.B (crash recovery, delivery guarantees)
+  bench_loader              host→device feed rate (ingestion fabric edge)
+  roofline                  §Roofline table from artifacts/dryrun (if present)
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import (bench_backpressure, bench_ingest_throughput,
+                        bench_loader, bench_recovery, roofline)
+
+
+def emit(rows):
+    for r in rows:
+        name = r.pop("name")
+        for k, v in r.items():
+            print(f"{name},{k},{v}")
+
+
+def main() -> None:
+    print("bench,metric,value")
+    emit(bench_ingest_throughput.main())
+    emit(bench_backpressure.main())
+    emit(bench_recovery.main())
+    emit(bench_loader.main())
+    art = roofline.ART_DIR
+    if art.exists():
+        for mesh in ("single", "multi"):
+            if (art / mesh).exists():
+                print(f"\n=== roofline ({mesh} pod) ===")
+                print(roofline.format_table(roofline.load_rows(mesh)))
+    else:
+        print("roofline,skipped,run `python -m repro.launch.dryrun` first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Streaming inference: requests arrive on a 'requests' topic, a Server
+consumer batches prefill+decode, completions land on a 'completions' topic —
+the paper's add/remove-consumers property applied to serving (scale servers
+= add group members).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import json
+import tempfile
+from pathlib import Path
+
+import jax
+
+from repro import configs
+from repro.core import ConsumerGroup, PartitionedLog
+from repro.models import Model
+from repro.runtime import ServeConfig, Server
+
+
+def main() -> None:
+    root = Path(tempfile.mkdtemp(prefix="serve_"))
+    log = PartitionedLog(root / "log")
+    log.create_topic("requests", partitions=4)
+    log.create_topic("completions", partitions=4)
+
+    # any producer can enqueue requests (REST bridge, upstream pipeline...)
+    prompts = ["the market rally", "storm warning for", "election results",
+               "satellite launch at", "quarter earnings beat", "trade summit"]
+    for i, p in enumerate(prompts):
+        log.append("requests", str(i).encode(),
+                   json.dumps({"id": i, "prompt": p}).encode())
+
+    cfg = configs.get_reduced("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    grp = ConsumerGroup(log, "requests", "servers")
+    server = Server(model, params, grp.add_member("srv0"), log,
+                    ServeConfig(batch_size=3, prompt_len=32,
+                                max_new_tokens=16))
+    while server.serve_once():
+        pass
+    print(f"served {server.served} requests")
+    out = log.read("completions", 0, 0, 100)
+    for p in range(log.num_partitions("completions")):
+        for r in log.read("completions", p, 0, 100):
+            doc = json.loads(r.value)
+            print(f"  req {doc['id']}: {doc['completion_ids'][:8]}…")
+    log.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""StreamFlow — a scalable and robust data-stream ingestion fabric for
+multi-pod JAX training and serving.
+
+Reproduction (adapted to TPU clusters) of: Isah & Zulkernine, "A Scalable and
+Robust Framework for Data Stream Ingestion", 2018.
+
+Subpackages:
+  core        the paper's dataflow-management framework (ingestion fabric)
+  data        tokenizer / packing / streaming loader (log -> sharded jax.Array)
+  models      the 10 assigned architectures (JAX, scan-over-layers)
+  kernels     Pallas TPU kernels (flash attn, decode attn, SSD, rmsnorm)
+  optim       AdamW + schedules (ZeRO-sharded states)
+  checkpoint  async sharded checkpointing w/ stream offsets
+  runtime     Trainer / Server loops, fault tolerance, elasticity
+  configs     per-arch configs + shape suites
+  launch      production mesh, multi-pod dry-run, train/serve CLIs
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from .manager import CheckpointManager, CorruptCheckpoint, to_device
+
+__all__ = ["CheckpointManager", "CorruptCheckpoint", "to_device"]

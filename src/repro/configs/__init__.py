@@ -1,0 +1,33 @@
+"""Architecture registry: ``get(name)`` -> full ArchConfig,
+``get_reduced(name)`` -> CPU-smoke-scale config of the same family.
+"""
+from __future__ import annotations
+
+from importlib import import_module
+
+ARCHS = (
+    "llava-next-34b", "tinyllama-1.1b", "stablelm-12b", "nemotron-4-15b",
+    "qwen3-8b", "mamba2-370m", "whisper-large-v3", "hymba-1.5b",
+    "olmoe-1b-7b", "deepseek-v2-lite-16b",
+)
+
+
+def _module(name: str):
+    return import_module(f".{name.replace('-', '_').replace('.', '_')}",
+                         __package__)
+
+
+def get(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; options: {ARCHS}")
+    return _module(name).config()
+
+
+def get_reduced(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; options: {ARCHS}")
+    return _module(name).reduced()
+
+
+def all_configs():
+    return {n: get(n) for n in ARCHS}

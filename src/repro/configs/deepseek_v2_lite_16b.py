@@ -1,0 +1,25 @@
+"""deepseek-v2-lite-16b [moe]: 27L d_model=2048 16H d_ff=1408 (per expert)
+vocab=102400, MoE 64 routed experts top-6 + 2 shared — MLA kv_lora=512,
+qk_nope=128 qk_rope=64 v_head=128. [arXiv:2405.04434; hf]
+NOTE: assignment note says '2 shared+160 routed' (that is V2-236B); the
+header says 64e — we follow the header (V2-Lite geometry): 64 routed + 2
+shared, top-6. Flagged in DESIGN.md §Arch-applicability."""
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-v2-lite-16b", family="moe", num_layers=27,
+        d_model=2048, n_heads=16, n_kv_heads=16, d_head=128, d_ff=1408,
+        vocab_size=102400, ffn="swiglu", attn_shard="heads",
+        n_experts=64, top_k=6, n_shared_experts=2, capacity_factor=1.25,
+        kv_lora=512, qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-v2-lite-16b-reduced", family="moe", num_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=4, d_head=16, d_ff=32,
+        vocab_size=512, ffn="swiglu", attn_shard="heads", n_experts=8,
+        top_k=2, n_shared_experts=1, capacity_factor=8.0,  # drop-free at smoke scale
+        kv_lora=32, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16)

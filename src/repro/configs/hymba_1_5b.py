@@ -1,0 +1,26 @@
+"""hymba-1.5b [hybrid]: 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16 — parallel attention + mamba heads per layer,
+128 meta tokens (learnable KV prefix), sliding-window attention everywhere
+except layers {0,15,31}. [arXiv:2411.13676; hf]
+25/5 heads don't divide TP=16 → sequence sharding. subquadratic (SWA+SSM)."""
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="hymba-1.5b", family="hybrid", num_layers=32, d_model=1600,
+        n_heads=25, n_kv_heads=5, d_head=64, d_ff=5504, vocab_size=32256,  # 32001 padded to /16 vocab shards
+        ffn="swiglu", attn_shard="sequence", sliding_window=2048,
+        full_attn_layers=(0, 15, 31), meta_tokens=128,
+        ssm_state=16, ssm_headdim=64, ssm_expand=2, ssm_ngroups=1,
+        ssm_chunk=256, ssm_conv=4, subquadratic=True)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="hymba-1.5b-reduced", family="hybrid", num_layers=3, d_model=64,
+        n_heads=4, n_kv_heads=2, d_head=16, d_ff=128, vocab_size=512,
+        ffn="swiglu", attn_shard="sequence", sliding_window=8,
+        full_attn_layers=(0, 2), meta_tokens=4,
+        ssm_state=8, ssm_headdim=16, ssm_expand=2, ssm_ngroups=1,
+        ssm_chunk=8, ssm_conv=4, subquadratic=True)

@@ -1,0 +1,22 @@
+"""llava-next-34b [vlm]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000 — anyres tiling (stub frontend supplies pre-tiled patch
+embeddings). [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+Backbone geometry matches the assignment (Yi-34B-class decoder).
+56 q-heads / 8 kv-heads don't divide TP=16 → sequence (context) sharding.
+"""
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="llava-next-34b", family="vlm", num_layers=60, d_model=7168,
+        n_heads=56, n_kv_heads=8, d_head=128, d_ff=20480, vocab_size=64000,
+        ffn="swiglu", attn_shard="sequence",
+        img_tokens=576, img_embed_dim=1024)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="llava-next-34b-reduced", family="vlm", num_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_head=16, d_ff=128, vocab_size=512,
+        ffn="swiglu", attn_shard="sequence", img_tokens=8, img_embed_dim=32)

@@ -1,0 +1,17 @@
+"""nemotron-4-15b [dense]: 32L d_model=6144 48H (GQA kv=8) d_ff=24576
+vocab=256000 — GQA, squared-ReLU FFN (no GLU gate). [arXiv:2402.16819]"""
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="nemotron-4-15b", family="dense", num_layers=32, d_model=6144,
+        n_heads=48, n_kv_heads=8, d_head=128, d_ff=24576, vocab_size=256000,
+        ffn="sq_relu", attn_shard="heads")
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="nemotron-4-15b-reduced", family="dense", num_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=2, d_head=16, d_ff=256,
+        vocab_size=512, ffn="sq_relu", attn_shard="heads")

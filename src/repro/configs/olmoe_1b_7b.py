@@ -1,0 +1,19 @@
+"""olmoe-1b-7b [moe]: 16L d_model=2048 16H (GQA kv=16) d_ff=1024 (per
+expert) vocab=50304, 64 experts top-8. [arXiv:2409.02060; hf]"""
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="olmoe-1b-7b", family="moe", num_layers=16, d_model=2048,
+        n_heads=16, n_kv_heads=16, d_head=128, d_ff=1024, vocab_size=50304,
+        ffn="swiglu", attn_shard="heads", n_experts=64, top_k=8,
+        capacity_factor=1.25)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="olmoe-1b-7b-reduced", family="moe", num_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, d_head=16, d_ff=32, vocab_size=512,
+        ffn="swiglu", attn_shard="heads", n_experts=8, top_k=2,
+        capacity_factor=8.0)   # drop-free at smoke scale

@@ -1,0 +1,18 @@
+"""qwen3-8b [dense]: 36L d_model=4096 32H (GQA kv=8) d_ff=12288
+vocab=151936 — per-head qk-RMSNorm, GQA. [hf:Qwen/Qwen3-8B; hf]"""
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-8b", family="dense", num_layers=36, d_model=4096,
+        n_heads=32, n_kv_heads=8, d_head=128, d_ff=12288, vocab_size=151936,
+        ffn="swiglu", qk_norm=True, attn_shard="heads",
+        rope_theta=1_000_000.0)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-8b-reduced", family="dense", num_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_head=16, d_ff=128, vocab_size=512,
+        ffn="swiglu", qk_norm=True, attn_shard="heads")

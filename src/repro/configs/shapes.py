@@ -1,0 +1,89 @@
+"""The four assigned input-shape suites and ``input_specs`` builders.
+
+  train_4k     seq=4,096   global_batch=256   (training)        → train_step
+  prefill_32k  seq=32,768  global_batch=32    (inference)       → prefill_step
+  decode_32k   seq=32,768  global_batch=128   (one new token)   → decode_step
+  long_500k    seq=524,288 global_batch=1     (one new token)   → decode_step
+               SSM/hybrid archs only (sub-quadratic requirement)
+
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable, no
+allocation) for everything a step function consumes except params/cache,
+which come from Model.abstract_params()/abstract_cache().
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.common import ArchConfig, ShapeConfig, dp_axes
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    """Is this (arch, shape) cell runnable? Returns (ok, reason_if_not)."""
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: long_500k requires "
+                       "sub-quadratic sequence handling (per assignment)")
+    return True, ""
+
+
+def _sds(shape, dtype, mesh: Mesh | None, spec: P):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh | None = None,
+                parallelism: str = "tp") -> dict:
+    """Model inputs for one step of the given kind."""
+    dp = dp_axes(mesh)
+    if parallelism == "fsdp" and mesh is not None:
+        dp = dp + ("model",)
+    dp = dp or None
+    gb, s = shape.global_batch, shape.seq_len
+    dp_total = 1
+    if mesh is not None and dp:
+        for a in dp:
+            dp_total *= mesh.shape[a]
+    bspec = dp if (mesh is not None and gb % dp_total == 0 and gb >= dp_total) else None
+
+    out: dict = {}
+    if shape.kind == "train":
+        out["tokens"] = _sds((gb, s + 1), jnp.int32, mesh, P(bspec, None))
+    elif shape.kind == "prefill":
+        out["tokens"] = _sds((gb, s), jnp.int32, mesh, P(bspec, None))
+    else:  # decode: one new token; the cache of seq_len comes separately
+        out["tokens"] = _sds((gb, 1), jnp.int32, mesh, P(bspec, None))
+
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["image_embeds"] = _sds((gb, cfg.img_tokens, cfg.img_embed_dim),
+                                   jnp.bfloat16, mesh, P(bspec, None, None))
+    if cfg.family == "encdec" and shape.kind != "decode":
+        enc_seq_spec = "model" if parallelism == "tp" else None
+        out["enc_frames"] = _sds((gb, cfg.enc_seq, cfg.d_model),
+                                 jnp.bfloat16, mesh,
+                                 P(bspec, enc_seq_spec, None))
+    return out
+
+
+def concrete_inputs(cfg: ArchConfig, kind: str, batch: int, seq: int, rng):
+    """Small concrete batch for smoke tests (single device)."""
+    ks = jax.random.split(rng, 3)
+    ntok = seq + 1 if kind == "train" else seq
+    out = {"tokens": jax.random.randint(ks[0], (batch, ntok), 0,
+                                        cfg.vocab_size, jnp.int32)}
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.random.normal(
+            ks[1], (batch, cfg.img_tokens, cfg.img_embed_dim), jnp.bfloat16)
+    if cfg.family == "encdec":
+        out["enc_frames"] = jax.random.normal(
+            ks[2], (batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return out

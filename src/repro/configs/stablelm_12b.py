@@ -1,0 +1,17 @@
+"""stablelm-12b [dense]: 40L d_model=5120 32H (GQA kv=8) d_ff=13824
+vocab=100352. [hf:stabilityai/stablelm-2-1_6b; hf]"""
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="stablelm-12b", family="dense", num_layers=40, d_model=5120,
+        n_heads=32, n_kv_heads=8, d_head=160, d_ff=13824, vocab_size=100352,
+        ffn="swiglu", attn_shard="heads")
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="stablelm-12b-reduced", family="dense", num_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_head=16, d_ff=128, vocab_size=512,
+        ffn="swiglu", attn_shard="heads")

@@ -1,0 +1,21 @@
+"""whisper-large-v3 [audio]: 32L d_model=1280 20H d_ff=5120 vocab=51866 —
+encoder-decoder; conv frontend is a STUB (input_specs supplies precomputed
+frame embeddings, 1500 frames padded to 1536 for 16-way sequence sharding).
+[arXiv:2212.04356] Adaptations: rope replaces learned positions; no biases;
+RMSNorm replaces LayerNorm (see DESIGN.md)."""
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-large-v3", family="encdec", num_layers=32, d_model=1280,
+        n_heads=20, n_kv_heads=20, d_head=64, d_ff=5120, vocab_size=51968,  # 51866 padded to /16 vocab shards
+        ffn="gelu", attn_shard="sequence", enc_layers=32, enc_seq=1536)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-large-v3-reduced", family="encdec", num_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=4, d_head=16, d_ff=128,
+        vocab_size=512, ffn="gelu", attn_shard="sequence", enc_layers=2,
+        enc_seq=16)

@@ -1,0 +1,38 @@
+"""repro.core — the paper's contribution: a scalable, robust dataflow
+management framework for data-stream ingestion (Isah & Zulkernine, 2018),
+re-implemented as a JAX-cluster-native library.
+
+Layers (paper Fig. 1):
+  acquisition   — Source processors over replayable generators (sources.py)
+  extract/enrich/integrate — processors.py (dedup, filter, route, enrich, merge)
+  distribution  — PartitionedLog (durable pub-sub) + ConsumerGroup (delivery.py)
+cross-cutting: Connection backpressure, ProvenanceRepository lineage, metrics.
+"""
+from .connection import (BackpressureTimeout, Connection, RateThrottle,
+                         DEFAULT_OBJECT_THRESHOLD, DEFAULT_SIZE_THRESHOLD)
+from .delivery import (Consumer, ConsumerGroup, OffsetStore, StaleGeneration,
+                       range_assign)
+from .flow import FlowError, FlowGraph
+from .flowfile import FlowFile, make_flowfile
+from .log import CorruptRecord, LogRecord, PartitionedLog
+from .processor import Processor, Source, REL_DROP, REL_FAILURE, REL_SUCCESS
+from .processors import (BloomFilter, CollectSink, ContentFilter,
+                         DetectDuplicate, ExecuteScript, FileSink,
+                         LookupEnrich, MergeContent, PartitionRecords,
+                         PublishToLog, RouteOnAttribute, Throttle)
+from .provenance import ProvenanceEvent, ProvenanceRepository
+from .sources import (FirehoseSource, RssAggregatorSource, WebSocketSource,
+                      corpus_documents, synth_article)
+
+__all__ = [
+    "BackpressureTimeout", "BloomFilter", "CollectSink", "Connection",
+    "ConsumerGroup", "Consumer", "ContentFilter", "CorruptRecord",
+    "DEFAULT_OBJECT_THRESHOLD", "DEFAULT_SIZE_THRESHOLD", "DetectDuplicate",
+    "ExecuteScript", "FileSink", "FirehoseSource", "FlowError", "FlowFile",
+    "FlowGraph", "LogRecord", "LookupEnrich", "MergeContent", "OffsetStore",
+    "PartitionRecords", "PartitionedLog", "Processor", "ProvenanceEvent",
+    "ProvenanceRepository", "PublishToLog", "RateThrottle", "REL_DROP",
+    "REL_FAILURE", "REL_SUCCESS", "RouteOnAttribute", "RssAggregatorSource",
+    "Source", "StaleGeneration", "Throttle", "WebSocketSource",
+    "corpus_documents", "make_flowfile", "range_assign", "synth_article",
+]

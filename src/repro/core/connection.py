@@ -1,0 +1,197 @@
+"""Bounded connections with NiFi-style backpressure (paper §IV.C, Fig. 5).
+
+A Connection is the queue between two processors. Backpressure triggers when
+EITHER threshold is reached (NiFi defaults, kept here):
+
+  * object threshold  — max queued FlowFiles       (default 10,000)
+  * data-size threshold — max queued payload bytes (default 1 GB)
+
+When a connection is full the *upstream* component is no longer scheduled
+(``offer`` blocks or returns False), exactly like NiFi stops scheduling the
+source processor. Queued data is never dropped — when the downstream recovers
+(paper Fig. 5: Kafka outage) the queue drains and the producers resume.
+
+Optional prioritizers reorder delivery (paper §II: "prioritization of data
+sources"); a rate throttle implements the paper's rate-throttling example of
+backpressure.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import Callable, Optional
+
+from .flowfile import FlowFile
+
+DEFAULT_OBJECT_THRESHOLD = 10_000          # NiFi default (paper §IV.C)
+DEFAULT_SIZE_THRESHOLD = 1 << 30           # 1 GB  (paper §IV.C)
+
+
+class BackpressureTimeout(Exception):
+    """Raised when a blocking offer exceeded its deadline."""
+
+
+class Connection:
+    """Thread-safe bounded FlowFile queue with dual backpressure thresholds."""
+
+    def __init__(self, name: str,
+                 object_threshold: int = DEFAULT_OBJECT_THRESHOLD,
+                 size_threshold: int = DEFAULT_SIZE_THRESHOLD,
+                 prioritizer: Optional[Callable[[FlowFile], float]] = None) -> None:
+        if object_threshold <= 0 or size_threshold <= 0:
+            raise ValueError("backpressure thresholds must be positive")
+        self.name = name
+        self.object_threshold = object_threshold
+        self.size_threshold = size_threshold
+        self._prioritizer = prioritizer
+        self._heap: list[tuple[float, int, FlowFile]] = []
+        self._fifo_counter = itertools.count()
+        self._bytes = 0
+        self._lock = threading.Lock()
+        self._not_full = threading.Condition(self._lock)
+        self._not_empty = threading.Condition(self._lock)
+        # stats (paper: status-history view)
+        self.total_in = 0
+        self.total_out = 0
+        self.backpressure_engagements = 0
+        self._hwm_objects = 0
+
+    # -- state ---------------------------------------------------------------
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._heap)
+
+    @property
+    def queued_bytes(self) -> int:
+        with self._lock:
+            return self._bytes
+
+    @property
+    def high_water_mark(self) -> int:
+        with self._lock:
+            return self._hwm_objects
+
+    def _full_locked(self) -> bool:
+        return (len(self._heap) >= self.object_threshold
+                or self._bytes >= self.size_threshold)
+
+    def is_full(self) -> bool:
+        with self._lock:
+            return self._full_locked()
+
+    # -- producer side -------------------------------------------------------
+    def offer(self, ff: FlowFile, block: bool = True,
+              timeout: float | None = None) -> bool:
+        """Enqueue. With ``block`` the caller (upstream processor) is stalled
+        while backpressure is engaged — this is the NiFi 'source no longer
+        scheduled' behaviour. Non-blocking offer returns False when full."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._not_full:
+            engaged = False
+            while self._full_locked():
+                if not engaged:
+                    self.backpressure_engagements += 1
+                    engaged = True
+                if not block:
+                    return False
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise BackpressureTimeout(
+                            f"connection {self.name!r} full "
+                            f"({len(self._heap)} objects / {self._bytes} B)")
+                self._not_full.wait(remaining)
+            prio = self._prioritizer(ff) if self._prioritizer else 0.0
+            heapq.heappush(self._heap, (prio, next(self._fifo_counter), ff))
+            self._bytes += ff.size
+            self.total_in += 1
+            self._hwm_objects = max(self._hwm_objects, len(self._heap))
+            self._not_empty.notify()
+            return True
+
+    # -- consumer side -------------------------------------------------------
+    def poll(self, block: bool = True, timeout: float | None = None
+             ) -> FlowFile | None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._not_empty:
+            while not self._heap:
+                if not block:
+                    return None
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return None
+                self._not_empty.wait(remaining)
+            _, _, ff = heapq.heappop(self._heap)
+            self._bytes -= ff.size
+            self.total_out += 1
+            self._not_full.notify()
+            return ff
+
+    def poll_batch(self, max_items: int, timeout: float = 0.0) -> list[FlowFile]:
+        """Drain up to ``max_items`` (at least one if any arrive within
+        ``timeout``). Batch drains amortize lock traffic on hot paths."""
+        out: list[FlowFile] = []
+        first = self.poll(block=timeout > 0, timeout=timeout or None)
+        if first is None:
+            return out
+        out.append(first)
+        with self._not_empty:
+            while self._heap and len(out) < max_items:
+                _, _, ff = heapq.heappop(self._heap)
+                self._bytes -= ff.size
+                self.total_out += 1
+                out.append(ff)
+            if out:
+                self._not_full.notify_all()
+        return out
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "name": self.name,
+                "queued_objects": len(self._heap),
+                "queued_bytes": self._bytes,
+                "object_threshold": self.object_threshold,
+                "size_threshold": self.size_threshold,
+                "backpressure": self._full_locked(),
+                "backpressure_engagements": self.backpressure_engagements,
+                "high_water_mark": self._hwm_objects,
+                "total_in": self.total_in,
+                "total_out": self.total_out,
+            }
+
+
+class RateThrottle:
+    """Token-bucket rate limiter — the paper's 'rate throttling' backpressure
+    example (§II.E). Thread-safe; ``acquire`` blocks until a permit exists."""
+
+    def __init__(self, rate_per_sec: float, burst: int | None = None) -> None:
+        if rate_per_sec <= 0:
+            raise ValueError("rate must be positive")
+        self.rate = float(rate_per_sec)
+        self.capacity = float(burst if burst is not None else max(1, int(rate_per_sec)))
+        self._tokens = self.capacity
+        self._last = time.monotonic()
+        self._lock = threading.Lock()
+
+    def try_acquire(self, n: int = 1) -> bool:
+        with self._lock:
+            now = time.monotonic()
+            self._tokens = min(self.capacity,
+                               self._tokens + (now - self._last) * self.rate)
+            self._last = now
+            if self._tokens >= n:
+                self._tokens -= n
+                return True
+            return False
+
+    def acquire(self, n: int = 1) -> None:
+        while not self.try_acquire(n):
+            with self._lock:
+                deficit = max(0.0, n - self._tokens)
+            time.sleep(min(0.1, deficit / self.rate))

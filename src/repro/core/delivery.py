@@ -1,0 +1,199 @@
+"""Consumer groups, offsets, and delivery guarantees (paper §II.B, §III.C).
+
+Consumers attach to topics through a ``ConsumerGroup``: partitions are
+range-assigned across members and *rebalanced* when members join or leave —
+the paper's elasticity requirement ("add and remove consumers at any time
+without changing the data ingestion pipeline").
+
+Delivery guarantees:
+
+  * at-least-once — poll → process → ``commit()``; a crash between process
+    and commit re-delivers from the last committed offset.
+  * exactly-once  — the consumer's position participates in the *consumer's
+    own* atomic state commit: ``positions()``/``restore()`` let the training
+    checkpoint embed stream offsets, so optimizer state and stream position
+    move in lock-step (offsets-in-checkpoint).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from pathlib import Path
+from typing import Iterable
+
+from .log import LogRecord, PartitionedLog
+
+
+class OffsetStore:
+    """Durable committed offsets: {group: {topic: {partition: offset}}}.
+    Writes are atomic (tmp + rename) so a crash never corrupts the store."""
+
+    def __init__(self, path: str | Path) -> None:
+        self.path = Path(path)
+        self._lock = threading.Lock()
+        self._data: dict[str, dict[str, dict[str, int]]] = {}
+        if self.path.exists():
+            try:
+                self._data = json.loads(self.path.read_text())
+            except (ValueError, OSError):
+                # torn write of the tmp rename target is impossible; a torn
+                # *initial* file means nothing was ever committed
+                self._data = {}
+
+    def get(self, group: str, topic: str, partition: int) -> int:
+        with self._lock:
+            return int(self._data.get(group, {}).get(topic, {})
+                       .get(str(partition), 0))
+
+    def commit(self, group: str, topic: str,
+               offsets: dict[int, int]) -> None:
+        with self._lock:
+            g = self._data.setdefault(group, {}).setdefault(topic, {})
+            for p, off in offsets.items():
+                g[str(p)] = int(off)
+            tmp = self.path.with_suffix(".tmp")
+            tmp.write_text(json.dumps(self._data))
+            os.replace(tmp, self.path)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return json.loads(json.dumps(self._data))
+
+
+def range_assign(partitions: int, members: list[str]) -> dict[str, list[int]]:
+    """Deterministic range assignment (Kafka's range assignor)."""
+    members = sorted(members)
+    if not members:
+        return {}
+    per = partitions // len(members)
+    extra = partitions % len(members)
+    out: dict[str, list[int]] = {}
+    start = 0
+    for i, m in enumerate(members):
+        n = per + (1 if i < extra else 0)
+        out[m] = list(range(start, start + n))
+        start += n
+    return out
+
+
+class Consumer:
+    """A single group member. Not thread-safe across poll/commit (one owner
+    thread per consumer, like Kafka's threading contract)."""
+
+    def __init__(self, group: "ConsumerGroup", member_id: str) -> None:
+        self._group = group
+        self.member_id = member_id
+        self.assignment: list[int] = []
+        self._positions: dict[int, int] = {}
+        self.generation = -1
+
+    # -- group protocol -------------------------------------------------------
+    def _on_assign(self, partitions: list[int], generation: int) -> None:
+        self.assignment = list(partitions)
+        self.generation = generation
+        store, log = self._group.offsets, self._group.log
+        self._positions = {
+            p: max(store.get(self._group.group_id, self._group.topic, p),
+                   log.begin_offset(self._group.topic, p))
+            for p in partitions}
+
+    # -- data path --------------------------------------------------------------
+    def poll(self, max_records: int = 256) -> list[LogRecord]:
+        """Deterministic in (positions, log state): two sweeps over the
+        assigned partitions in order — first a fair per-partition share, then
+        fill remaining budget. Determinism makes exactly-once replay after
+        ``restore()`` byte-identical (the training loader relies on this)."""
+        self._group.check_generation(self)
+        out: list[LogRecord] = []
+        n = len(self.assignment)
+        if n == 0:
+            return out
+        share = max(1, max_records // n)
+        for cap in (share, max_records):
+            for p in sorted(self.assignment):
+                budget = min(cap, max_records - len(out))
+                if budget <= 0:
+                    break
+                recs = self._group.log.read(self._group.topic, p,
+                                            self._positions[p], budget)
+                if recs:
+                    self._positions[p] = recs[-1].offset + 1
+                    out.extend(recs)
+        return out
+
+    def commit(self) -> None:
+        """At-least-once boundary: persist current positions."""
+        self._group.offsets.commit(self._group.group_id, self._group.topic,
+                                   dict(self._positions))
+
+    # -- exactly-once hooks (offsets-in-checkpoint) ------------------------------
+    def positions(self) -> dict[int, int]:
+        return dict(self._positions)
+
+    def restore(self, positions: dict[int, int]) -> None:
+        for p, off in positions.items():
+            p = int(p)
+            if p in self._positions:
+                self._positions[p] = int(off)
+
+    def seek(self, partition: int, offset: int) -> None:
+        self._positions[partition] = offset
+
+    def lag(self) -> int:
+        return sum(self._group.log.end_offset(self._group.topic, p)
+                   - self._positions.get(p, 0) for p in self.assignment)
+
+
+class StaleGeneration(Exception):
+    """Raised when a consumer polls after a rebalance it hasn't joined."""
+
+
+class ConsumerGroup:
+    """Tracks membership and rebalances partition assignment on change."""
+
+    def __init__(self, log: PartitionedLog, topic: str, group_id: str,
+                 offset_store: OffsetStore | None = None) -> None:
+        self.log = log
+        self.topic = topic
+        self.group_id = group_id
+        self.offsets = offset_store or OffsetStore(
+            Path(log.root) / f".offsets-{group_id}.json")
+        self._members: dict[str, Consumer] = {}
+        self._generation = 0
+        self._lock = threading.Lock()
+
+    def add_member(self, member_id: str) -> Consumer:
+        with self._lock:
+            if member_id in self._members:
+                raise ValueError(f"member {member_id!r} already in group")
+            c = Consumer(self, member_id)
+            self._members[member_id] = c
+            self._rebalance()
+            return c
+
+    def remove_member(self, member_id: str) -> None:
+        with self._lock:
+            self._members.pop(member_id, None)
+            self._rebalance()
+
+    def _rebalance(self) -> None:
+        self._generation += 1
+        assignment = range_assign(self.log.num_partitions(self.topic),
+                                  list(self._members))
+        for mid, consumer in self._members.items():
+            consumer._on_assign(assignment.get(mid, []), self._generation)
+
+    def check_generation(self, consumer: Consumer) -> None:
+        if consumer.generation != self._generation:
+            raise StaleGeneration(
+                f"{consumer.member_id}: generation {consumer.generation} "
+                f"!= group {self._generation}")
+
+    def members(self) -> list[str]:
+        with self._lock:
+            return sorted(self._members)
+
+    def total_lag(self) -> int:
+        with self._lock:
+            return sum(c.lag() for c in self._members.values())

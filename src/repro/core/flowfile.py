@@ -1,0 +1,115 @@
+"""FlowFile: the unit of data moving through the ingestion fabric.
+
+Mirrors NiFi's FlowFile (paper §III.A): an immutable content payload plus a
+mutable attribute map, identified by a UUID, carrying lineage information so
+the provenance repository can reconstruct the full path of every record
+(paper Fig. 4).
+"""
+from __future__ import annotations
+
+import json
+import time
+import uuid
+import zlib
+from dataclasses import dataclass, field, replace
+from typing import Any, Mapping
+
+
+def _new_uuid() -> str:
+    return uuid.uuid4().hex
+
+
+@dataclass(frozen=True, slots=True)
+class FlowFile:
+    """An immutable record in the dataflow.
+
+    Attributes
+    ----------
+    content:   raw payload bytes (zero-copy passed between processors).
+    attributes:string->string metadata (source, timestamps, routing keys...).
+    uuid:      unique id of this FlowFile *version* (a transform creates a new
+               version with a new uuid, linked by ``parent_uuid``).
+    lineage_id:stable id of the logical record across transforms — the id the
+               provenance UI groups on.
+    parent_uuid: uuid of the FlowFile this one was derived from (None at
+               CREATE).
+    entry_ts:  wall-clock seconds when the record entered the fabric.
+    """
+
+    content: bytes
+    attributes: Mapping[str, str] = field(default_factory=dict)
+    uuid: str = field(default_factory=_new_uuid)
+    lineage_id: str = ""
+    parent_uuid: str | None = None
+    entry_ts: float = field(default_factory=time.time)
+
+    def __post_init__(self) -> None:
+        if not self.lineage_id:
+            object.__setattr__(self, "lineage_id", self.uuid)
+
+    # -- size accounting (used by Connection's data-size threshold) ---------
+    @property
+    def size(self) -> int:
+        return len(self.content)
+
+    # -- derivation ----------------------------------------------------------
+    def derive(self, *, content: bytes | None = None,
+               attributes: Mapping[str, str] | None = None) -> "FlowFile":
+        """Create a child version (TRANSFORM provenance edge)."""
+        new_attrs = dict(self.attributes)
+        if attributes:
+            new_attrs.update(attributes)
+        return FlowFile(
+            content=self.content if content is None else content,
+            attributes=new_attrs,
+            uuid=_new_uuid(),
+            lineage_id=self.lineage_id,
+            parent_uuid=self.uuid,
+            entry_ts=self.entry_ts,
+        )
+
+    def with_attributes(self, **attrs: str) -> "FlowFile":
+        return self.derive(attributes={k: str(v) for k, v in attrs.items()})
+
+    # -- content helpers -----------------------------------------------------
+    def text(self, encoding: str = "utf-8") -> str:
+        return self.content.decode(encoding, errors="replace")
+
+    def json(self) -> Any:
+        return json.loads(self.content)
+
+    def content_hash(self) -> int:
+        """Cheap stable content fingerprint (crc32) for dedup fast-path."""
+        return zlib.crc32(self.content)
+
+    # -- (de)serialization for the durable log ------------------------------
+    def to_record(self) -> tuple[bytes, bytes]:
+        """(key, value) for PartitionedLog.append. Attributes+ids go in the
+        key header; content is the value (kept zero-copy)."""
+        header = json.dumps({
+            "uuid": self.uuid,
+            "lineage_id": self.lineage_id,
+            "parent_uuid": self.parent_uuid,
+            "entry_ts": self.entry_ts,
+            "attributes": dict(self.attributes),
+        }, separators=(",", ":")).encode()
+        return header, self.content
+
+    @staticmethod
+    def from_record(key: bytes, value: bytes) -> "FlowFile":
+        meta = json.loads(key)
+        return FlowFile(
+            content=value,
+            attributes=meta.get("attributes", {}),
+            uuid=meta.get("uuid", _new_uuid()),
+            lineage_id=meta.get("lineage_id", ""),
+            parent_uuid=meta.get("parent_uuid"),
+            entry_ts=meta.get("entry_ts", 0.0),
+        )
+
+
+def make_flowfile(content: bytes | str, **attributes: str) -> FlowFile:
+    if isinstance(content, str):
+        content = content.encode()
+    return FlowFile(content=content,
+                    attributes={k: str(v) for k, v in attributes.items()})

@@ -1,0 +1,328 @@
+"""Durable partitioned pub-sub log — the Kafka analogue (paper §III.C).
+
+The distribution layer of the framework: producers append FlowFile records to
+topic partitions; any number of consumers read by offset, so consumers can be
+added or removed "at any time without changing the data ingestion pipeline"
+(paper's key NiFi→Kafka property). Records are durable, ordered per
+partition, and replayable.
+
+Storage layout::
+
+    root/<topic>/<partition>/<base_offset 20 digits>.seg
+
+Segment record wire format (little-endian):
+
+    crc32(u32) | key_len(u32) | val_len(u32) | key | value
+
+where crc32 covers ``key_len|val_len|key|value``. On open, the tail segment is
+scanned and any torn/corrupt suffix (partial write at crash) is truncated —
+the crash-recovery property the paper requires of the FlowFile repository.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import threading
+import zlib
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterator
+
+_HEADER = struct.Struct("<III")  # crc, key_len, val_len
+DEFAULT_SEGMENT_BYTES = 8 << 20  # 8 MiB segments
+
+
+class CorruptRecord(Exception):
+    pass
+
+
+@dataclass(frozen=True, slots=True)
+class LogRecord:
+    topic: str
+    partition: int
+    offset: int
+    key: bytes
+    value: bytes
+
+    @property
+    def size(self) -> int:
+        return len(self.key) + len(self.value)
+
+
+def _crc(key: bytes, value: bytes) -> int:
+    c = zlib.crc32(struct.pack("<II", len(key), len(value)))
+    c = zlib.crc32(key, c)
+    return zlib.crc32(value, c)
+
+
+class _Segment:
+    """One append-only segment file with an in-memory offset index."""
+
+    def __init__(self, path: Path, base_offset: int) -> None:
+        self.path = path
+        self.base_offset = base_offset
+        self.positions: list[int] = []     # file pos of record i
+        self.next_pos = 0
+        self._recover()
+        self._fh = open(path, "ab")
+
+    # Scan existing records, truncating a torn tail.
+    def _recover(self) -> None:
+        if not self.path.exists():
+            self.path.touch()
+            return
+        size = self.path.stat().st_size
+        good_end = 0
+        with open(self.path, "rb") as f:
+            pos = 0
+            while pos + _HEADER.size <= size:
+                f.seek(pos)
+                crc, klen, vlen = _HEADER.unpack(f.read(_HEADER.size))
+                end = pos + _HEADER.size + klen + vlen
+                if end > size:
+                    break                       # torn write
+                key = f.read(klen)
+                value = f.read(vlen)
+                if _crc(key, value) != crc:
+                    break                       # corrupt tail
+                self.positions.append(pos)
+                good_end = end
+                pos = end
+        if good_end != size:
+            with open(self.path, "r+b") as f:
+                f.truncate(good_end)
+        self.next_pos = good_end
+
+    @property
+    def count(self) -> int:
+        return len(self.positions)
+
+    @property
+    def bytes(self) -> int:
+        return self.next_pos
+
+    def append(self, key: bytes, value: bytes) -> int:
+        rec = _HEADER.pack(_crc(key, value), len(key), len(value)) + key + value
+        self.positions.append(self.next_pos)
+        self._fh.write(rec)
+        self.next_pos += len(rec)
+        return self.base_offset + len(self.positions) - 1
+
+    def flush(self, fsync: bool = False) -> None:
+        self._fh.flush()
+        if fsync:
+            os.fsync(self._fh.fileno())
+
+    def read(self, rel_index: int) -> tuple[bytes, bytes]:
+        pos = self.positions[rel_index]
+        with open(self.path, "rb") as f:
+            f.seek(pos)
+            crc, klen, vlen = _HEADER.unpack(f.read(_HEADER.size))
+            key = f.read(klen)
+            value = f.read(vlen)
+        if _crc(key, value) != crc:
+            raise CorruptRecord(f"{self.path}@{pos}")
+        return key, value
+
+    def read_range(self, rel_start: int, max_records: int
+                   ) -> list[tuple[bytes, bytes]]:
+        """Batched sequential read — one open/seek for the whole range."""
+        out: list[tuple[bytes, bytes]] = []
+        if rel_start >= len(self.positions):
+            return out
+        with open(self.path, "rb") as f:
+            f.seek(self.positions[rel_start])
+            for _ in range(min(max_records, len(self.positions) - rel_start)):
+                crc, klen, vlen = _HEADER.unpack(f.read(_HEADER.size))
+                key = f.read(klen)
+                value = f.read(vlen)
+                if _crc(key, value) != crc:
+                    raise CorruptRecord(str(self.path))
+                out.append((key, value))
+        return out
+
+    def close(self) -> None:
+        self._fh.close()
+
+
+class _Partition:
+    def __init__(self, path: Path, segment_bytes: int) -> None:
+        self.path = path
+        self.segment_bytes = segment_bytes
+        self.lock = threading.Lock()
+        path.mkdir(parents=True, exist_ok=True)
+        bases = sorted(int(p.stem) for p in path.glob("*.seg"))
+        self.segments: list[_Segment] = []
+        expected_base = 0
+        for b in bases:
+            seg = _Segment(path / f"{b:020d}.seg", b)
+            # (gap would mean a deleted-by-retention prefix; allowed)
+            self.segments.append(seg)
+            expected_base = b + seg.count
+        if not self.segments:
+            self.segments.append(_Segment(path / f"{0:020d}.seg", 0))
+
+    @property
+    def active(self) -> _Segment:
+        return self.segments[-1]
+
+    @property
+    def begin_offset(self) -> int:
+        return self.segments[0].base_offset
+
+    @property
+    def end_offset(self) -> int:
+        a = self.active
+        return a.base_offset + a.count
+
+    def append(self, key: bytes, value: bytes) -> int:
+        with self.lock:
+            if self.active.bytes >= self.segment_bytes:
+                self.active.flush()
+                base = self.end_offset
+                self.segments.append(
+                    _Segment(self.path / f"{base:020d}.seg", base))
+            return self.active.append(key, value)
+
+    def flush(self, fsync: bool = False) -> None:
+        with self.lock:
+            self.active.flush(fsync)
+
+    def read(self, offset: int, max_records: int) -> list[tuple[int, bytes, bytes]]:
+        with self.lock:
+            segs = list(self.segments)
+        out: list[tuple[int, bytes, bytes]] = []
+        for seg in segs:
+            if not out and offset >= seg.base_offset + seg.count:
+                continue
+            rel = max(0, offset - seg.base_offset)
+            for key, value in seg.read_range(rel, max_records - len(out)):
+                out.append((seg.base_offset + rel, key, value))
+                rel += 1
+            if len(out) >= max_records:
+                break
+        return out
+
+    def enforce_retention(self, retention_bytes: int) -> int:
+        """Drop oldest whole segments beyond the size budget. Returns the
+        number of segments deleted (paper §I: 'delete the portions that are
+        not useful')."""
+        deleted = 0
+        with self.lock:
+            total = sum(s.bytes for s in self.segments)
+            while len(self.segments) > 1 and total > retention_bytes:
+                victim = self.segments.pop(0)
+                total -= victim.bytes
+                victim.close()
+                victim.path.unlink(missing_ok=True)
+                deleted += 1
+        return deleted
+
+    def close(self) -> None:
+        with self.lock:
+            for s in self.segments:
+                s.close()
+
+
+class PartitionedLog:
+    """Multi-topic durable log.
+
+    Thread-safe. ``append`` is at-least-once from the producer's view (the
+    producer retries on timeout; dedup upstream or idempotent consumers
+    downstream handle repeats — paper §III.B.1).
+    """
+
+    def __init__(self, root: str | Path,
+                 segment_bytes: int = DEFAULT_SEGMENT_BYTES,
+                 fsync_every: int = 0) -> None:
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.segment_bytes = segment_bytes
+        self.fsync_every = fsync_every
+        self._topics: dict[str, list[_Partition]] = {}
+        self._lock = threading.Lock()
+        self._appended_since_sync = 0
+        # re-open any topics already on disk (crash recovery)
+        for tdir in sorted(self.root.iterdir()) if self.root.exists() else []:
+            if tdir.is_dir():
+                parts = sorted(int(p.name) for p in tdir.iterdir() if p.is_dir())
+                if parts:
+                    self._topics[tdir.name] = [
+                        _Partition(tdir / str(i), segment_bytes)
+                        for i in range(max(parts) + 1)]
+
+    # -- topic admin ----------------------------------------------------------
+    def create_topic(self, topic: str, partitions: int = 1) -> None:
+        with self._lock:
+            if topic in self._topics:
+                if len(self._topics[topic]) != partitions:
+                    raise ValueError(
+                        f"topic {topic!r} exists with "
+                        f"{len(self._topics[topic])} partitions")
+                return
+            self._topics[topic] = [
+                _Partition(self.root / topic / str(i), self.segment_bytes)
+                for i in range(partitions)]
+
+    def topics(self) -> list[str]:
+        with self._lock:
+            return sorted(self._topics)
+
+    def num_partitions(self, topic: str) -> int:
+        return len(self._part_list(topic))
+
+    def _part_list(self, topic: str) -> list[_Partition]:
+        with self._lock:
+            if topic not in self._topics:
+                raise KeyError(f"unknown topic {topic!r}")
+            return self._topics[topic]
+
+    # -- producer --------------------------------------------------------------
+    def append(self, topic: str, key: bytes, value: bytes,
+               partition: int | None = None) -> tuple[int, int]:
+        parts = self._part_list(topic)
+        if partition is None:
+            partition = zlib.crc32(key) % len(parts) if key else 0
+        off = parts[partition].append(key, value)
+        if self.fsync_every:
+            self._appended_since_sync += 1
+            if self._appended_since_sync >= self.fsync_every:
+                parts[partition].flush(fsync=True)
+                self._appended_since_sync = 0
+        return partition, off
+
+    def flush(self, fsync: bool = True) -> None:
+        with self._lock:
+            topics = list(self._topics.values())
+        for parts in topics:
+            for p in parts:
+                p.flush(fsync)
+
+    # -- consumer --------------------------------------------------------------
+    def read(self, topic: str, partition: int, offset: int,
+             max_records: int = 512) -> list[LogRecord]:
+        # make appended-but-unflushed records visible to readers
+        part = self._part_list(topic)[partition]
+        part.flush(fsync=False)
+        return [LogRecord(topic, partition, off, k, v)
+                for off, k, v in part.read(offset, max_records)]
+
+    def begin_offset(self, topic: str, partition: int) -> int:
+        return self._part_list(topic)[partition].begin_offset
+
+    def end_offset(self, topic: str, partition: int) -> int:
+        return self._part_list(topic)[partition].end_offset
+
+    def end_offsets(self, topic: str) -> list[int]:
+        return [p.end_offset for p in self._part_list(topic)]
+
+    def enforce_retention(self, topic: str, retention_bytes: int) -> int:
+        return sum(p.enforce_retention(retention_bytes)
+                   for p in self._part_list(topic))
+
+    def close(self) -> None:
+        with self._lock:
+            for parts in self._topics.values():
+                for p in parts:
+                    p.close()
+            self._topics.clear()

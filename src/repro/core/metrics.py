@@ -1,0 +1,68 @@
+"""Component statistics — NiFi's status-history view (paper §IV.C:
+"number of bytes read, written, in, and out in 5 minutes")."""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class ComponentStats:
+    name: str
+    in_records: int = 0
+    in_bytes: int = 0
+    out_records: int = 0
+    out_bytes: int = 0
+    dropped: int = 0
+
+    def snapshot(self) -> dict:
+        return {
+            "name": self.name,
+            "in_records": self.in_records, "in_bytes": self.in_bytes,
+            "out_records": self.out_records, "out_bytes": self.out_bytes,
+            "dropped": self.dropped,
+        }
+
+
+class WindowedCounter:
+    """Rolling-window rate counter (default 5-minute window, 1 s buckets)."""
+
+    def __init__(self, window_sec: float = 300.0, bucket_sec: float = 1.0) -> None:
+        self.window_sec = window_sec
+        self.bucket_sec = bucket_sec
+        self._buckets: deque[tuple[int, float]] = deque()
+        self._lock = threading.Lock()
+
+    def add(self, n: float = 1.0) -> None:
+        now = time.monotonic()
+        bucket = int(now / self.bucket_sec)
+        with self._lock:
+            if self._buckets and self._buckets[-1][0] == bucket:
+                b, v = self._buckets[-1]
+                self._buckets[-1] = (b, v + n)
+            else:
+                self._buckets.append((bucket, n))
+            self._evict(now)
+
+    def _evict(self, now: float) -> None:
+        horizon = int((now - self.window_sec) / self.bucket_sec)
+        while self._buckets and self._buckets[0][0] < horizon:
+            self._buckets.popleft()
+
+    def total(self) -> float:
+        with self._lock:
+            self._evict(time.monotonic())
+            return sum(v for _, v in self._buckets)
+
+    def rate_per_sec(self) -> float:
+        with self._lock:
+            now = time.monotonic()
+            self._evict(now)
+            if not self._buckets:
+                return 0.0
+            span = max(self.bucket_sec,
+                       (self._buckets[-1][0] - self._buckets[0][0] + 1)
+                       * self.bucket_sec)
+            return sum(v for _, v in self._buckets) / span

@@ -1,0 +1,176 @@
+"""Processor model + threaded flow engine (NiFi analogue, paper §III.A).
+
+A ``Processor`` consumes FlowFiles from its single input connection and emits
+FlowFiles onto named *relationships* (e.g. ``unique``/``duplicate`` for
+DetectDuplicate). Relationships are wired to downstream connections by the
+``FlowGraph``. Sources are processors without an input that pull records from
+a (replayable) generator.
+
+Scheduling: each processor runs on its own thread; blocking ``offer`` on a
+full downstream connection stalls the thread, which in turn stops it from
+draining *its* input — NiFi's transitive backpressure, for free.
+
+Termination: a source finishes when its generator is exhausted; an interior
+processor finishes when every upstream is finished and its input is drained.
+``FlowGraph.run_to_completion`` joins the whole DAG.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from typing import Callable, Iterable, Iterator, Mapping
+
+from .connection import Connection
+from .flowfile import FlowFile
+from .metrics import ComponentStats
+from .provenance import ProvenanceRepository
+
+REL_SUCCESS = "success"
+REL_FAILURE = "failure"
+
+#: Relationship name whose FlowFiles are dropped (with DROP provenance).
+REL_DROP = "__drop__"
+
+
+class Processor:
+    """Base class. Subclasses implement ``process`` (record-at-a-time) or
+    override ``on_trigger`` (batch)."""
+
+    #: relationships this processor may emit on (used for wiring validation)
+    relationships: tuple[str, ...] = (REL_SUCCESS,)
+    #: max records pulled per trigger (batching amortizes queue locks)
+    batch_size: int = 256
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.stats = ComponentStats(name)
+
+    # -- to be implemented by subclasses -------------------------------------
+    def process(self, ff: FlowFile) -> Iterable[tuple[str, FlowFile]]:
+        raise NotImplementedError
+
+    def on_trigger(self, batch: list[FlowFile]
+                   ) -> Iterable[tuple[str, FlowFile]]:
+        for ff in batch:
+            yield from self.process(ff)
+
+    # -- lifecycle hooks -------------------------------------------------------
+    def on_start(self) -> None: ...
+    def on_stop(self) -> None:
+        """Called at shutdown; may emit nothing. Batch processors flush here
+        via ``final_flush``."""
+
+    def final_flush(self) -> Iterable[tuple[str, FlowFile]]:
+        return ()
+
+
+class Source(Processor):
+    """A processor with no input; wraps a replayable record generator."""
+
+    def __init__(self, name: str,
+                 generator: Callable[[], Iterator[FlowFile]]) -> None:
+        super().__init__(name)
+        self._generator_fn = generator
+
+    def records(self) -> Iterator[FlowFile]:
+        return self._generator_fn()
+
+    def process(self, ff: FlowFile) -> Iterable[tuple[str, FlowFile]]:
+        yield REL_SUCCESS, ff
+
+
+class _Worker(threading.Thread):
+    def __init__(self, node: "FlowNode", graph: "FlowGraph") -> None:
+        super().__init__(name=f"flow-{node.processor.name}", daemon=True)
+        self.node = node
+        self.graph = graph
+        self.error: BaseException | None = None
+
+    def run(self) -> None:
+        try:
+            if isinstance(self.node.processor, Source):
+                self._run_source()
+            else:
+                self._run_interior()
+        except BaseException as e:         # surfaced by FlowGraph.join
+            self.error = e
+            self.graph._record_error(self.node.processor.name, e)
+        finally:
+            self.node.done.set()
+
+    # ------------------------------------------------------------------
+    def _emit(self, rel: str, ff: FlowFile) -> None:
+        node = self.node
+        proc = node.processor
+        if rel == REL_DROP:
+            self.graph.provenance.record("DROP", ff, proc.name)
+            proc.stats.dropped += 1
+            return
+        conns = node.outputs.get(rel)
+        if not conns:
+            # unwired relationship == auto-terminated (NiFi semantics)
+            self.graph.provenance.record("DROP", ff, proc.name,
+                                         details=f"auto-terminated:{rel}")
+            proc.stats.dropped += 1
+            return
+        self.graph.provenance.record("ROUTE", ff, proc.name, details=rel)
+        for conn in conns:
+            while not self.graph.stopping.is_set():
+                try:
+                    if conn.offer(ff, block=True, timeout=0.25):
+                        break
+                except Exception:
+                    raise
+            else:
+                return
+        proc.stats.out_records += 1
+        proc.stats.out_bytes += ff.size
+
+    def _run_source(self) -> None:
+        node = self.node
+        proc = node.processor
+        proc.on_start()
+        assert isinstance(proc, Source)
+        for ff in proc.records():
+            if self.graph.stopping.is_set():
+                break
+            self.graph.provenance.record("CREATE", ff, proc.name)
+            proc.stats.in_records += 1
+            proc.stats.in_bytes += ff.size
+            for rel, out in proc.on_trigger([ff]):
+                self._emit(rel, out)
+        for rel, out in proc.final_flush():
+            self._emit(rel, out)
+        proc.on_stop()
+
+    def _run_interior(self) -> None:
+        node = self.node
+        proc = node.processor
+        proc.on_start()
+        conn = node.input
+        assert conn is not None
+        while True:
+            batch = conn.poll_batch(proc.batch_size, timeout=0.05)
+            if not batch:
+                upstream_done = all(u.done.is_set() for u in node.upstreams)
+                if (upstream_done and len(conn) == 0) or self.graph.stopping.is_set():
+                    break
+                continue
+            for ff in batch:
+                proc.stats.in_records += 1
+                proc.stats.in_bytes += ff.size
+            for rel, out in proc.on_trigger(batch):
+                self._emit(rel, out)
+        for rel, out in proc.final_flush():
+            self._emit(rel, out)
+        proc.on_stop()
+
+
+class FlowNode:
+    def __init__(self, processor: Processor) -> None:
+        self.processor = processor
+        self.input: Connection | None = None
+        self.outputs: dict[str, list[Connection]] = {}
+        self.upstreams: list[FlowNode] = []
+        self.done = threading.Event()

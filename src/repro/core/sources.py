@@ -1,0 +1,131 @@
+"""Deterministic synthetic data sources reproducing the paper's case study
+(§IV.B): a Big-RSS-like aggregator, a Twitter-firehose-like stream and a raw
+WebSocket feed. All are seeded generators — fully replayable (the property
+the ingestion fabric's recovery story builds on) and fast enough to drive
+multi-100k-records/s benchmarks.
+
+Articles deliberately include the noise the paper filters: exact duplicates
+(retweets / syndicated copies), malformed payloads, and off-language items.
+"""
+from __future__ import annotations
+
+import json
+import random
+from typing import Iterator
+
+from .flowfile import FlowFile, make_flowfile
+
+_WORDS = (
+    "market stream data global news flash flood election satellite launch "
+    "storm rally protest economy vaccine energy grid transit health summit "
+    "quarter earnings merger strike wildfire quake rescue policy senate "
+    "court ruling trade port cargo drought harvest festival derby final "
+    "transfer record champion orbit probe lander relay fiber outage patch "
+    "breach audit ledger token chain index fund bond yield rate cut hike"
+).split()
+
+_SOURCES_RSS = ("reuters", "ap", "afp", "bbc", "cbc", "nhk", "dw", "abc")
+_LANGS = ("en", "en", "en", "fr", "de", "ja", "es")   # en-heavy mix
+
+
+def _sentence(rng: random.Random, n: int) -> str:
+    return " ".join(rng.choice(_WORDS) for _ in range(n))
+
+
+def synth_article(rng: random.Random, idx: int, source: str) -> dict:
+    return {
+        "id": f"{source}-{idx}",
+        "source": source,
+        "lang": rng.choice(_LANGS),
+        "title": _sentence(rng, 8),
+        "body": _sentence(rng, rng.randint(40, 160)),
+        "ts": 1534660000 + idx,          # paper's Fig.3 epoch (Aug 2018)
+    }
+
+
+class RssAggregatorSource:
+    """Big-RSS analogue. ``dup_rate`` injects syndicated duplicates,
+    ``junk_rate`` injects malformed JSON (erroneous items to filter)."""
+
+    def __init__(self, count: int, seed: int = 0, dup_rate: float = 0.08,
+                 junk_rate: float = 0.01, name: str = "big-rss") -> None:
+        self.count = count
+        self.seed = seed
+        self.dup_rate = dup_rate
+        self.junk_rate = junk_rate
+        self.name = name
+
+    def __call__(self) -> Iterator[FlowFile]:
+        rng = random.Random(self.seed)
+        recent: list[dict] = []
+        for i in range(self.count):
+            r = rng.random()
+            if r < self.junk_rate:
+                yield make_flowfile(b"\x00corrupt\xff" + bytes([i % 251]),
+                                    source=self.name, kind="junk")
+                continue
+            if recent and r < self.junk_rate + self.dup_rate:
+                art = rng.choice(recent)          # syndicated duplicate
+            else:
+                art = synth_article(rng, i, rng.choice(_SOURCES_RSS))
+                recent.append(art)
+                if len(recent) > 256:
+                    recent.pop(0)
+            yield make_flowfile(json.dumps(art, separators=(",", ":")),
+                                source=self.name, kind="article",
+                                lang=art["lang"], origin=art["source"])
+
+
+class FirehoseSource:
+    """Twitter-Streaming-API analogue: short texts, heavier duplicate rate
+    (retweets), keyword attribute for the paper's filter rules."""
+
+    _KEYWORDS = ("finance", "sports", "politics", "science", "weather")
+
+    def __init__(self, count: int, seed: int = 1, dup_rate: float = 0.2,
+                 name: str = "twitter") -> None:
+        self.count = count
+        self.seed = seed
+        self.dup_rate = dup_rate
+        self.name = name
+
+    def __call__(self) -> Iterator[FlowFile]:
+        rng = random.Random(self.seed)
+        recent: list[str] = []
+        for i in range(self.count):
+            if recent and rng.random() < self.dup_rate:
+                text = rng.choice(recent)         # retweet
+            else:
+                text = _sentence(rng, rng.randint(5, 24))
+                recent.append(text)
+                if len(recent) > 512:
+                    recent.pop(0)
+            kw = rng.choice(self._KEYWORDS)
+            payload = json.dumps({"id": i, "text": text, "keyword": kw,
+                                  "lang": rng.choice(_LANGS)},
+                                 separators=(",", ":"))
+            yield make_flowfile(payload, source=self.name, kind="tweet",
+                                keyword=kw)
+
+
+class WebSocketSource:
+    """Custom socket feed of the case study — line-oriented opaque payloads."""
+
+    def __init__(self, count: int, seed: int = 2, name: str = "websocket") -> None:
+        self.count = count
+        self.seed = seed
+        self.name = name
+
+    def __call__(self) -> Iterator[FlowFile]:
+        rng = random.Random(self.seed)
+        for i in range(self.count):
+            yield make_flowfile(
+                f"evt {i} {_sentence(rng, rng.randint(10, 40))}",
+                source=self.name, kind="event")
+
+
+def corpus_documents(n_docs: int, seed: int = 7) -> Iterator[str]:
+    """Deterministic text corpus for the LM-training consumers."""
+    rng = random.Random(seed)
+    for i in range(n_docs):
+        yield _sentence(rng, rng.randint(30, 300))

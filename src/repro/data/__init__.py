@@ -1,0 +1,7 @@
+from .loader import StreamingDataLoader
+from .packing import SequencePacker
+from .pipeline import attach_training_loader, build_news_pipeline
+from .tokenizer import ByteTokenizer
+
+__all__ = ["ByteTokenizer", "SequencePacker", "StreamingDataLoader",
+           "attach_training_loader", "build_news_pipeline"]

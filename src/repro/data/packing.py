@@ -1,0 +1,49 @@
+"""Sequence packing: variable-length documents → fixed (seq_len+1) rows.
+
+Documents are concatenated (each already carries BOS/EOS from the tokenizer)
+and sliced into rows of ``seq_len + 1`` tokens; the training step uses
+``row[:-1]`` as inputs and ``row[1:]`` as labels. A carry buffer holds the
+tail tokens between calls, and is part of the packer's checkpointable state —
+together with the consumer offsets this makes the stream→batch mapping
+exactly reproducible after restart.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SequencePacker:
+    def __init__(self, seq_len: int, pad_id: int) -> None:
+        self.seq_len = seq_len
+        self.pad_id = pad_id
+        self._carry: list[int] = []
+
+    @property
+    def row_len(self) -> int:
+        return self.seq_len + 1
+
+    def add_document(self, ids) -> list[np.ndarray]:
+        """Feed one tokenized document; return zero or more full rows."""
+        self._carry.extend(int(i) for i in ids)
+        rows = []
+        while len(self._carry) >= self.row_len:
+            rows.append(np.asarray(self._carry[:self.row_len], dtype=np.int32))
+            del self._carry[:self.row_len]
+        return rows
+
+    def flush(self) -> np.ndarray | None:
+        """Pad-and-emit the carry (end of stream / eval only — training keeps
+        packing so no pad tokens ever enter a training row)."""
+        if not self._carry:
+            return None
+        row = np.full(self.row_len, self.pad_id, dtype=np.int32)
+        row[:len(self._carry)] = self._carry
+        self._carry.clear()
+        return row
+
+    # -- checkpointable state -------------------------------------------------
+    def state(self) -> dict:
+        return {"carry": list(self._carry)}
+
+    def restore(self, state: dict) -> None:
+        self._carry = [int(x) for x in state.get("carry", [])]

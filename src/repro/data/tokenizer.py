@@ -1,0 +1,37 @@
+"""Byte-level tokenizer.
+
+Deterministic, dependency-free, and valid for every assigned architecture:
+ids 0..255 are raw bytes, followed by the special tokens. All assigned model
+vocabularies (32,000 .. 256,000) are strict supersets of this id range, so
+the same encoded stream drives any of them; in production the tokenizer is a
+pluggable interface (``Tokenizer`` protocol) and this is the reference
+implementation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+BYTE_VOCAB = 256
+
+
+class ByteTokenizer:
+    PAD = 256
+    BOS = 257
+    EOS = 258
+    vocab_size = 259
+
+    def encode(self, text: str, add_bos: bool = True,
+               add_eos: bool = True) -> list[int]:
+        ids = list(text.encode("utf-8"))
+        if add_bos:
+            ids.insert(0, self.BOS)
+        if add_eos:
+            ids.append(self.EOS)
+        return ids
+
+    def decode(self, ids) -> str:
+        return bytes(i for i in ids if 0 <= i < BYTE_VOCAB).decode(
+            "utf-8", errors="replace")
+
+    def encode_np(self, text: str, **kw) -> np.ndarray:
+        return np.asarray(self.encode(text, **kw), dtype=np.int32)

@@ -1,0 +1,10 @@
+"""Public decode-attention op with backend dispatch."""
+from .kernel import decode_attention
+from .ref import decode_reference
+
+
+def decode(q, k_cache, v_cache, pos, *, backend: str = "pallas", **kw):
+    if backend == "xla":
+        return decode_reference(q, k_cache, v_cache, pos)
+    return decode_attention(q, k_cache, v_cache, pos,
+                            interpret=(backend == "interpret"), **kw)

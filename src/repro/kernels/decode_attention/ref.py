@@ -1,0 +1,21 @@
+"""Oracle: masked single-token attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_reference(q, k_cache, v_cache, pos):
+    b, hq, _, d = q.shape
+    hkv, skv = k_cache.shape[1], k_cache.shape[2]
+    if hq != hkv:
+        rep = hq // hkv
+        k_cache = jnp.repeat(k_cache, rep, axis=1)
+        v_cache = jnp.repeat(v_cache, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * (d ** -0.5)
+    valid = jnp.arange(skv)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,113 @@
+"""Pallas TPU flash attention (forward), GQA-aware, causal or sliding-window.
+
+Tiling: grid = (batch, q_heads, Sq/BQ, Skv/BK); the innermost KV dimension is
+sequential ('arbitrary') so the (BQ, d) fp32 accumulator and the (BQ,)
+running max/denominator live in VMEM scratch across KV blocks — the
+FlashAttention-2 schedule mapped onto the MXU:
+
+  q block   (BQ, d)    VMEM   (revisited across KV blocks)
+  k,v block (BK, d)    VMEM   (streamed HBM→VMEM per grid step)
+  acc       (BQ, d)    VMEM scratch fp32
+  m, l      (BQ, 128)  VMEM scratch fp32 (lane-replicated statistics)
+
+BQ=BK=128 by default: d∈{64,128,160} keeps every matmul dim a multiple of
+the 128-lane MXU tile (160 pads one dim — acceptable), and the working set
+(q+k+v+acc+out ≈ 5·128·d·4B ≤ 410 KiB at d=160) fits VMEM with
+double-buffering headroom.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int, bq: int, bk: int,
+                  nk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (BQ, d)
+    k = k_ref[0, 0].astype(jnp.float32)              # (BK, d)
+    v = v_ref[0, 0]                                   # (BK, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_idx = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_idx = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= q_idx >= k_idx
+    if window:
+        mask &= (q_idx - k_idx) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[:, 0]                              # (BQ,)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    corr = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_scr[:, 0] = l_scr[:, 0] * corr + p.sum(axis=1)
+    m_scr[:, 0] = m_cur
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False):
+    """q: (B, Hq, Sq, d); k, v: (B, Hkv, Skv, d) with Hq % Hkv == 0.
+    Returns (B, Hq, Sq, d), same dtype as q."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, "pad sequences to block multiples"
+    nq, nk = sq // bq, skv // bk
+    scale = d ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, nk=nk),
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),       # running max
+            pltpu.VMEM((bq, 128), jnp.float32),       # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),         # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,14 @@
+"""Public flash-attention op with backend dispatch ('xla' uses the blockwise
+jnp path in models/attention.py; 'pallas' the TPU kernel; 'interpret' the
+kernel body on CPU for validation)."""
+from __future__ import annotations
+
+from .kernel import flash_attention
+from .ref import attention_reference
+
+
+def flash(q, k, v, *, causal=True, window=0, backend: str = "pallas", **kw):
+    if backend == "xla":
+        return attention_reference(q, k, v, causal=causal, window=window)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=(backend == "interpret"), **kw)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention: naive masked softmax attention in
+fp32, GQA by repeating KV heads."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_reference(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,Hq,Sq,d); k/v: (B,Hkv,Skv,d) → (B,Hq,Sq,d) fp32-accurate."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * (d ** -0.5)
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qi >= kj
+    if window:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

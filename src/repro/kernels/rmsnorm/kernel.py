@@ -1,0 +1,64 @@
+"""Pallas TPU fused residual-add + RMSNorm.
+
+y, res = rmsnorm(x + r) — the residual write and the normalization share one
+HBM round-trip (the unfused lowering reads/writes the (R, D) activation
+three times; fused does one read of x, one of r, one write each of y and
+res). Grid over row blocks; (BR, D) tiles in VMEM, statistics in fp32.
+
+BR=256 rows, D up to 8K: 256·8192·2 B = 4 MiB per operand tile — within a
+16 MiB VMEM budget for x/r/y/res at D≤4096; the wrapper halves BR at larger
+D to stay inside.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rmsnorm_kernel(x_ref, r_ref, s_ref, y_ref, res_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    h = x + r
+    ms = jnp.mean(h * h, axis=-1, keepdims=True)
+    y = h * jax.lax.rsqrt(ms + eps) * s_ref[...].astype(jnp.float32)[None, :]
+    res_ref[...] = h.astype(res_ref.dtype)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def fused_residual_rmsnorm(x, residual, scale, *, eps: float = 1e-5,
+                           block_rows: int = 256, interpret: bool = False):
+    """x, residual: (R, D); scale: (D,) → (normed (R,D), new_residual (R,D))."""
+    r_, d = x.shape
+    br = block_rows
+    while d * br * 2 * 4 > (12 << 20) and br > 8:     # stay under VMEM budget
+        br //= 2
+    br = min(br, r_)
+    if r_ % br:
+        pad = br - r_ % br
+        y, res = fused_residual_rmsnorm(
+            jnp.pad(x, ((0, pad), (0, 0))),
+            jnp.pad(residual, ((0, pad), (0, 0))), scale, eps=eps,
+            block_rows=block_rows, interpret=interpret)
+        return y[:r_], res[:r_]
+
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(r_ // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((r_, d), x.dtype),
+                   jax.ShapeDtypeStruct((r_, d), x.dtype)],
+        interpret=interpret,
+    )(x, residual, scale)

@@ -1,0 +1,11 @@
+"""Public fused rmsnorm op with backend dispatch."""
+from .kernel import fused_residual_rmsnorm
+from .ref import fused_residual_rmsnorm_reference
+
+
+def rmsnorm_residual(x, residual, scale, *, eps: float = 1e-5,
+                     backend: str = "pallas", **kw):
+    if backend == "xla":
+        return fused_residual_rmsnorm_reference(x, residual, scale, eps)
+    return fused_residual_rmsnorm(x, residual, scale, eps=eps,
+                                  interpret=(backend == "interpret"), **kw)

@@ -1,0 +1,10 @@
+"""Oracle for fused residual+RMSNorm."""
+import jax
+import jax.numpy as jnp
+
+
+def fused_residual_rmsnorm_reference(x, residual, scale, eps: float = 1e-5):
+    h = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    ms = jnp.mean(h * h, axis=-1, keepdims=True)
+    y = h * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)[None, :]
+    return y.astype(x.dtype), h.astype(x.dtype)

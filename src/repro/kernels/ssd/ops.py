@@ -1,0 +1,35 @@
+"""Public SSD op with backend dispatch.
+
+'xla'       — chunked pure-jnp lowering (default; what the dry-run compiles)
+'pallas'    — TPU Pallas kernel (kernel.py)
+'interpret' — Pallas kernel in interpret mode (CPU validation)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import ref
+
+_BACKEND = "xla"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("xla", "pallas", "interpret")
+    _BACKEND = name
+
+
+@partial(jax.jit, static_argnames=("chunk", "backend"))
+def ssd(x, dt, A, B, C, *, chunk: int = 64, backend: str | None = None):
+    be = backend or _BACKEND
+    if be == "xla":
+        return ref.ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    from .kernel import ssd_pallas
+    return ssd_pallas(x, dt, A, B, C, chunk=chunk,
+                      interpret=(be == "interpret"))
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    return ref.ssd_decode_step(state, x_t, dt_t, A, B_t, C_t)

@@ -1,0 +1,202 @@
+"""Post-SPMD HLO analysis: collective-byte accounting for the roofline.
+
+``cost_analysis()`` doesn't expose collective traffic, so we parse the
+compiled per-device HLO text and sum the output-operand sizes of every
+collective op, weighted by ring-cost multipliers derived from the parsed
+``replica_groups=[G,S]<=[N]`` group size S:
+
+  all-gather          bytes × (S-1)/S      (each device receives S-1 shards)
+  reduce-scatter      bytes × (S-1)        (input = S × output)
+  all-reduce          bytes × 2(S-1)/S     (ring RS + AG)
+  all-to-all          bytes × (S-1)/S
+  collective-permute  bytes × 1
+
+Shapes in the post-SPMD module are PER-DEVICE, so the resulting byte count
+is per-chip traffic; the roofline divides by per-link bandwidth.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,512,448]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<outs>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(?P<g>\d+),(?P<s>\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group("s"))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def _multiplier(op: str, s: int) -> float:
+    if s <= 1:
+        return 0.0
+    if op == "all-gather":
+        return (s - 1) / s
+    if op == "reduce-scatter":
+        return float(s - 1)
+    if op == "all-reduce":
+        return 2 * (s - 1) / s
+    if op == "all-to-all":
+        return (s - 1) / s
+    return 1.0                     # collective-permute
+
+
+# computation headers: "%region_0.24 (arg: (s32[], ...)) -> ... {" — the arg
+# list may nest parens, so match only the leading name and the trailing "{".
+_COMP_HEADER_RE = re.compile(
+    r"^\s*(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*->.*\{\s*$")
+_WHILE_BODY_RE = re.compile(r"\bwhile\(.*?body=(%[\w.\-]+)")
+
+
+def _computation_depths(hlo_text: str) -> dict[str, int]:
+    """Map computation name -> while-nesting depth (entry = 0). A computation
+    referenced as a while body sits one level below the computation holding
+    the while op."""
+    current = None
+    body_parent: dict[str, str] = {}
+    comp_lines: dict[str, list[str]] = {}
+    entry = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m:
+            current = m.group(1)
+            comp_lines[current] = []
+            if line.lstrip().startswith("ENTRY"):
+                entry = current
+            continue
+        if current is not None:
+            comp_lines[current].append(line)
+            wm = _WHILE_BODY_RE.search(line)
+            if wm:
+                body_parent[wm.group(1)] = current
+    depths: dict[str, int] = {}
+
+    def depth_of(comp: str, seen=()) -> int:
+        if comp in depths:
+            return depths[comp]
+        if comp in seen:
+            return 0
+        parent = body_parent.get(comp)
+        if parent is None:
+            d = 0                      # entry or non-loop computation
+        else:
+            d = depth_of(parent, seen + (comp,)) + 1
+        depths[comp] = d
+        return d
+
+    for comp in comp_lines:
+        depth_of(comp)
+    return depths
+
+
+def collective_bytes(hlo_text: str, n_devices: int,
+                     trip_table: dict[int, float] | None = None) -> dict:
+    """Per-chip collective traffic, ring-weighted and TRIP-COUNT-CORRECTED.
+
+    XLA's cost/byte analyses count while bodies once; ``trip_table`` maps
+    while-nesting depth -> per-body trip count (from the known scan
+    structure: launch/jaxpr_cost.loop_trip_table). A collective at depth d
+    is multiplied by the product of trips at depths 1..d.
+    """
+    trip_table = trip_table or {}
+    depths = _computation_depths(hlo_text)
+
+    def trips_for(depth: int) -> float:
+        mult = 1.0
+        for d in range(1, depth + 1):
+            mult *= trip_table.get(d, 1.0)
+        return mult
+
+    ops = defaultdict(lambda: {"count": 0, "bytes": 0, "weighted": 0.0})
+    examples = []
+    current = None
+    for line in hlo_text.splitlines():
+        hm = _COMP_HEADER_RE.match(line)
+        if hm:
+            current = hm.group(1)
+            continue
+        if "-done(" in line:          # paired with -start; count once
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("outs"))
+        s = _group_size(line, n_devices)
+        depth = depths.get(current, 0)
+        trips = trips_for(depth)
+        w = nbytes * _multiplier(op, s) * trips
+        ops[op]["count"] += 1
+        ops[op]["bytes"] += nbytes
+        ops[op]["weighted"] += w
+        if len(examples) < 40:
+            examples.append({"op": op, "bytes": nbytes, "group": s,
+                             "depth": depth, "trips": trips,
+                             "line": line.strip()[:160]})
+    total_w = sum(v["weighted"] for v in ops.values())
+    total_raw = sum(v["bytes"] for v in ops.values())
+    return {"total_bytes": total_w, "raw_bytes": total_raw,
+            "ops": {k: dict(v) for k, v in ops.items()},
+            "examples": examples}
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:          # backend without memory analysis
+        return {"error": str(e)}
+    fields = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes")
+    out = {f: int(getattr(ma, f, 0) or 0) for f in fields}
+    out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                              + out["output_size_in_bytes"]
+                              - out["alias_size_in_bytes"]
+                              + out["temp_size_in_bytes"])
+    return out
+
+
+def cost_stats(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": str(e)}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}

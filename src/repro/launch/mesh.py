@@ -1,0 +1,26 @@
+"""Production mesh factory.
+
+Single pod: 16×16 = 256 chips (v5e pod), axes (data, model).
+Multi-pod:  2×16×16 = 512 chips, axes (pod, data, model); 'pod' extends the
+data-parallel dimension — the step functions never reference pod count, so
+scaling to N pods is a mesh-shape change only.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary meshes (tests use small ones under forced host devices)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

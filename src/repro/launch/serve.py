@@ -1,0 +1,58 @@
+"""Serving launcher: consume 'requests' topic, publish 'completions'.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --requests 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+from pathlib import Path
+
+import jax
+
+from .. import configs
+from ..core import ConsumerGroup, PartitionedLog
+from ..core.sources import corpus_documents
+from ..models import Model
+from ..runtime import ServeConfig, Server
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    choices=list(configs.ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--workdir", default=None)
+    args = ap.parse_args()
+
+    root = Path(args.workdir or tempfile.mkdtemp(prefix="serve_"))
+    cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
+    log = PartitionedLog(root / "log")
+    log.create_topic("requests", partitions=4)
+    log.create_topic("completions", partitions=4)
+    for i, doc in enumerate(corpus_documents(args.requests, seed=11)):
+        log.append("requests", str(i).encode(),
+                   json.dumps({"id": i, "prompt": doc[:80]}).encode())
+
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    grp = ConsumerGroup(log, "requests", "servers")
+    server = Server(model, params, grp.add_member("srv0"), log,
+                    ServeConfig(batch_size=args.batch,
+                                prompt_len=args.prompt_len,
+                                max_new_tokens=args.max_new))
+    while server.serve_once():
+        pass
+    done = sum(log.end_offsets("completions"))
+    print(f"served {server.served}, completions landed: {done}")
+    log.close()
+
+
+if __name__ == "__main__":
+    main()

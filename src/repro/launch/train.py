@@ -1,0 +1,76 @@
+"""Production training launcher.
+
+On a real TPU cluster each host runs this under its own process (jax
+distributed init), the mesh spans the pod(s), and the loader is one
+consumer-group member per host. On this container it runs the same code on
+one CPU device at reduced scale unless --dryrun-mesh is requested.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --reduced --steps 20 --workdir /tmp/run1
+  PYTHONPATH=src python -m repro.launch.train --resume --workdir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+from pathlib import Path
+
+from .. import configs
+from ..core import PartitionedLog, make_flowfile
+from ..core.sources import corpus_documents
+from ..data.pipeline import attach_training_loader
+from ..models import Model
+from ..optim import OptConfig
+from ..runtime import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    choices=list(configs.ARCHS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale config (required on this container)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--docs", type=int, default=30_000)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--workdir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=-1,
+                    help="inject a failure at this step (recovery drills)")
+    args = ap.parse_args()
+
+    root = Path(args.workdir or tempfile.mkdtemp(prefix="train_"))
+    root.mkdir(parents=True, exist_ok=True)
+    cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
+
+    log = PartitionedLog(root / "log")
+    if "articles" not in log.topics():
+        log.create_topic("articles", partitions=8)
+        for i, doc in enumerate(corpus_documents(args.docs)):
+            k, v = make_flowfile(doc, text=doc).to_record()
+            log.append("articles", k, v, partition=i % 8)
+        log.flush(fsync=False)
+
+    grp, loader = attach_training_loader(log, batch_size=args.batch,
+                                         seq_len=args.seq)
+    model = Model(cfg)
+    trainer = Trainer(
+        model, loader,
+        OptConfig(peak_lr=1e-3, warmup_steps=20, total_steps=args.steps),
+        TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=str(root / "ckpt"), log_every=10,
+                      fail_at_step=args.fail_at))
+    if args.resume:
+        resumed = trainer.resume()
+        print(f"resume: {'ok, at step ' + str(trainer.step_idx) if resumed else 'no checkpoint found'}")
+    out = trainer.run()
+    for h in trainer.history[-5:]:
+        print(h)
+    print(out)
+    log.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from .common import (ArchConfig, ShapeConfig, ShardCtx, abstract_params,
+                     init_params, param_spec_tree, param_template)
+from .lm import Model, PAD_ID
+
+__all__ = ["ArchConfig", "Model", "PAD_ID", "ShapeConfig", "ShardCtx",
+           "abstract_params", "init_params", "param_spec_tree",
+           "param_template"]

@@ -1,0 +1,360 @@
+"""Shared model infrastructure: configs, parameter templates (shape + init +
+sharding spec in one place), norms, rope, losses, sharding helpers.
+
+Conventions
+-----------
+* Params are nested dicts of jnp arrays; per-layer params are STACKED with a
+  leading ``num_layers`` axis and consumed by ``lax.scan`` (compile time and
+  HLO size O(1) in depth).
+* Every parameter is declared once as a ``ParamDef`` carrying its shape,
+  dtype, initializer and ``PartitionSpec`` — ``init_params`` materializes
+  real arrays (smoke tests / examples), ``abstract_params`` materializes
+  ``jax.ShapeDtypeStruct`` with ``NamedSharding`` (the multi-pod dry-run
+  never allocates).
+* Mesh axes: ``model`` = TP/EP/SP; ``data`` (+ ``pod`` when present) = DP.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    ffn: str = "swiglu"            # swiglu | sq_relu | gelu
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    # attention activation-sharding strategy: 'heads' needs n%tp==0,
+    # 'sequence' is context parallelism (used when head counts don't divide)
+    attn_shard: str = "heads"
+    sliding_window: int = 0        # 0 = full attention
+    full_attn_layers: tuple[int, ...] = ()   # hybrid: layers w/ full attn
+    meta_tokens: int = 0           # hymba: learnable KV-prefix registers
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # MLA (deepseek)
+    kv_lora: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # SSM (mamba2 / hymba heads)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_ngroups: int = 1
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    # encoder-decoder (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 0               # stub frontend sequence length
+    # vlm (llava)
+    img_tokens: int = 0
+    img_embed_dim: int = 0
+    # numerics
+    dtype: Any = jnp.bfloat16
+    # int8 KV cache for decode (per-token-per-head absmax scales) — halves
+    # the HBM traffic that dominates the decode roofline (KIVI-style)
+    kv_quant: bool = False
+    # MoE dispatch layout: per-data-shard capacity chunks (all-to-all) vs
+    # one global capacity buffer (all-reduce). See EXPERIMENTS §Perf cell E.
+    moe_chunk_dispatch: bool = False
+    # long-context capability (gates the long_500k shape)
+    subquadratic: bool = False
+
+    @property
+    def d_inner(self) -> int:      # SSD inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def param_count(self) -> int:
+        """Total parameters N (embeddings included)."""
+        return int(sum(np.prod(d.shape) for d in
+                       param_template(self).values()))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        total = 0
+        for name, d in param_template(self).items():
+            n = int(np.prod(d.shape))
+            if ".experts." in name:
+                n = n * (self.top_k / self.n_experts)
+            total += int(n)
+        return total
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str                       # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    num_microbatches: int = 1       # train only
+
+
+# ---------------------------------------------------------------------------
+# Parameter templates
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    spec: P                          # how the LIVE param is sharded
+    init: str = "normal"             # normal | zeros | ones | scaled
+    dtype: Any = jnp.bfloat16
+    fan_in: int | None = None        # for 'scaled' init
+
+
+def _norm(spec_extra: int = 0) -> P:
+    return P()                       # norms replicated
+
+
+def dense_spec(in_shard: str | None, out_shard: str | None, *lead) -> P:
+    return P(*lead, in_shard, out_shard)
+
+
+def param_template(cfg: ArchConfig) -> dict[str, ParamDef]:
+    """Flat dict 'path/like/this' -> ParamDef. Stacked layer params carry a
+    leading num_layers axis. Built per family."""
+    from . import families            # local import to avoid cycles
+    return families.template(cfg)
+
+
+# -- materialization ---------------------------------------------------------
+def _init_leaf(key, d: ParamDef):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "ssm_a":            # mamba A_log in [0, ~ln16]
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(d.dtype)
+    if d.init == "ssm_dt":           # dt_bias ~ softplus^-1(U(1e-3, 0.1))
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1e-3, 0.1)
+        return jnp.log(jnp.expm1(u)).astype(d.dtype)
+    fan_in = d.fan_in or (d.shape[-2] if len(d.shape) >= 2 else d.shape[-1])
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(d.dtype)
+
+
+def unflatten(flat: dict[str, Any]) -> dict:
+    out: dict = {}
+    for path, v in flat.items():
+        node = out
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return out
+
+
+def init_params(cfg: ArchConfig, rng) -> dict:
+    tmpl = param_template(cfg)
+    keys = jax.random.split(rng, len(tmpl))
+    return unflatten({path: _init_leaf(k, d)
+                      for k, (path, d) in zip(keys, sorted(tmpl.items()))})
+
+
+def fsdp_spec(shape: tuple[int, ...], axis_size: int,
+              axis: str = "model") -> P:
+    """ZeRO-3 layout: shard the largest divisible dim over ``axis``.
+    Stacked layer params skip the leading L axis (scan slices it)."""
+    best, best_dim = -1, 0
+    for i, dim in enumerate(shape):
+        if i == 0 and len(shape) > 1:
+            continue                      # leading stack axis stays whole
+        if dim % axis_size == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    parts = [None] * len(shape)
+    if best >= 0:
+        parts[best] = axis
+    return P(*parts)
+
+
+def resolved_spec(d: ParamDef, mesh: Mesh | None,
+                  parallelism: str = "tp") -> P:
+    if parallelism == "fsdp" and mesh is not None:
+        return fsdp_spec(d.shape, mesh.shape["model"])
+    return d.spec
+
+
+def abstract_params(cfg: ArchConfig, mesh: Mesh | None,
+                    parallelism: str = "tp") -> dict:
+    tmpl = param_template(cfg)
+    def mk(d: ParamDef):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(d.shape, d.dtype)
+        return jax.ShapeDtypeStruct(
+            d.shape, d.dtype,
+            sharding=NamedSharding(mesh, resolved_spec(d, mesh, parallelism)))
+    return unflatten({path: mk(d) for path, d in tmpl.items()})
+
+
+def param_spec_tree(cfg: ArchConfig, mesh: Mesh | None = None,
+                    parallelism: str = "tp") -> dict:
+    return unflatten({path: resolved_spec(d, mesh, parallelism)
+                      for path, d in param_template(cfg).items()})
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+def dp_axes(mesh: Mesh | None) -> tuple[str, ...]:
+    if mesh is None:
+        return ()
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+class ShardCtx:
+    """Carries the mesh through model code; no-ops when mesh is None so the
+    same model runs unsharded on one CPU device (smoke tests).
+
+    parallelism:
+      'tp'   — Megatron tensor parallelism on the 'model' axis (baseline)
+      'fsdp' — the 'model' axis joins data parallelism for activations;
+               params are ZeRO-3 sharded over it and all-gathered per layer
+               by GSPMD. No TP activation constraints apply.
+    """
+
+    def __init__(self, mesh: Mesh | None, cfg: ArchConfig,
+                 parallelism: str = "tp") -> None:
+        assert parallelism in ("tp", "fsdp")
+        self.mesh = mesh
+        self.cfg = cfg
+        self.parallelism = parallelism
+        self.dp = dp_axes(mesh)
+        if parallelism == "fsdp" and mesh is not None:
+            self.dp = self.dp + ("model",)
+        tp = 1 if (mesh is None or parallelism == "fsdp") \
+            else mesh.shape["model"]
+        self.tp = tp
+        # resolved attention activation sharding:
+        #  head_sharded    — q-head axis over 'model' (KV repeated to q heads
+        #                    when n_kv doesn't divide tp)
+        #  kv_head_sharded — the KV cache head axis itself is shardable
+        self.head_sharded = (cfg.attn_shard == "heads" and mesh is not None
+                             and cfg.n_heads % tp == 0)
+        self.kv_head_sharded = (self.head_sharded
+                                and cfg.n_kv_heads % tp == 0)
+
+    def cs(self, x, *spec):
+        if self.mesh is None:
+            return x
+        if self.parallelism == "fsdp":
+            # drop TP feature-dim constraints; only batch stays pinned
+            spec = tuple(self.dp if s == self.dp else None for s in spec)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    # common layouts
+    def act(self, x):                     # (B, S, d) — residual stream:
+        # batch over DP, d replicated across 'model' (Megatron residual)
+        return self.cs(x, self.dp or None, None, None) if self.mesh else x
+
+    def layer_param(self, x):
+        """FSDP: pin a sliced per-layer param to its shard layout inside the
+        scan body, so the weight all-gather happens per-iteration in VMEM-
+        sized pieces instead of XLA hoisting a whole-stack gather out of the
+        loop (measured: full f32 params resident without this)."""
+        if self.parallelism != "fsdp" or self.mesh is None or x.ndim == 0:
+            return x
+        size = self.mesh.shape["model"]
+        best, best_dim = -1, 0
+        for i, dim in enumerate(x.shape):
+            if dim % size == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best < 0:
+            return x
+        parts = [None] * x.ndim
+        parts[best] = "model"
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*parts)))
+
+    def batch_seq(self, x):               # (B, S) tokens
+        return self.cs(x, self.dp or None, None) if self.mesh else x
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+def rms_norm(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, dh) or (..., S, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    if x.ndim == angles.ndim + 1:                       # head axis present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """logits: (B, S, V) any float dtype; labels: (B, S) int32.
+    Computed in fp32; supports vocab-sharded logits (GSPMD reduces)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def causal_mask(s_q: int, s_kv: int, q_offset=0):
+    """True where attention is allowed."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_kv)[None, :]
+    return qi >= kj
+
+
+def swa_mask(s_q: int, s_kv: int, window: int, q_offset=0):
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_kv)[None, :]
+    return (qi >= kj) & (qi - kj < window)

@@ -1,0 +1,179 @@
+"""Parameter templates per architecture family.
+
+One place defines every tensor's shape, dtype, initializer and TP sharding
+spec; init_params / abstract_params / param_spec_tree all derive from here.
+Stacked per-layer tensors carry a leading num_layers axis (consumed by scan).
+"""
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+from .common import ArchConfig, ParamDef
+
+
+def _attn_defs(cfg: ArchConfig, L: int, prefix: str,
+               n_heads=None, n_kv=None, d_head=None) -> dict[str, ParamDef]:
+    h = n_heads or cfg.n_heads
+    kv = n_kv or cfg.n_kv_heads
+    dh = d_head or cfg.d_head
+    d = cfg.d_model
+    t = cfg.dtype
+    out = {
+        f"{prefix}/wq": ParamDef((L, d, h * dh), P(None, None, "model"), dtype=t),
+        f"{prefix}/wk": ParamDef((L, d, kv * dh), P(None, None, "model"), dtype=t),
+        f"{prefix}/wv": ParamDef((L, d, kv * dh), P(None, None, "model"), dtype=t),
+        f"{prefix}/wo": ParamDef((L, h * dh, d), P(None, "model", None), dtype=t),
+    }
+    if cfg.qk_norm:
+        out[f"{prefix}/q_norm"] = ParamDef((L, dh), P(), init="ones", dtype=t)
+        out[f"{prefix}/k_norm"] = ParamDef((L, dh), P(), init="ones", dtype=t)
+    if cfg.meta_tokens:
+        m = cfg.meta_tokens
+        out[f"{prefix}/meta_k"] = ParamDef((L, m, kv, dh), P(), dtype=t,
+                                           fan_in=dh)
+        out[f"{prefix}/meta_v"] = ParamDef((L, m, kv, dh), P(), dtype=t,
+                                           fan_in=dh)
+    return out
+
+
+def _ffn_defs(cfg: ArchConfig, L: int, prefix: str, d_ff=None,
+              kind=None) -> dict[str, ParamDef]:
+    d, t = cfg.d_model, cfg.dtype
+    f = d_ff or cfg.d_ff
+    k = kind or cfg.ffn
+    if k == "swiglu":
+        return {
+            f"{prefix}/wi_gate": ParamDef((L, d, f), P(None, None, "model"), dtype=t),
+            f"{prefix}/wi_up": ParamDef((L, d, f), P(None, None, "model"), dtype=t),
+            f"{prefix}/wo": ParamDef((L, f, d), P(None, "model", None), dtype=t),
+        }
+    return {
+        f"{prefix}/wi": ParamDef((L, d, f), P(None, None, "model"), dtype=t),
+        f"{prefix}/wo": ParamDef((L, f, d), P(None, "model", None), dtype=t),
+    }
+
+
+def _moe_defs(cfg: ArchConfig, L: int, prefix: str) -> dict[str, ParamDef]:
+    d, t, e, f = cfg.d_model, cfg.dtype, cfg.n_experts, cfg.d_ff
+    out = {
+        f"{prefix}/router": ParamDef((L, d, e), P(), dtype=t),
+        f"{prefix}/experts/wi_gate": ParamDef((L, e, d, f),
+                                              P(None, "model", None, None), dtype=t),
+        f"{prefix}/experts/wi_up": ParamDef((L, e, d, f),
+                                            P(None, "model", None, None), dtype=t),
+        f"{prefix}/experts/wo": ParamDef((L, e, f, d),
+                                         P(None, "model", None, None), dtype=t,
+                                         fan_in=f),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * cfg.d_ff
+        out.update(_ffn_defs(cfg, L, f"{prefix}/shared", d_ff=fs, kind="swiglu"))
+    return out
+
+
+def _mla_defs(cfg: ArchConfig, L: int, prefix: str) -> dict[str, ParamDef]:
+    d, t, h = cfg.d_model, cfg.dtype, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        f"{prefix}/wq": ParamDef((L, d, h * qk), P(None, None, "model"), dtype=t),
+        f"{prefix}/wkv_a": ParamDef((L, d, cfg.kv_lora + cfg.qk_rope_dim),
+                                    P(), dtype=t),
+        f"{prefix}/kv_norm": ParamDef((L, cfg.kv_lora), P(), init="ones", dtype=t),
+        f"{prefix}/wk_b": ParamDef((L, cfg.kv_lora, h * cfg.qk_nope_dim),
+                                   P(None, None, "model"), dtype=t),
+        f"{prefix}/wv_b": ParamDef((L, cfg.kv_lora, h * cfg.v_head_dim),
+                                   P(None, None, "model"), dtype=t),
+        f"{prefix}/wo": ParamDef((L, h * cfg.v_head_dim, d),
+                                 P(None, "model", None), dtype=t),
+    }
+
+
+def _ssm_defs(cfg: ArchConfig, L: int, prefix: str) -> dict[str, ParamDef]:
+    d, t = cfg.d_model, cfg.dtype
+    di, h = cfg.d_inner, cfg.ssm_heads
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    k = cfg.ssm_conv
+    return {
+        f"{prefix}/in_z": ParamDef((L, d, di), P(None, None, "model"), dtype=t),
+        f"{prefix}/in_x": ParamDef((L, d, di), P(None, None, "model"), dtype=t),
+        f"{prefix}/in_B": ParamDef((L, d, gn), P(), dtype=t),
+        f"{prefix}/in_C": ParamDef((L, d, gn), P(), dtype=t),
+        f"{prefix}/in_dt": ParamDef((L, d, h), P(), dtype=t),
+        f"{prefix}/dt_bias": ParamDef((L, h), P(), init="ssm_dt", dtype=t),
+        f"{prefix}/conv_x": ParamDef((L, k, di), P(None, None, "model"),
+                                     dtype=t, fan_in=k),
+        f"{prefix}/conv_B": ParamDef((L, k, gn), P(), dtype=t, fan_in=k),
+        f"{prefix}/conv_C": ParamDef((L, k, gn), P(), dtype=t, fan_in=k),
+        f"{prefix}/A_log": ParamDef((L, h), P(), init="ssm_a", dtype=t),
+        f"{prefix}/D": ParamDef((L, h), P(), init="ones", dtype=t),
+        f"{prefix}/gate_norm": ParamDef((L, di), P(), init="ones", dtype=t),
+        f"{prefix}/out_proj": ParamDef((L, di, d), P(None, "model", None),
+                                       dtype=t, fan_in=di),
+    }
+
+
+def _norm(L: int, d: int, name: str, t) -> dict[str, ParamDef]:
+    return {name: ParamDef((L, d), P(), init="ones", dtype=t)}
+
+
+def template(cfg: ArchConfig) -> dict[str, ParamDef]:
+    d, t, L, V = cfg.d_model, cfg.dtype, cfg.num_layers, cfg.vocab_size
+    out: dict[str, ParamDef] = {
+        "embed": ParamDef((V, d), P("model", None), dtype=t, fan_in=d),
+        "lm_head": ParamDef((d, V), P(None, "model"), dtype=t),
+        "final_norm": ParamDef((d,), P(), init="ones", dtype=t),
+    }
+    if cfg.family == "vlm":
+        out["img_proj/w1"] = ParamDef((cfg.img_embed_dim, d),
+                                      P(None, "model"), dtype=t)
+        out["img_proj/w2"] = ParamDef((d, d), P("model", None), dtype=t)
+
+    if cfg.family in ("dense", "vlm"):
+        out.update(_norm(L, d, "layers/attn_norm", t))
+        out.update(_attn_defs(cfg, L, "layers/attn"))
+        out.update(_norm(L, d, "layers/ffn_norm", t))
+        out.update(_ffn_defs(cfg, L, "layers/ffn"))
+
+    elif cfg.family == "moe":
+        out.update(_norm(L, d, "layers/attn_norm", t))
+        if cfg.kv_lora:                               # deepseek: MLA attention
+            out.update(_mla_defs(cfg, L, "layers/attn"))
+        else:
+            out.update(_attn_defs(cfg, L, "layers/attn"))
+        out.update(_norm(L, d, "layers/ffn_norm", t))
+        out.update(_moe_defs(cfg, L, "layers/moe"))
+
+    elif cfg.family == "ssm":
+        out.update(_norm(L, d, "layers/norm", t))
+        out.update(_ssm_defs(cfg, L, "layers/ssm"))
+
+    elif cfg.family == "hybrid":
+        n_full = len(cfg.full_attn_layers)
+        n_swa = L - n_full
+        for name, n in (("layers_full", n_full), ("layers_swa", n_swa)):
+            out.update(_norm(n, d, f"{name}/attn_norm", t))
+            out.update(_attn_defs(cfg, n, f"{name}/attn"))
+            out.update(_ssm_defs(cfg, n, f"{name}/ssm"))
+            out[f"{name}/fuse/attn_out_norm"] = ParamDef((n, d), P(), init="ones", dtype=t)
+            out[f"{name}/fuse/ssm_out_norm"] = ParamDef((n, d), P(), init="ones", dtype=t)
+            out[f"{name}/fuse/beta_attn"] = ParamDef((n, d), P(), init="ones", dtype=t)
+            out[f"{name}/fuse/beta_ssm"] = ParamDef((n, d), P(), init="ones", dtype=t)
+            out.update(_norm(n, d, f"{name}/ffn_norm", t))
+            out.update(_ffn_defs(cfg, n, f"{name}/ffn"))
+
+    elif cfg.family == "encdec":
+        E = cfg.enc_layers
+        out.update(_norm(E, d, "enc_layers/attn_norm", t))
+        out.update(_attn_defs(cfg, E, "enc_layers/attn"))
+        out.update(_norm(E, d, "enc_layers/ffn_norm", t))
+        out.update(_ffn_defs(cfg, E, "enc_layers/ffn"))
+        out["enc_final_norm"] = ParamDef((d,), P(), init="ones", dtype=t)
+        out.update(_norm(L, d, "layers/attn_norm", t))
+        out.update(_attn_defs(cfg, L, "layers/attn"))
+        out.update(_norm(L, d, "layers/cross_norm", t))
+        out.update(_attn_defs(cfg, L, "layers/cross"))
+        out.update(_norm(L, d, "layers/ffn_norm", t))
+        out.update(_ffn_defs(cfg, L, "layers/ffn"))
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return out

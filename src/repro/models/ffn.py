@@ -1,0 +1,28 @@
+"""Feed-forward variants: SwiGLU (llama family), squared-ReLU (nemotron-4),
+GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardCtx
+
+
+def ffn_forward(h, p, kind: str, ctx: ShardCtx):
+    """h: (B,S,d). p holds wi/wi_gate/wi_up/wo for this layer."""
+    dp = ctx.dp or None
+    def mid(x):        # (B,S,d_ff) sharded over model
+        return ctx.cs(x, dp, None, "model") if ctx.mesh else x
+    if kind == "swiglu":
+        g = mid(h @ p["wi_gate"])
+        u = mid(h @ p["wi_up"])
+        z = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
+    elif kind == "sq_relu":
+        z = mid(h @ p["wi"])
+        z = jnp.square(jax.nn.relu(z.astype(jnp.float32))).astype(h.dtype)
+    elif kind == "gelu":
+        z = mid(h @ p["wi"])
+        z = jax.nn.gelu(z.astype(jnp.float32)).astype(h.dtype)
+    else:
+        raise ValueError(f"unknown ffn kind {kind!r}")
+    return z @ p["wo"]

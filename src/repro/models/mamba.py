@@ -1,0 +1,129 @@
+"""Mamba-2 (SSD) block: projections + causal depthwise conv + SSD scan +
+gated RMSNorm + output projection. Used standalone (mamba2-370m) and as the
+SSM branch of the Hymba hybrid block.
+
+Layouts: separate projections per stream (z, x, B, C, dt) so TP sharding is
+clean (no uneven slices of one fused projection).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ssd import ops as ssd_ops
+from .common import ShardCtx, rms_norm
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). state: (B,K-1,C) carry
+    for decode. Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)           # (B,S+K-1,C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return y, new_state
+
+
+def _project_streams(h, p, cfg, ctx: ShardCtx):
+    dp = ctx.dp or None
+    di = cfg.d_inner
+    g, n, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    z = h @ p["in_z"]                                 # (B,S,di)
+    xs = h @ p["in_x"]
+    if ctx.mesh is not None and nh % ctx.tp == 0:
+        z = ctx.cs(z, dp, None, "model")
+        xs = ctx.cs(xs, dp, None, "model")
+    bs = h @ p["in_B"]                                # (B,S,G*N)
+    cs = h @ p["in_C"]
+    dt = h @ p["in_dt"] + p["dt_bias"]                # (B,S,H)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    return z, xs, bs, cs, dt
+
+
+def _to_heads(xs, bs, cs, cfg):
+    b, s, _ = xs.shape
+    nh, hp = cfg.ssm_heads, cfg.ssm_headdim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    x = xs.reshape(b, s, nh, hp)
+    bm = bs.reshape(b, s, g, n)
+    cm = cs.reshape(b, s, g, n)
+    rep = nh // g
+    bm = jnp.repeat(bm, rep, axis=2)                  # (B,S,H,N)
+    cm = jnp.repeat(cm, rep, axis=2)
+    return x, bm, cm
+
+
+def mamba_forward(h, p, cfg, ctx: ShardCtx):
+    """Training/prefill path over a full sequence. h: (B,S,d)."""
+    z, xs, bs, cs, dt = _project_streams(h, p, cfg, ctx)
+    xs, _ = _causal_conv(xs, p["conv_x"])
+    bs, _ = _causal_conv(bs, p["conv_B"])
+    cs, _ = _causal_conv(cs, p["conv_C"])
+    xs, bs, cs = (jax.nn.silu(t.astype(jnp.float32)).astype(h.dtype)
+                  for t in (xs, bs, cs))
+    x, bm, cm = _to_heads(xs, bs, cs, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = ssd_ops.ssd(x, dt, A, bm, cm, chunk=cfg.ssm_chunk)
+    y = y + x * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(h.shape[0], h.shape[1], cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba_prefill(h, p, cfg, ctx: ShardCtx):
+    """Like forward but also returns the recurrent cache for decode."""
+    z, xs, bs, cs, dt = _project_streams(h, p, cfg, ctx)
+    xs, conv_x_state = _causal_conv(xs, p["conv_x"])
+    bs, conv_b_state = _causal_conv(bs, p["conv_B"])
+    cs, conv_c_state = _causal_conv(cs, p["conv_C"])
+    xs, bs, cs = (jax.nn.silu(t.astype(jnp.float32)).astype(h.dtype)
+                  for t in (xs, bs, cs))
+    x, bm, cm = _to_heads(xs, bs, cs, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, state = ssd_ops.ssd(x, dt, A, bm, cm, chunk=cfg.ssm_chunk)
+    y = y + x * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(h.shape[0], h.shape[1], cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    cache = {"ssm": state,                                 # (B,H,N,P) fp32
+             "conv_x": conv_x_state, "conv_B": conv_b_state,
+             "conv_C": conv_c_state}
+    return y @ p["out_proj"], cache
+
+
+def mamba_decode(h, p, cfg, ctx: ShardCtx, cache):
+    """One-token step. h: (B,1,d). cache: {'ssm','conv_x','conv_B','conv_C'}."""
+    z, xs, bs, cs, dt = _project_streams(h, p, cfg, ctx)
+    xs, cx = _causal_conv(xs, p["conv_x"], cache["conv_x"])
+    bs, cb = _causal_conv(bs, p["conv_B"], cache["conv_B"])
+    cs, cc = _causal_conv(cs, p["conv_C"], cache["conv_C"])
+    xs, bs, cs = (jax.nn.silu(t.astype(jnp.float32)).astype(h.dtype)
+                  for t in (xs, bs, cs))
+    x, bm, cm = _to_heads(xs, bs, cs, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, state = ssd_ops.ssd_decode_step(
+        cache["ssm"], x[:, 0], dt[:, 0], A, bm[:, 0], cm[:, 0])
+    y = y[:, None] + x * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(h.shape[0], 1, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    new_cache = {"ssm": state, "conv_x": cx, "conv_B": cb, "conv_C": cc}
+    return y @ p["out_proj"], new_cache
+
+
+def mamba_cache_shape(cfg, batch: int) -> dict:
+    """Per-layer cache shapes (fp32 state, bf16 conv carries)."""
+    k = cfg.ssm_conv
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    return {
+        "ssm": ((batch, cfg.ssm_heads, n, cfg.ssm_headdim), jnp.float32),
+        "conv_x": ((batch, k - 1, cfg.d_inner), cfg.dtype),
+        "conv_B": ((batch, k - 1, g * n), cfg.dtype),
+        "conv_C": ((batch, k - 1, g * n), cfg.dtype),
+    }

@@ -1,0 +1,96 @@
+"""Multi-head Latent Attention (DeepSeek-V2): the KV cache is a per-token
+low-rank latent ``c_kv`` (kv_lora) plus one shared rope key — ~1/16 the bytes
+of a dense GQA cache at this geometry.
+
+Train/prefill use the decompressed formulation (k/v expanded per head);
+decode uses the *absorbed* formulation: W_uk is folded into the query and
+W_uv into the output, so per-step flops scale with kv_lora, not H·dh·S.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, attention_prefill, attention_train
+from .common import ShardCtx, apply_rope, causal_mask, rms_norm
+
+
+def _split_q(q, cfg):
+    b, s, _ = q.shape
+    h = cfg.n_heads
+    q = q.reshape(b, s, h, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    return q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+
+
+def _latents(h, p, cfg):
+    kv_a = h @ p["wkv_a"]                                   # (B,S,lora+rope)
+    c_kv = rms_norm(kv_a[..., :cfg.kv_lora], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., cfg.kv_lora:]                        # (B,S,rope)
+    return c_kv, k_rope
+
+
+def _decompress(c_kv, p, cfg):
+    b, s, _ = c_kv.shape
+    h = cfg.n_heads
+    k_nope = (c_kv @ p["wk_b"]).reshape(b, s, h, cfg.qk_nope_dim)
+    v = (c_kv @ p["wv_b"]).reshape(b, s, h, cfg.v_head_dim)
+    return k_nope, v
+
+
+def mla_full(hid, p, cfg, ctx: ShardCtx, positions, mode: str):
+    """Train/prefill. hid: (B,S,d). Returns (out, cache_entries)."""
+    b, s, _ = hid.shape
+    nh = cfg.n_heads
+    q_nope, q_rope = _split_q(hid @ p["wq"], cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_rope = _latents(hid, p, cfg)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    k_nope, v = _decompress(c_kv, p, cfg)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)          # (B,S,H,nope+rope)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, nh, cfg.qk_rope_dim))], axis=-1)
+    # pad v up to qk dim for the shared attention helpers? No — helpers accept
+    # differing value dim because out shape follows v.
+    if mode == "train":
+        out = attention_train(q, k, v, causal_mask(s, s), ctx)
+    else:
+        out = attention_prefill(q, k, v, ctx)
+    out = out.reshape(b, s, nh * cfg.v_head_dim) @ p["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode(hid, p, cfg, ctx: ShardCtx, cache, pos):
+    """Absorbed decode. hid: (B,1,d); cache: c_kv (B,Smax,lora),
+    k_rope (B,Smax,rope)."""
+    b = hid.shape[0]
+    nh = cfg.n_heads
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    q_nope, q_rope = _split_q(hid @ p["wq"], cfg)           # (B,1,H,·)
+    q_rope = apply_rope(q_rope, jnp.full((b, 1), pos), cfg.rope_theta)
+
+    # write new latent into the cache
+    c_new, kr_new = _latents(hid, p, cfg)
+    kr_new = apply_rope(kr_new[..., None, :],
+                        jnp.full((b, 1), pos), cfg.rope_theta)[..., 0, :]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+
+    # absorbed scores: q_eff = q_nope @ W_uk  → (B,1,H,lora)
+    wk_b = p["wk_b"].reshape(cfg.kv_lora, nh, cfg.qk_nope_dim)
+    q_eff = jnp.einsum("bqhd,rhd->bqhr", q_nope, wk_b)
+    s_nope = jnp.einsum("bqhr,bkr->bhqk", q_eff, c_kv)
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)
+    s = ((s_nope + s_rope) * scale).astype(jnp.float32)
+    valid = jnp.arange(c_kv.shape[1])[None, None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    pweights = jax.nn.softmax(s, axis=-1).astype(hid.dtype)
+
+    # absorbed values: weighted latent, then expand through W_uv
+    ctx_lat = jnp.einsum("bhqk,bkr->bqhr", pweights, c_kv)   # (B,1,H,lora)
+    wv_b = p["wv_b"].reshape(cfg.kv_lora, nh, cfg.v_head_dim)
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx_lat, wv_b)
+    out = out.reshape(b, 1, nh * cfg.v_head_dim) @ p["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

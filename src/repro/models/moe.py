@@ -1,0 +1,160 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded scatter
+dispatch (GShard-style token dropping, but WITHOUT the O(T·E·C·d) dispatch
+einsum — tokens are scatter-added into per-expert capacity buffers, so the
+dominant HLO flops are the expert matmuls themselves).
+
+Sharding: experts over 'model' (expert parallelism); tokens over DP. GSPMD
+turns the token→expert-buffer scatter into the EP dispatch collective, and
+the gather back into the return path.
+
+Covers: olmoe (64e top-8, no shared), deepseek-v2-lite (64e top-6 + 2 shared
+experts; router-prob normalization over the selected experts).
+
+An auxiliary load-balancing loss (Switch-style) is returned to the trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardCtx
+from .ffn import ffn_forward
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    cap = int(n_tokens * top_k * capacity_factor / n_experts + 0.5)
+    return max(8, -(-cap // 8) * 8)                 # round up to 8
+
+
+def moe_forward(h, p, cfg, ctx: ShardCtx):
+    """h: (B,S,d) -> (B,S,d), aux_loss (scalar fp32).
+
+    p: router (d,E); experts/{wi_gate,wi_up,wo}: (E,d,f),(E,d,f),(E,f,d);
+       optional shared/{wi_gate,wi_up,wo} dense FFN.
+
+    Two dispatch layouts:
+      dense   — global (E,C,d) capacity buffer; the cross-DP scatter turns
+                into an all-reduce of the whole buffer (baseline).
+      chunked — per-data-shard capacity chunks aligned with the batch
+                sharding; scatters stay shard-local and the expert einsum
+                reshards tokens chunk→expert as a true all-to-all
+                (EXPERIMENTS §Perf cell E).
+    """
+    b, s, d = h.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    if getattr(cfg, "moe_chunk_dispatch", False) and ctx.mesh is not None \
+            and ctx.parallelism == "tp":
+        chunks = ctx.mesh.shape["data"]
+        if b % chunks == 0 or (t % chunks == 0 and s % chunks == 0):
+            return _moe_forward_chunked(h, p, cfg, ctx, chunks)
+    cap = moe_capacity(t, e, k, cfg.capacity_factor)
+    x = h.reshape(t, d)
+
+    # --- routing (fp32) ----------------------------------------------------
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)                     # (T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)     # normalize over top-k
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)                                             # (E,)
+    onehot_top1 = jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32)
+    ce = onehot_top1.mean(axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # --- capacity positions (rank of each (token,slot) within its expert) --
+    sel = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)                # (T,k,E)
+    sel_flat = sel.reshape(t * k, e)
+    pos_in_expert = jnp.cumsum(sel_flat, axis=0) - sel_flat             # (T*k,E)
+    pos = (pos_in_expert.reshape(t, k, e) * sel).sum(-1)                # (T,k)
+    keep = pos < cap                                                     # drop overflow
+    dest = jnp.where(keep, expert_idx * cap + pos, e * cap)             # sentinel
+
+    # --- dispatch: scatter tokens into (E*C+1, d) buffers --------------------
+    contrib = jnp.broadcast_to(x[:, None, :], (t, k, d)).reshape(t * k, d)
+    contrib = contrib * keep.reshape(t * k, 1).astype(x.dtype)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest.reshape(-1)].add(contrib)
+    xe = buf[:e * cap].reshape(e, cap, d)
+    xe = ctx.cs(xe, "model", None, None)
+
+    # --- expert FFN (the real flops) ----------------------------------------
+    g = jnp.einsum("ecd,edf->ecf", xe, p["experts"]["wi_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["experts"]["wi_up"])
+    z = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
+    ye = jnp.einsum("ecf,efd->ecd", z, p["experts"]["wo"])
+    ye = ctx.cs(ye, "model", None, None)
+
+    # --- gather back + weighted combine --------------------------------------
+    ye_flat = jnp.concatenate([ye.reshape(e * cap, d),
+                               jnp.zeros((1, d), ye.dtype)], axis=0)
+    back = ye_flat[dest.reshape(-1)].reshape(t, k, d)
+    y = (back.astype(jnp.float32) * gate_vals[..., None]).sum(axis=1)
+    y = y.astype(h.dtype).reshape(b, s, d)
+
+    if "shared" in p:                                  # deepseek shared experts
+        y = y + ffn_forward(h, p["shared"], "swiglu", ctx)
+    return y, aux
+
+
+def _moe_forward_chunked(h, p, cfg, ctx: ShardCtx, chunks: int):
+    """EP dispatch with per-chunk capacity; chunks align with the 'data'
+    batch sharding so routing/scatter are shard-local and GSPMD moves only
+    tokens (all-to-all) between the chunk and expert shardings."""
+    b, s, d = h.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    tc = t // chunks
+    cap = moe_capacity(tc, e, k, cfg.capacity_factor)
+    x = h.reshape(chunks, tc, d)
+    x = ctx.cs(x, "data", None, None)
+
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (X,Tc,E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)             # (X,Tc,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.reshape(t, e).mean(axis=0)
+    onehot_top1 = jax.nn.one_hot(expert_idx[..., 0].reshape(t), e,
+                                 dtype=jnp.float32)
+    aux = e * jnp.sum(me * onehot_top1.mean(axis=0))
+
+    sel = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)        # (X,Tc,k,E)
+    sel_flat = sel.reshape(chunks, tc * k, e)
+    pos = (jnp.cumsum(sel_flat, axis=1) - sel_flat)             # per-chunk rank
+    pos = (pos.reshape(chunks, tc, k, e) * sel).sum(-1)         # (X,Tc,k)
+    keep = pos < cap
+    dest = jnp.where(keep, expert_idx * cap + pos, e * cap)     # (X,Tc,k)
+
+    contrib = jnp.broadcast_to(x[:, :, None, :], (chunks, tc, k, d))
+    contrib = (contrib * keep[..., None].astype(x.dtype)
+               ).reshape(chunks, tc * k, d)
+    buf = jnp.zeros((chunks, e * cap + 1, d), x.dtype)
+    buf = buf.at[jnp.arange(chunks)[:, None],
+                 dest.reshape(chunks, tc * k)].add(contrib)
+    xe = buf[:, :e * cap].reshape(chunks, e, cap, d)
+    # chunk axis on 'data', expert axis on 'model': the reshard that feeds
+    # the expert matmul is the EP all-to-all
+    xe = ctx.cs(xe, "data", "model", None, None)
+
+    g = jnp.einsum("xecd,edf->xecf", xe, p["experts"]["wi_gate"])
+    u = jnp.einsum("xecd,edf->xecf", xe, p["experts"]["wi_up"])
+    z = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
+    ye = jnp.einsum("xecf,efd->xecd", z, p["experts"]["wo"])
+    ye = ctx.cs(ye, "data", "model", None, None)
+
+    ye_flat = jnp.concatenate(
+        [ye.reshape(chunks, e * cap, d),
+         jnp.zeros((chunks, 1, d), ye.dtype)], axis=1)
+    ye_flat = ctx.cs(ye_flat, "data", None, None)               # a2a back
+    back = ye_flat[jnp.arange(chunks)[:, None],
+                   dest.reshape(chunks, tc * k)]
+    back = back.reshape(chunks, tc, k, d)
+    y = (back.astype(jnp.float32) * gate_vals[..., None]).sum(axis=2)
+    y = y.astype(h.dtype).reshape(b, s, d)
+    if "shared" in p:
+        y = y + ffn_forward(h, p["shared"], "swiglu", ctx)
+    return y, aux

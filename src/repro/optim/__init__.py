@@ -1,0 +1,7 @@
+from .adamw import (OptConfig, adamw_init, adamw_update, clip_by_global_norm,
+                    global_norm, opt_state_specs, path_tree_of, warmup_cosine,
+                    zero_spec)
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "global_norm", "opt_state_specs", "path_tree_of", "warmup_cosine",
+           "zero_spec"]

@@ -1,0 +1,23 @@
+"""Shared fixtures. NOTE: XLA_FLAGS device-count forcing must NOT be set here
+— smoke tests and benches see the real single CPU device; only
+launch/dryrun.py (and subprocess-based sharding tests) force 512/8 devices.
+"""
+import os
+import sys
+
+# Make `import repro` work when running pytest from the repo root without
+# installing the package (PYTHONPATH=src is the documented invocation; this
+# is a belt-and-braces fallback).
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture()
+def tmp_log(tmp_path):
+    from repro.core import PartitionedLog
+    log = PartitionedLog(tmp_path / "log")
+    yield log
+    log.close()

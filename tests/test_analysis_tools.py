@@ -1,0 +1,137 @@
+"""Unit tests for the roofline-analysis machinery: the trip-count-aware
+jaxpr cost walker and the HLO collective parser (these produce the §Roofline
+numbers, so they get first-class tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (_computation_depths, _group_size,
+                                       _multiplier, _shape_bytes,
+                                       collective_bytes)
+from repro.launch.jaxpr_cost import Cost, loop_trip_table, traced_cost
+
+
+# ---------------------------------------------------------------------------
+# jaxpr cost walker
+# ---------------------------------------------------------------------------
+def test_single_matmul_exact():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = traced_cost(lambda x, y: x @ y, a, b)
+    assert c.dot_flops == 2 * 64 * 128 * 32
+    assert c.bytes == 4 * (64 * 128 + 128 * 32 + 64 * 32)
+
+
+def test_scan_multiplies_by_length():
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def f(w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, w, None, length=7)
+        return out
+    c = traced_cost(f, w)
+    assert c.dot_flops == 7 * 2 * 32 ** 3
+
+
+def test_nested_scan_and_jit():
+    w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+
+    @jax.jit
+    def f(w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        out, _ = jax.lax.scan(outer, w, None, length=5)
+        return out
+    c = traced_cost(f, w)
+    assert c.dot_flops == 5 * 3 * 2 * 16 ** 3
+
+
+def test_grad_and_remat_counted():
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+
+    def loss(w, x):
+        @jax.checkpoint
+        def layer(h):
+            return jnp.tanh(h @ w)
+        return jnp.sum(layer(layer(x)))
+
+    fwd = traced_cost(loss, w, x)
+    both = traced_cost(jax.grad(loss), w, x)
+    # backward adds dgrad+wgrad (2x fwd) plus remat recompute (1x) => ~4x
+    assert both.dot_flops >= 3.5 * fwd.dot_flops
+
+
+def test_int8_dequant_taint_halves_operand_bytes():
+    q = jax.ShapeDtypeStruct((256, 128), jnp.int8)
+    s = jax.ShapeDtypeStruct((256, 1), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 256), jnp.bfloat16)
+
+    def f(x, q, s):
+        deq = (q.astype(jnp.float32) * s).astype(jnp.bfloat16)
+        return x @ deq
+    c = traced_cost(f, x, q, s)
+    # dequantized operand counted at 1 B/elt, not 2 (bf16)
+    expected = (8 * 256) * 2 + (256 * 128) * 1 + (8 * 128) * 2
+    assert c.bytes == expected
+
+
+def test_trip_table_shapes():
+    t = loop_trip_table("train", num_layers=22, num_microbatches=16)
+    assert t == {1: 16.0, 2: 22.0, 3: 1.0}
+    t = loop_trip_table("prefill", num_layers=32, kv_blocks=64)
+    assert t == {1: 32.0, 2: 64.0}
+    assert loop_trip_table("decode", num_layers=40) == {1: 40.0}
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser
+# ---------------------------------------------------------------------------
+HLO = """\
+HloModule test
+
+%region_0.10 (arg.1: (f32[4], s32[])) -> (f32[4], s32[]) {
+  %ag = f32[8,16]{1,0} all-gather(%p), channel_id=1, replica_groups=[4,4]<=[16], dimensions={0}
+  ROOT %t = tuple()
+}
+
+%region_1.20 (arg.2: (f32[4], s32[])) -> pred[] {
+  ROOT %c = pred[] constant(true)
+}
+
+ENTRY %main (p0: f32[4]) -> f32[4] {
+  %w = (f32[4], s32[]) while(%init), condition=%region_1.20, body=%region_0.10
+  %ar = f32[32,32]{1,0} all-reduce(%x), channel_id=2, replica_groups=[2,8]<=[16], to_apply=%add
+  ROOT %r = f32[4] get-tuple-element(%w), index=0
+}
+"""
+
+
+def test_shape_bytes_and_multipliers():
+    assert _shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert _shape_bytes("(bf16[4,4], f32[2])") == 32 + 8
+    assert _multiplier("all-reduce", 4) == pytest.approx(2 * 3 / 4)
+    assert _multiplier("all-gather", 8) == pytest.approx(7 / 8)
+    assert _multiplier("reduce-scatter", 8) == 7.0
+    assert _multiplier("all-reduce", 1) == 0.0
+
+
+def test_computation_depths_from_while():
+    depths = _computation_depths(HLO)
+    assert depths["%main"] == 0
+    assert depths["%region_0.10"] == 1      # while body
+
+
+def test_collective_attribution_with_trips():
+    out = collective_bytes(HLO, 16, trip_table={1: 10.0})
+    ag = out["ops"]["all-gather"]
+    # inside the loop body: x10 trips, group 4 → (4-1)/4 ring
+    assert ag["weighted"] == pytest.approx(8 * 16 * 4 * (3 / 4) * 10)
+    ar = out["ops"]["all-reduce"]            # entry: 1 trip, group 8
+    assert ar["weighted"] == pytest.approx(32 * 32 * 4 * 2 * (7 / 8))
+    assert _group_size("replica_groups=[4,4]<=[16]", 99) == 4

@@ -1,0 +1,113 @@
+"""Processor semantics: dedup, route, enrich, merge, filter, sinks."""
+import json
+
+from repro.core import (BloomFilter, CollectSink, ContentFilter,
+                        DetectDuplicate, ExecuteScript, FileSink,
+                        LookupEnrich, MergeContent, PartitionRecords,
+                        RouteOnAttribute, make_flowfile)
+from repro.core.processor import REL_DROP, REL_FAILURE, REL_SUCCESS
+
+
+def run(proc, items):
+    out = list(proc.on_trigger(list(items)))
+    out.extend(proc.final_flush())
+    return out
+
+
+def test_detect_duplicate_exact():
+    d = DetectDuplicate(mode="exact")
+    items = [make_flowfile(b"a"), make_flowfile(b"b"), make_flowfile(b"a")]
+    rels = [rel for rel, _ in run(d, items)]
+    assert rels == ["unique", "unique", "duplicate"]
+
+
+def test_detect_duplicate_bloom_no_false_negatives():
+    d = DetectDuplicate(mode="bloom", expected_items=10_000)
+    first = [make_flowfile(f"m{i}".encode()) for i in range(1000)]
+    repeat = [make_flowfile(f"m{i}".encode()) for i in range(1000)]
+    out1 = run(d, first)
+    out2 = run(d, repeat)
+    # every true duplicate is caught (no false negatives by construction)
+    assert all(rel == "duplicate" for rel, _ in out2)
+    # false-positive rate on uniques is small
+    fp = sum(1 for rel, _ in out1 if rel == "duplicate")
+    assert fp < 20
+
+
+def test_bloom_filter_properties():
+    b = BloomFilter(expected_items=1000, fp_rate=1e-3)
+    keys = [f"k{i}".encode() for i in range(500)]
+    for k in keys:
+        b.add(k)
+    assert all(k in b for k in keys)
+
+
+def test_route_on_attribute():
+    r = RouteOnAttribute("route", {
+        "finance": lambda ff: ff.attributes.get("keyword") == "finance",
+        "sports": lambda ff: ff.attributes.get("keyword") == "sports",
+    })
+    outs = run(r, [make_flowfile(b"1", keyword="finance"),
+                   make_flowfile(b"2", keyword="sports"),
+                   make_flowfile(b"3", keyword="other")])
+    assert [rel for rel, _ in outs] == ["finance", "sports", "unmatched"]
+
+
+def test_execute_script_drop_and_failure():
+    def fn(ff):
+        if ff.content == b"bad":
+            raise ValueError("malformed")
+        if ff.content == b"noise":
+            return None
+        return ff.with_attributes(clean="1")
+    p = ExecuteScript("script", fn)
+    outs = run(p, [make_flowfile(b"ok"), make_flowfile(b"noise"),
+                   make_flowfile(b"bad")])
+    assert [rel for rel, _ in outs] == [REL_SUCCESS, REL_DROP, REL_FAILURE]
+    assert outs[2][1].attributes["error"] == "ValueError"
+
+
+def test_content_filter_language():
+    p = ContentFilter("lang", lambda ff: ff.attributes.get("lang") == "en")
+    outs = run(p, [make_flowfile(b"x", lang="en"), make_flowfile(b"y", lang="de")])
+    assert [rel for rel, _ in outs] == [REL_SUCCESS, REL_DROP]
+
+
+def test_lookup_enrich():
+    table = {"reuters": {"region": "uk", "tier": "1"}}
+    p = LookupEnrich("enrich", table,
+                     key_fn=lambda ff: ff.attributes.get("origin", ""))
+    outs = run(p, [make_flowfile(b"a", origin="reuters"),
+                   make_flowfile(b"b", origin="unknown")])
+    assert outs[0][1].attributes["region"] == "uk"
+    assert "region" not in outs[1][1].attributes      # pass-through on miss
+
+
+def test_merge_content_bundles():
+    m = MergeContent(max_records=3, max_latency_sec=10)
+    outs = run(m, [make_flowfile(f"r{i}".encode()) for i in range(7)])
+    assert [rel for rel, _ in outs] == [REL_SUCCESS] * 3
+    assert outs[0][1].content == b"r0\nr1\nr2"
+    assert outs[2][1].content == b"r6"                # final flush remainder
+    assert outs[0][1].attributes["merge.count"] == "3"
+
+
+def test_partition_records_stamps_key():
+    p = PartitionRecords("pr", key_fn=lambda ff: ff.attributes["origin"])
+    outs = run(p, [make_flowfile(b"x", origin="ap")])
+    assert outs[0][1].attributes["partition.key"] == "ap"
+
+
+def test_file_sink_writes_uuid_files(tmp_path):
+    s = FileSink("hdfs", tmp_path / "landing")
+    items = [make_flowfile(f"doc{i}".encode()) for i in range(4)]
+    run(s, items)
+    files = list((tmp_path / "landing").iterdir())
+    assert len(files) == 4
+    assert sorted(f.read_bytes() for f in files) == [b"doc0", b"doc1", b"doc2", b"doc3"]
+
+
+def test_collect_sink():
+    s = CollectSink()
+    run(s, [make_flowfile(b"z")])
+    assert s.items[0].content == b"z"

@@ -19,9 +19,10 @@ from repro.data import StreamingDataLoader
 def _fill(tmp: Path, n_docs: int, partitions: int = 8) -> PartitionedLog:
     log = PartitionedLog(tmp / "log")
     log.create_topic("corpus", partitions=partitions)
-    for i, doc in enumerate(corpus_documents(n_docs)):
-        k, v = make_flowfile(doc).to_record()
-        log.append("corpus", k, v, partition=i % partitions)
+    records = [make_flowfile(doc).to_record()
+               for doc in corpus_documents(n_docs)]
+    for p in range(partitions):
+        log.append_batch("corpus", records[p::partitions], partition=p)
     log.flush(fsync=False)
     return log
 
@@ -42,12 +43,17 @@ def run(n_docs: int = 20_000, batch: int = 8, seq: int = 1024,
             get = lambda: loader.get_prefetched(timeout=5)
         else:
             get = lambda: loader.next_batch(timeout_polls=3)
+        # clock stops at the LAST delivered batch: the trailing get() that
+        # detects end-of-stream burns its full timeout waiting on an empty
+        # queue, which would otherwise dominate the prefetch variant's wall
+        t_last = t0
         while True:
             b = get()
             if b is None:
                 break
             tokens += b.size
-        dt = time.monotonic() - t0
+            t_last = time.monotonic()
+        dt = max(t_last - t0, 1e-9)
         if prefetch:
             loader.stop()
         log.close()

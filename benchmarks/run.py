@@ -1,7 +1,10 @@
 """Benchmark harness — one bench per paper table/figure + the roofline table.
 
 Prints ``name,value,derived`` CSV rows (and a human table for the roofline
-when dry-run artifacts exist).
+when dry-run artifacts exist), and writes a machine-readable throughput
+snapshot to ``BENCH_ingest.json`` at the repo root so future PRs can regress
+against a perf trajectory (records/sec per ingest variant, tokens/sec per
+loader variant).
 
   bench_ingest_throughput   paper Fig. 3 (ingest → HDFS/log landing rate)
   bench_backpressure        paper Fig. 5 (sink outage, clamp at 10k, replay)
@@ -15,26 +18,52 @@ import json
 import sys
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_REPO_ROOT / "src"))
+sys.path.insert(0, str(_REPO_ROOT))
 
 from benchmarks import (bench_backpressure, bench_ingest_throughput,
                         bench_loader, bench_recovery, roofline)
 
+SNAPSHOT_PATH = _REPO_ROOT / "BENCH_ingest.json"
+
 
 def emit(rows):
     for r in rows:
+        r = dict(r)
         name = r.pop("name")
         for k, v in r.items():
             print(f"{name},{k},{v}")
 
 
+def write_snapshot(ingest_rows, loader_rows,
+                   path: Path = SNAPSHOT_PATH) -> None:
+    """Persist the throughput numbers future PRs regress against."""
+    snapshot = {
+        "bench_ingest_throughput": {
+            r["name"]: {"records_per_sec": r["records_per_sec"],
+                        "records": r["records"],
+                        "wall_sec": r["wall_sec"]}
+            for r in ingest_rows},
+        "bench_loader": {
+            r["name"]: {"tokens_per_sec": r["tokens_per_sec"],
+                        "tokens": r["tokens"],
+                        "wall_sec": r["wall_sec"]}
+            for r in loader_rows},
+    }
+    path.write_text(json.dumps(snapshot, indent=2) + "\n")
+
+
 def main() -> None:
     print("bench,metric,value")
-    emit(bench_ingest_throughput.main())
+    ingest_rows = bench_ingest_throughput.main()
+    emit(ingest_rows)
     emit(bench_backpressure.main())
     emit(bench_recovery.main())
-    emit(bench_loader.main())
+    loader_rows = bench_loader.main()
+    emit(loader_rows)
+    write_snapshot(ingest_rows, loader_rows)
+    print(f"snapshot,written,{SNAPSHOT_PATH}")
     art = roofline.ART_DIR
     if art.exists():
         for mesh in ("single", "multi"):

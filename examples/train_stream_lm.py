@@ -27,9 +27,10 @@ def build_corpus(root: Path, n_docs: int) -> PartitionedLog:
     (examples/news_ingestion.py); here we fill it directly."""
     log = PartitionedLog(root / "log")
     log.create_topic("articles", partitions=8)
-    for i, doc in enumerate(corpus_documents(n_docs)):
-        k, v = make_flowfile(doc, text=doc).to_record()
-        log.append("articles", k, v, partition=i % 8)
+    records = [make_flowfile(doc, text=doc).to_record()
+               for doc in corpus_documents(n_docs)]
+    for p in range(8):                    # batched append: one write per chunk
+        log.append_batch("articles", records[p::8], partition=p)
     log.flush(fsync=False)
     return log
 

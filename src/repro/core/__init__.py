@@ -10,8 +10,8 @@ cross-cutting: Connection backpressure, ProvenanceRepository lineage, metrics.
 """
 from .connection import (BackpressureTimeout, Connection, RateThrottle,
                          DEFAULT_OBJECT_THRESHOLD, DEFAULT_SIZE_THRESHOLD)
-from .delivery import (Consumer, ConsumerGroup, OffsetStore, StaleGeneration,
-                       range_assign)
+from .delivery import (Consumer, ConsumerGroup, OffsetStore, Producer,
+                       StaleGeneration, range_assign)
 from .flow import FlowError, FlowGraph
 from .flowfile import FlowFile, make_flowfile
 from .log import CorruptRecord, LogRecord, PartitionedLog
@@ -30,7 +30,8 @@ __all__ = [
     "DEFAULT_OBJECT_THRESHOLD", "DEFAULT_SIZE_THRESHOLD", "DetectDuplicate",
     "ExecuteScript", "FileSink", "FirehoseSource", "FlowError", "FlowFile",
     "FlowGraph", "LogRecord", "LookupEnrich", "MergeContent", "OffsetStore",
-    "PartitionRecords", "PartitionedLog", "Processor", "ProvenanceEvent",
+    "PartitionRecords", "PartitionedLog", "Processor", "Producer",
+    "ProvenanceEvent",
     "ProvenanceRepository", "PublishToLog", "RateThrottle", "REL_DROP",
     "REL_FAILURE", "REL_SUCCESS", "RouteOnAttribute", "RssAggregatorSource",
     "Source", "StaleGeneration", "Throttle", "WebSocketSource",

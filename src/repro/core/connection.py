@@ -14,6 +14,11 @@ source processor. Queued data is never dropped — when the downstream recovers
 Optional prioritizers reorder delivery (paper §II: "prioritization of data
 sources"); a rate throttle implements the paper's rate-throttling example of
 backpressure.
+
+Hot path: when no prioritizer is installed (the overwhelmingly common case)
+the queue is a plain ``deque`` — no heap sift, no priority-tuple allocation
+per record. ``offer_batch``/``poll_batch`` move whole batches under a single
+lock acquisition, pairing with the log's ``append_batch`` end to end.
 """
 from __future__ import annotations
 
@@ -21,12 +26,17 @@ import heapq
 import itertools
 import threading
 import time
-from typing import Callable, Optional
+from collections import deque
+from typing import Callable, Optional, Sequence
 
 from .flowfile import FlowFile
 
 DEFAULT_OBJECT_THRESHOLD = 10_000          # NiFi default (paper §IV.C)
 DEFAULT_SIZE_THRESHOLD = 1 << 30           # 1 GB  (paper §IV.C)
+
+#: minimum sleep while waiting on the rate throttle (prevents busy-spin when
+#: the token deficit rounds to a zero-length sleep)
+_MIN_THROTTLE_SLEEP = 1e-4
 
 
 class BackpressureTimeout(Exception):
@@ -34,7 +44,12 @@ class BackpressureTimeout(Exception):
 
 
 class Connection:
-    """Thread-safe bounded FlowFile queue with dual backpressure thresholds."""
+    """Thread-safe bounded FlowFile queue with dual backpressure thresholds.
+
+    FIFO by default (deque fast path); installing a ``prioritizer`` switches
+    to a heap ordered by ``(priority, arrival)``. Both paths expose identical
+    threshold semantics and ``snapshot()`` stats.
+    """
 
     def __init__(self, name: str,
                  object_threshold: int = DEFAULT_OBJECT_THRESHOLD,
@@ -46,7 +61,9 @@ class Connection:
         self.object_threshold = object_threshold
         self.size_threshold = size_threshold
         self._prioritizer = prioritizer
+        # FIFO deque unless a prioritizer demands heap ordering
         self._heap: list[tuple[float, int, FlowFile]] = []
+        self._fifo: deque[FlowFile] = deque()
         self._fifo_counter = itertools.count()
         self._bytes = 0
         self._lock = threading.Lock()
@@ -58,10 +75,35 @@ class Connection:
         self.backpressure_engagements = 0
         self._hwm_objects = 0
 
+    # -- queue internals (call with lock held) --------------------------------
+    def _count_locked(self) -> int:
+        return len(self._heap) if self._prioritizer else len(self._fifo)
+
+    def _push_locked(self, ff: FlowFile) -> None:
+        if self._prioritizer:
+            heapq.heappush(self._heap,
+                           (self._prioritizer(ff), next(self._fifo_counter), ff))
+        else:
+            self._fifo.append(ff)
+        self._bytes += ff.size
+        self.total_in += 1
+        n = self._count_locked()
+        if n > self._hwm_objects:
+            self._hwm_objects = n
+
+    def _pop_locked(self) -> FlowFile:
+        if self._prioritizer:
+            _, _, ff = heapq.heappop(self._heap)
+        else:
+            ff = self._fifo.popleft()
+        self._bytes -= ff.size
+        self.total_out += 1
+        return ff
+
     # -- state ---------------------------------------------------------------
     def __len__(self) -> int:
         with self._lock:
-            return len(self._heap)
+            return self._count_locked()
 
     @property
     def queued_bytes(self) -> int:
@@ -74,7 +116,7 @@ class Connection:
             return self._hwm_objects
 
     def _full_locked(self) -> bool:
-        return (len(self._heap) >= self.object_threshold
+        return (self._count_locked() >= self.object_threshold
                 or self._bytes >= self.size_threshold)
 
     def is_full(self) -> bool:
@@ -102,22 +144,55 @@ class Connection:
                     if remaining <= 0:
                         raise BackpressureTimeout(
                             f"connection {self.name!r} full "
-                            f"({len(self._heap)} objects / {self._bytes} B)")
+                            f"({self._count_locked()} objects / {self._bytes} B)")
                 self._not_full.wait(remaining)
-            prio = self._prioritizer(ff) if self._prioritizer else 0.0
-            heapq.heappush(self._heap, (prio, next(self._fifo_counter), ff))
-            self._bytes += ff.size
-            self.total_in += 1
-            self._hwm_objects = max(self._hwm_objects, len(self._heap))
+            self._push_locked(ff)
             self._not_empty.notify()
             return True
+
+    def offer_batch(self, ffs: Sequence[FlowFile], block: bool = True,
+                    timeout: float | None = None) -> int:
+        """Enqueue up to ``len(ffs)`` records under one lock acquisition.
+
+        Returns the number accepted (always ``len(ffs)`` when ``block`` and
+        no ``timeout``). Unlike ``offer`` this never raises on timeout — the
+        caller retries the unaccepted suffix, so partial progress survives
+        shutdown checks. Backpressure engages per stall, not per record."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        accepted = 0
+        with self._not_full:
+            engaged = False
+            for ff in ffs:
+                while self._full_locked():
+                    if not engaged:
+                        self.backpressure_engagements += 1
+                        engaged = True
+                    if not block:
+                        if accepted:
+                            self._not_empty.notify_all()
+                        return accepted
+                    # wake consumers before sleeping: they drain the records
+                    # already pushed and free space for the rest of the batch
+                    if accepted:
+                        self._not_empty.notify_all()
+                    remaining = None
+                    if deadline is not None:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            return accepted
+                    self._not_full.wait(remaining)
+                self._push_locked(ff)
+                accepted += 1
+            if accepted:
+                self._not_empty.notify_all()
+            return accepted
 
     # -- consumer side -------------------------------------------------------
     def poll(self, block: bool = True, timeout: float | None = None
              ) -> FlowFile | None:
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._not_empty:
-            while not self._heap:
+            while not self._count_locked():
                 if not block:
                     return None
                 remaining = None
@@ -126,9 +201,7 @@ class Connection:
                     if remaining <= 0:
                         return None
                 self._not_empty.wait(remaining)
-            _, _, ff = heapq.heappop(self._heap)
-            self._bytes -= ff.size
-            self.total_out += 1
+            ff = self._pop_locked()
             self._not_full.notify()
             return ff
 
@@ -141,11 +214,8 @@ class Connection:
             return out
         out.append(first)
         with self._not_empty:
-            while self._heap and len(out) < max_items:
-                _, _, ff = heapq.heappop(self._heap)
-                self._bytes -= ff.size
-                self.total_out += 1
-                out.append(ff)
+            while self._count_locked() and len(out) < max_items:
+                out.append(self._pop_locked())
             if out:
                 self._not_full.notify_all()
         return out
@@ -154,7 +224,7 @@ class Connection:
         with self._lock:
             return {
                 "name": self.name,
-                "queued_objects": len(self._heap),
+                "queued_objects": self._count_locked(),
                 "queued_bytes": self._bytes,
                 "object_threshold": self.object_threshold,
                 "size_threshold": self.size_threshold,
@@ -179,19 +249,27 @@ class RateThrottle:
         self._last = time.monotonic()
         self._lock = threading.Lock()
 
+    def _refill_locked(self) -> None:
+        now = time.monotonic()
+        self._tokens = min(self.capacity,
+                           self._tokens + (now - self._last) * self.rate)
+        self._last = now
+
     def try_acquire(self, n: int = 1) -> bool:
         with self._lock:
-            now = time.monotonic()
-            self._tokens = min(self.capacity,
-                               self._tokens + (now - self._last) * self.rate)
-            self._last = now
+            self._refill_locked()
             if self._tokens >= n:
                 self._tokens -= n
                 return True
             return False
 
     def acquire(self, n: int = 1) -> None:
-        while not self.try_acquire(n):
+        while True:
+            # one locked section: refill, take, or compute the exact deficit
             with self._lock:
-                deficit = max(0.0, n - self._tokens)
-            time.sleep(min(0.1, deficit / self.rate))
+                self._refill_locked()
+                if self._tokens >= n:
+                    self._tokens -= n
+                    return
+                deficit = n - self._tokens
+            time.sleep(min(0.1, max(deficit / self.rate, _MIN_THROTTLE_SLEEP)))

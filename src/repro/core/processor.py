@@ -41,6 +41,12 @@ class Processor:
     relationships: tuple[str, ...] = (REL_SUCCESS,)
     #: max records pulled per trigger (batching amortizes queue locks)
     batch_size: int = 256
+    #: source batching window, evaluated at each arrival: records yielded
+    #: back-to-back within this window batch up; a record that arrives after
+    #: a slower pull is delivered immediately. (A burst followed by a total
+    #: stall leaves the burst's tail buffered until the next yield or
+    #: end-of-stream — bounding that would need a flush timer thread.)
+    source_linger_sec: float = 0.05
 
     def __init__(self, name: str) -> None:
         self.name = name
@@ -101,47 +107,89 @@ class _Worker(threading.Thread):
 
     # ------------------------------------------------------------------
     def _emit(self, rel: str, ff: FlowFile) -> None:
+        self._emit_batch(rel, [ff])
+
+    def _emit_batch(self, rel: str, ffs: list[FlowFile]) -> None:
+        """Route a same-relationship batch downstream: provenance per record,
+        but one ``offer_batch`` (single lock/notify) per connection."""
         node = self.node
         proc = node.processor
+        prov = self.graph.provenance
         if rel == REL_DROP:
-            self.graph.provenance.record("DROP", ff, proc.name)
-            proc.stats.dropped += 1
+            prov.record_batch("DROP", ffs, proc.name)
+            proc.stats.dropped += len(ffs)
             return
         conns = node.outputs.get(rel)
         if not conns:
             # unwired relationship == auto-terminated (NiFi semantics)
-            self.graph.provenance.record("DROP", ff, proc.name,
-                                         details=f"auto-terminated:{rel}")
-            proc.stats.dropped += 1
+            prov.record_batch("DROP", ffs, proc.name,
+                              details=f"auto-terminated:{rel}")
+            proc.stats.dropped += len(ffs)
             return
-        self.graph.provenance.record("ROUTE", ff, proc.name, details=rel)
+        prov.record_batch("ROUTE", ffs, proc.name, details=rel)
+        delivered = len(ffs)
         for conn in conns:
-            while not self.graph.stopping.is_set():
-                try:
-                    if conn.offer(ff, block=True, timeout=0.25):
-                        break
-                except Exception:
-                    raise
-            else:
-                return
-        proc.stats.out_records += 1
-        proc.stats.out_bytes += ff.size
+            offered = 0
+            while offered < len(ffs) and not self.graph.stopping.is_set():
+                offered += conn.offer_batch(ffs[offered:], block=True,
+                                            timeout=0.25)
+            delivered = min(delivered, offered)
+        proc.stats.out_records += delivered
+        proc.stats.out_bytes += sum(ff.size for ff in ffs[:delivered])
+
+    def _emit_all(self, outputs: Iterable[tuple[str, FlowFile]]) -> None:
+        """Group a trigger's outputs by relationship (order preserved within
+        each relationship) and emit each group as one batch."""
+        by_rel: dict[str, list[FlowFile]] = {}
+        for rel, ff in outputs:
+            by_rel.setdefault(rel, []).append(ff)
+        for rel, ffs in by_rel.items():
+            self._emit_batch(rel, ffs)
 
     def _run_source(self) -> None:
         node = self.node
         proc = node.processor
         proc.on_start()
         assert isinstance(proc, Source)
-        for ff in proc.records():
-            if self.graph.stopping.is_set():
+        batch: list[FlowFile] = []
+
+        def trigger(batch: list[FlowFile]) -> None:
+            self.graph.provenance.record_batch("CREATE", batch, proc.name)
+            proc.stats.in_records += len(batch)
+            proc.stats.in_bytes += sum(ff.size for ff in batch)
+            self._emit_all(proc.on_trigger(batch))
+
+        batch_t0 = 0.0
+        it = iter(proc.records())
+        pull_was_slow = True     # deliver the first record immediately
+        while True:
+            t_pull = time.monotonic()
+            try:
+                ff = next(it)
+            except StopIteration:
                 break
-            self.graph.provenance.record("CREATE", ff, proc.name)
-            proc.stats.in_records += 1
-            proc.stats.in_bytes += ff.size
-            for rel, out in proc.on_trigger([ff]):
-                self._emit(rel, out)
-        for rel, out in proc.final_flush():
-            self._emit(rel, out)
+            now = time.monotonic()
+            # a live source (yields separated by real time) degrades to
+            # per-record delivery; only back-to-back yields batch up. The
+            # residual worst case is a fast burst followed by a long stall:
+            # the burst's tail waits for the next yield or end-of-stream.
+            pull_was_slow = (pull_was_slow
+                             or now - t_pull >= proc.source_linger_sec)
+            if self.graph.stopping.is_set():
+                batch.clear()
+                break
+            if not batch:
+                batch_t0 = now
+            batch.append(ff)
+            if (len(batch) >= proc.batch_size
+                    or pull_was_slow
+                    or now - batch_t0 >= proc.source_linger_sec):
+                trigger(batch)
+                batch = []
+                pull_was_slow = False
+        if batch:
+            trigger(batch)
+        self._emit_all(proc.final_flush())
         proc.on_stop()
 
     def _run_interior(self) -> None:
@@ -157,13 +205,10 @@ class _Worker(threading.Thread):
                 if (upstream_done and len(conn) == 0) or self.graph.stopping.is_set():
                     break
                 continue
-            for ff in batch:
-                proc.stats.in_records += 1
-                proc.stats.in_bytes += ff.size
-            for rel, out in proc.on_trigger(batch):
-                self._emit(rel, out)
-        for rel, out in proc.final_flush():
-            self._emit(rel, out)
+            proc.stats.in_records += len(batch)
+            proc.stats.in_bytes += sum(ff.size for ff in batch)
+            self._emit_all(proc.on_trigger(batch))
+        self._emit_all(proc.final_flush())
         proc.on_stop()
 
 

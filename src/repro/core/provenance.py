@@ -64,11 +64,11 @@ class ProvenanceRepository:
         if event_type not in self._counts:
             raise ValueError(f"unknown provenance event type {event_type!r}")
         if self.route_sample > 1 and event_type in ("ROUTE", "TRANSFORM"):
-            self._route_seen += 1
-            if self._route_seen % self.route_sample:
-                with self._lock:
+            with self._lock:
+                self._route_seen += 1
+                if self._route_seen % self.route_sample:
                     self._counts[event_type] += 1   # counts stay exact
-                return
+                    return
         ev = ProvenanceEvent(event_type=event_type,
                              flowfile_uuid=flowfile.uuid,
                              lineage_id=flowfile.lineage_id,
@@ -78,6 +78,34 @@ class ProvenanceRepository:
             self._counts[event_type] += 1
             if self._spill is not None:
                 self._spill.write(ev.to_json() + "\n")
+
+    def record_batch(self, event_type: str, flowfiles, component: str,
+                     details: str = "") -> None:
+        """Record one event per FlowFile under a single lock acquisition.
+
+        The hot-path variant: a contended per-event lock forces a thread
+        context switch per record across the whole flow graph; batching keeps
+        the repository off the ingest critical path (the paper flags the
+        provenance repo as a performance governor)."""
+        if event_type not in self._counts:
+            raise ValueError(f"unknown provenance event type {event_type!r}")
+        n_total = len(flowfiles)
+        with self._lock:
+            if self.route_sample > 1 and event_type in ("ROUTE", "TRANSFORM"):
+                start = self._route_seen
+                self._route_seen += n_total
+                flowfiles = [ff for i, ff in enumerate(flowfiles, start + 1)
+                             if i % self.route_sample == 0]
+            evs = [ProvenanceEvent(event_type=event_type,
+                                   flowfile_uuid=ff.uuid,
+                                   lineage_id=ff.lineage_id,
+                                   component=component, details=details)
+                   for ff in flowfiles]
+            self._events.extend(evs)
+            self._counts[event_type] += n_total      # counts stay exact
+            if self._spill is not None:
+                for ev in evs:
+                    self._spill.write(ev.to_json() + "\n")
 
     # -- queries (paper: troubleshooting / optimization / replay points) ----
     def lineage(self, lineage_id: str) -> list[ProvenanceEvent]:

@@ -29,7 +29,9 @@ _LANGS = ("en", "en", "en", "fr", "de", "ja", "es")   # en-heavy mix
 
 
 def _sentence(rng: random.Random, n: int) -> str:
-    return " ".join(rng.choice(_WORDS) for _ in range(n))
+    # one choices() call per sentence, not one choice() per word — the
+    # sources must outrun the fabric they feed
+    return " ".join(rng.choices(_WORDS, k=n))
 
 
 def synth_article(rng: random.Random, idx: int, source: str) -> dict:

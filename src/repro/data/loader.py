@@ -22,8 +22,9 @@ the loader produces the full global batch and the runtime shards it by
 """
 from __future__ import annotations
 
-import queue
 import threading
+import time
+from collections import deque
 from typing import Callable
 
 import numpy as np
@@ -40,6 +41,8 @@ class StreamingDataLoader:
                  tokenizer: ByteTokenizer | None = None,
                  text_fn: Callable[[FlowFile], str] | None = None,
                  prefetch_batches: int = 4,
+                 prefetch_chunk: int | None = None,
+                 prefetch_linger_sec: float = 0.05,
                  reader_threads: int = 2,
                  poll_records: int = 64) -> None:
         self.consumer = consumer
@@ -51,9 +54,22 @@ class StreamingDataLoader:
         self._rows: list[np.ndarray] = []
         self._batches_emitted = 0
         self.poll_records = poll_records
-        # host→device prefetch queue with backpressure (object threshold)
-        self._prefetch = Connection("loader-prefetch",
-                                    object_threshold=max(1, prefetch_batches))
+        # host→device prefetch queue with backpressure. The assembler ships
+        # *chunks* of up to ``prefetch_chunk`` batches per queue envelope:
+        # the CPU-bound assembler thread only yields the GIL every switch
+        # interval, so each queue handoff costs the consumer a scheduling
+        # quantum — amortize it over many batches. ``prefetch_batches`` still
+        # bounds the number of *batches* buffered: the queue's object
+        # threshold counts envelopes, sized so envelopes × chunk ≈
+        # prefetch_batches. ``prefetch_linger_sec`` bounds the latency a
+        # partial chunk may wait.
+        prefetch_batches = max(1, prefetch_batches)
+        self._chunk_batches = (min(prefetch_batches, 8) if prefetch_chunk
+                               is None else max(1, prefetch_chunk))
+        depth = -(-prefetch_batches // self._chunk_batches)  # ceil div
+        self._prefetch = Connection("loader-prefetch", object_threshold=depth)
+        self._chunk_linger = prefetch_linger_sec
+        self._drained: deque[np.ndarray] = deque()
         self._reader_threads = reader_threads
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
@@ -65,10 +81,24 @@ class StreamingDataLoader:
     # restore story — deterministic single-threaded batch assembly).
     # ------------------------------------------------------------------
     def _ingest_records(self, records) -> None:
-        for rec in records:
-            ff = FlowFile.from_record(rec.key, rec.value)
-            ids = self.tokenizer.encode(self.text_fn(ff))
-            self._rows.extend(self.packer.add_document(ids))
+        """Tokenize + pack a whole poll batch at once: one ``encode_batch``
+        over all documents and one reshape in the packer, instead of
+        per-document Python token loops. Falls back to the per-document path
+        for pluggable tokenizers without ``encode_batch``. Row output is
+        byte-identical to the sequential path (same concatenation order)."""
+        if not records:
+            return
+        texts = [self.text_fn(FlowFile.from_record(rec.key, rec.value))
+                 for rec in records]
+        encode_batch = getattr(self.tokenizer, "encode_batch", None)
+        if encode_batch is None:
+            for text in texts:
+                self._rows.extend(
+                    self.packer.add_document(self.tokenizer.encode(text)))
+            return
+        rows = self.packer.add_tokens(encode_batch(texts))
+        if len(rows):
+            self._rows.extend(rows)
 
     def next_batch(self, timeout_polls: int = 10_000) -> np.ndarray | None:
         """Assemble one (batch_size, seq_len+1) batch synchronously.
@@ -102,17 +132,30 @@ class StreamingDataLoader:
         t.start()
 
     def _assembler(self) -> None:
+        chunk: list[np.ndarray] = []
+        chunk_t0 = 0.0
         while not self._stop.is_set():
             batch = self.next_batch(timeout_polls=50)
-            if batch is None:
-                if self._stop.is_set():
-                    break
-                continue
-            self._prefetch.offer(_BatchEnvelope(batch), block=True)
+            now = time.monotonic()
+            if batch is not None:
+                if not chunk:
+                    chunk_t0 = now
+                chunk.append(batch)
+            if chunk and (batch is None
+                          or len(chunk) >= self._chunk_batches
+                          or now - chunk_t0 >= self._chunk_linger):
+                self._prefetch.offer(_BatchEnvelope(chunk), block=True)
+                chunk = []
 
     def get_prefetched(self, timeout: float = 30.0) -> np.ndarray | None:
-        env = self._prefetch.poll(block=True, timeout=timeout)
-        return None if env is None else env.batch
+        """Pop the next ready batch, unpacking whole prefetched chunks into a
+        caller-local buffer — one queue round-trip amortized over up to
+        ``prefetch_chunk`` batches."""
+        if not self._drained:
+            for env in self._prefetch.poll_batch(
+                    self._prefetch.object_threshold, timeout=timeout):
+                self._drained.extend(env.batches)
+        return self._drained.popleft() if self._drained else None
 
     def stop(self) -> None:
         self._stop.set()
@@ -158,14 +201,14 @@ class StreamingDataLoader:
 
 
 class _BatchEnvelope:
-    """Duck-typed FlowFile stand-in so batches ride the backpressured
-    Connection without serialization (zero-copy)."""
+    """Duck-typed FlowFile stand-in so a chunk of assembled batches rides the
+    backpressured Connection without serialization (zero-copy)."""
 
-    __slots__ = ("batch",)
+    __slots__ = ("batches",)
 
-    def __init__(self, batch: np.ndarray) -> None:
-        self.batch = batch
+    def __init__(self, batches: list[np.ndarray]) -> None:
+        self.batches = batches
 
     @property
     def size(self) -> int:
-        return int(self.batch.nbytes)
+        return sum(int(b.nbytes) for b in self.batches)

@@ -31,6 +31,20 @@ class SequencePacker:
             del self._carry[:self.row_len]
         return rows
 
+    def add_tokens(self, ids: np.ndarray) -> np.ndarray:
+        """Vectorized path: feed the concatenated ids of *many* documents at
+        once (``ByteTokenizer.encode_batch`` output) and slice all full rows
+        with one reshape instead of per-token list churn. Produces exactly
+        the rows the per-document ``add_document`` loop would, in order."""
+        ids = np.asarray(ids, dtype=np.int32)
+        if self._carry:
+            ids = np.concatenate(
+                [np.asarray(self._carry, dtype=np.int32), ids])
+        n_rows = len(ids) // self.row_len
+        rows = ids[:n_rows * self.row_len].reshape(n_rows, self.row_len)
+        self._carry = ids[n_rows * self.row_len:].tolist()
+        return rows
+
     def flush(self) -> np.ndarray | None:
         """Pad-and-emit the carry (end of stream / eval only — training keeps
         packing so no pad tokens ever enter a training row)."""

@@ -35,3 +35,26 @@ class ByteTokenizer:
 
     def encode_np(self, text: str, **kw) -> np.ndarray:
         return np.asarray(self.encode(text, **kw), dtype=np.int32)
+
+    def encode_batch(self, texts, add_bos: bool = True,
+                     add_eos: bool = True) -> np.ndarray:
+        """Vectorized multi-document encode: one concatenated int32 array of
+        all documents' ids in order (each wrapped in BOS/EOS like ``encode``).
+        Bytes are widened with ``np.frombuffer`` instead of a per-byte Python
+        loop — the streaming loader's hot path."""
+        payloads = [t.encode("utf-8") for t in texts]
+        extra = int(add_bos) + int(add_eos)
+        out = np.empty(sum(len(b) for b in payloads) + extra * len(payloads),
+                       dtype=np.int32)
+        pos = 0
+        for b in payloads:
+            if add_bos:
+                out[pos] = self.BOS
+                pos += 1
+            end = pos + len(b)
+            out[pos:end] = np.frombuffer(b, dtype=np.uint8)
+            pos = end
+            if add_eos:
+                out[pos] = self.EOS
+                pos += 1
+        return out

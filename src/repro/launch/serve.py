@@ -36,9 +36,9 @@ def main() -> None:
     log = PartitionedLog(root / "log")
     log.create_topic("requests", partitions=4)
     log.create_topic("completions", partitions=4)
-    for i, doc in enumerate(corpus_documents(args.requests, seed=11)):
-        log.append("requests", str(i).encode(),
-                   json.dumps({"id": i, "prompt": doc[:80]}).encode())
+    log.append_batch("requests", [
+        (str(i).encode(), json.dumps({"id": i, "prompt": doc[:80]}).encode())
+        for i, doc in enumerate(corpus_documents(args.requests, seed=11))])
 
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))

@@ -48,9 +48,10 @@ def main() -> None:
     log = PartitionedLog(root / "log")
     if "articles" not in log.topics():
         log.create_topic("articles", partitions=8)
-        for i, doc in enumerate(corpus_documents(args.docs)):
-            k, v = make_flowfile(doc, text=doc).to_record()
-            log.append("articles", k, v, partition=i % 8)
+        batch = [make_flowfile(doc, text=doc).to_record()
+                 for doc in corpus_documents(args.docs)]
+        for p in range(8):
+            log.append_batch("articles", batch[p::8], partition=p)
         log.flush(fsync=False)
 
     grp, loader = attach_training_loader(log, batch_size=args.batch,

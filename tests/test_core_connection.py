@@ -74,6 +74,92 @@ def test_poll_batch_drains():
     assert len(batch) == 7 and len(c) == 3
 
 
+def test_fifo_fast_path_matches_heap_path():
+    """With no prioritizer the deque fast path must be observably identical
+    to the heap path under a constant prioritizer: same FIFO order, same
+    thresholds, same snapshot stats."""
+    heap = Connection("q", object_threshold=30, prioritizer=lambda f: 0.0)
+    fifo = Connection("q", object_threshold=30)
+    for c in (heap, fifo):
+        for i in range(25):
+            assert c.offer(ff(i), block=False)
+    order = {}
+    for name, c in (("heap", heap), ("fifo", fifo)):
+        order[name] = [c.poll(block=False).attributes["i"] for _ in range(25)]
+    assert order["heap"] == order["fifo"] == [str(i) for i in range(25)]
+    assert heap.snapshot() == fifo.snapshot()
+
+
+def test_fifo_fast_path_thresholds_and_stats():
+    for prio in (None, lambda f: 0.0):
+        c = Connection("c", object_threshold=5, prioritizer=prio)
+        for i in range(5):
+            assert c.offer(ff(i), block=False)
+        assert c.is_full()
+        assert not c.offer(ff(99), block=False)
+        assert c.backpressure_engagements == 1 and len(c) == 5
+        s = Connection("s", object_threshold=10_000, size_threshold=100,
+                       prioritizer=prio)
+        assert s.offer(ff(0, size=60), block=False)
+        assert s.offer(ff(1, size=60), block=False)
+        assert s.is_full() and not s.offer(ff(2, size=1), block=False)
+
+
+def test_offer_batch_pairs_with_poll_batch():
+    c = Connection("c")
+    assert c.offer_batch([ff(i) for i in range(10)], block=False) == 10
+    assert len(c) == 10 and c.total_in == 10
+    got = c.poll_batch(10)
+    assert [f.attributes["i"] for f in got] == [str(i) for i in range(10)]
+    assert c.total_out == 10 and c.queued_bytes == 0
+
+
+def test_offer_batch_nonblocking_accepts_up_to_threshold():
+    c = Connection("c", object_threshold=3)
+    assert c.offer_batch([ff(i) for i in range(7)], block=False) == 3
+    assert len(c) == 3 and c.backpressure_engagements == 1
+
+
+def test_offer_batch_blocking_drains_through_backpressure():
+    """A batch larger than the queue makes progress as a consumer drains,
+    preserving FIFO order end to end."""
+    c = Connection("c", object_threshold=4)
+    accepted = []
+
+    def producer():
+        total = 0
+        while total < 50:
+            total += c.offer_batch([ff(i) for i in range(total, 50)],
+                                   block=True, timeout=0.25)
+        accepted.append(total)
+
+    t = threading.Thread(target=producer)
+    t.start()
+    got = []
+    while len(got) < 50:
+        item = c.poll(block=True, timeout=5)
+        assert item is not None
+        got.append(item)
+    t.join(timeout=10)
+    assert accepted == [50]
+    assert [f.attributes["i"] for f in got] == [str(i) for i in range(50)]
+
+
+def test_rate_throttle_acquire_single_locked_section():
+    """acquire computes its sleep from the deficit in one locked pass and
+    enforces a minimum sleep — a tiny deficit must not busy-spin."""
+    rt = RateThrottle(rate_per_sec=1e9, burst=1)
+    t0 = time.monotonic()
+    for _ in range(50):
+        rt.acquire()                 # deficit rounds to ~0 at this rate
+    assert time.monotonic() - t0 < 5.0   # terminates promptly, no spin-lock
+    slow = RateThrottle(rate_per_sec=100, burst=1)
+    slow.acquire()                   # burst token
+    t0 = time.monotonic()
+    slow.acquire()                   # must wait ~10ms for a refill
+    assert time.monotonic() - t0 >= 0.005
+
+
 def test_rate_throttle_limits_rate():
     rt = RateThrottle(rate_per_sec=200, burst=1)
     t0 = time.monotonic()

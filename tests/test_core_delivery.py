@@ -1,7 +1,8 @@
 """Consumer groups: offsets, rebalance (elasticity), delivery guarantees."""
 import pytest
 
-from repro.core import ConsumerGroup, OffsetStore, StaleGeneration, range_assign
+from repro.core import (ConsumerGroup, OffsetStore, Producer, StaleGeneration,
+                        range_assign)
 
 
 def fill(log, topic="t", partitions=4, n=40):
@@ -109,6 +110,63 @@ def test_rebalance_preserves_committed_offsets(tmp_log):
             assert c.positions()[p] >= committed[p]
     # between the two members, every partition is covered exactly once
     assert sorted(c0.assignment + c1.assignment) == list(range(4))
+
+
+def test_producer_drains_on_record_bound(tmp_log):
+    tmp_log.create_topic("t", partitions=2)
+    p = Producer(tmp_log, "t", max_batch_records=10, linger_sec=1e9)
+    for i in range(25):
+        p.send(f"k{i}".encode(), f"v{i}".encode(), partition=i % 2)
+    assert p.sent == 25 and p.delivered == 20 and p.pending() == 5
+    p.flush()
+    assert p.delivered == 25 and p.pending() == 0
+    assert sum(tmp_log.end_offsets("t")) == 25
+    # per-partition order preserved through the accumulator
+    recs = tmp_log.read("t", 0, 0, max_records=100)
+    assert [r.value for r in recs] == [f"v{i}".encode() for i in range(0, 25, 2)]
+
+
+def test_producer_drains_on_byte_bound_and_key_routes(tmp_log):
+    tmp_log.create_topic("t", partitions=4)
+    p = Producer(tmp_log, "t", max_batch_records=10_000,
+                 max_batch_bytes=200, linger_sec=1e9)
+    for i in range(20):
+        p.send(f"key-{i}".encode(), b"x" * 50)   # no explicit partition
+    assert p.delivered > 0                       # byte bound tripped mid-way
+    p.flush()
+    assert sum(tmp_log.end_offsets("t")) == 20
+    # key routing matches single-record append semantics
+    import zlib
+    for i in (0, 7, 19):
+        expect = zlib.crc32(f"key-{i}".encode()) % 4
+        assert any(r.key == f"key-{i}".encode()
+                   for r in tmp_log.read("t", expect, 0, 100))
+
+
+def test_producer_context_manager_flushes(tmp_log):
+    tmp_log.create_topic("t", partitions=1)
+    with Producer(tmp_log, "t", linger_sec=1e9) as p:
+        p.send(b"", b"v", partition=0)
+        assert tmp_log.end_offset("t", 0) == 0   # still buffered
+    assert tmp_log.end_offset("t", 0) == 1       # drained on exit
+
+
+def test_poll_sees_interleaved_appends_despite_end_offset_cache(tmp_log):
+    """The cached end offset must never hide new data: every poll after an
+    append sees it, and caught-up polls return empty."""
+    tmp_log.create_topic("t", partitions=1)
+    g = ConsumerGroup(tmp_log, "t", "g")
+    c = g.add_member("m0")
+    assert c.poll() == []
+    for round_ in range(3):
+        tmp_log.append_batch(
+            "t", [(b"", f"r{round_}-{i}".encode()) for i in range(5)],
+            partition=0)
+        got = c.poll()
+        assert [r.value for r in got] == \
+               [f"r{round_}-{i}".encode() for i in range(5)]
+        assert c.poll() == []                    # caught up again
+        assert c.lag() == 0
 
 
 def test_offset_store_atomic_persistence(tmp_path):

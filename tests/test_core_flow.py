@@ -56,10 +56,11 @@ def test_end_to_end_news_flow(tmp_path):
 
 
 def test_provenance_lineage_walk(tmp_path):
-    g, log, pub, _ = _mini_news_flow(tmp_path, n=50)
+    # n chosen so the seeded stream contains junk (DROP events) as well
+    g, log, pub, _ = _mini_news_flow(tmp_path, n=150)
     g.run_to_completion(timeout=60)
     counts = g.provenance.counts()
-    assert counts["CREATE"] == 50
+    assert counts["CREATE"] == 150
     assert counts["ROUTE"] > 0 and counts["DROP"] > 0
     # walk one lineage end-to-end (paper Fig. 4)
     ev = g.provenance.events(event_type="CREATE")[0]

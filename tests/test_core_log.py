@@ -102,6 +102,157 @@ def test_corrupt_tail_crc_is_truncated(tmp_path):
     log2.close()
 
 
+def test_append_batch_roundtrip_and_offsets(tmp_log):
+    tmp_log.create_topic("t", partitions=2)
+    recs = [(f"k{i}".encode(), f"v{i}".encode()) for i in range(20)]
+    out = tmp_log.append_batch("t", recs, partition=0)
+    assert out == [(0, i) for i in range(20)]
+    got = tmp_log.read("t", 0, 0, max_records=50)
+    assert [(r.key, r.value) for r in got] == recs
+    assert tmp_log.end_offset("t", 1) == 0          # other partition untouched
+
+
+def test_append_batch_key_routing_and_bytes_match_append(tmp_path):
+    """append_batch must route by key exactly like append and produce
+    byte-identical segment files (seed wire-format compatibility)."""
+    log_a = PartitionedLog(tmp_path / "a")
+    log_b = PartitionedLog(tmp_path / "b")
+    recs = [(f"key-{i}".encode(), f"val-{i}" .encode() * (i % 3 + 1))
+            for i in range(50)]
+    for log in (log_a, log_b):
+        log.create_topic("t", partitions=4)
+    singles = [log_a.append("t", k, v) for k, v in recs]
+    batched = log_b.append_batch("t", recs)
+    assert singles == batched
+    log_a.flush()
+    log_b.flush()
+    for p in range(4):
+        seg_a = b"".join(f.read_bytes() for f in
+                         sorted((tmp_path / "a" / "t" / str(p)).glob("*.seg")))
+        seg_b = b"".join(f.read_bytes() for f in
+                         sorted((tmp_path / "b" / "t" / str(p)).glob("*.seg")))
+        assert seg_a == seg_b
+    log_a.close()
+    log_b.close()
+
+
+def test_seed_written_log_replays_under_batched_reader(tmp_path):
+    """A log written record-at-a-time reopens and replays under the batched
+    reader, and a batch-written log replays under single-record reads."""
+    log = PartitionedLog(tmp_path)
+    log.create_topic("t", partitions=1)
+    for i in range(10):
+        log.append("t", f"k{i}".encode(), f"v{i}".encode(), partition=0)
+    log.append_batch("t", [(f"k{i}".encode(), f"v{i}".encode())
+                           for i in range(10, 20)], partition=0)
+    log.flush()
+    log.close()
+    log2 = PartitionedLog(tmp_path)
+    recs = log2.read("t", 0, 0, max_records=100)
+    assert [(r.offset, r.key, r.value) for r in recs] == \
+           [(i, f"k{i}".encode(), f"v{i}".encode()) for i in range(20)]
+    # single-record reads still work against the mixed-written segment
+    for i in (0, 9, 10, 19):
+        one = log2.read("t", 0, i, max_records=1)
+        assert len(one) == 1 and one[0].value == f"v{i}".encode()
+    log2.close()
+
+
+def _record_boundaries(data: bytes) -> list[int]:
+    """File positions of each record start, computed from the wire format."""
+    bounds, pos = [], 0
+    while pos + _HEADER.size <= len(data):
+        _, klen, vlen = _HEADER.unpack_from(data, pos)
+        bounds.append(pos)
+        pos += _HEADER.size + klen + vlen
+    return bounds
+
+
+def test_torn_tail_mid_batch_truncates_to_last_whole_record(tmp_path):
+    """Crash in the middle of an append_batch write: the torn suffix is
+    discarded on reopen, every whole record before it survives, and appends
+    continue from the recovered offset."""
+    log = PartitionedLog(tmp_path)
+    log.create_topic("t", partitions=1)
+    log.append_batch("t", [(b"k", f"value-{i}".encode()) for i in range(10)],
+                     partition=0)
+    log.flush()
+    log.close()
+    seg = next((tmp_path / "t" / "0").glob("*.seg"))
+    data = seg.read_bytes()
+    bounds = _record_boundaries(data)
+    assert len(bounds) == 10
+    seg.write_bytes(data[:bounds[7] + 5])        # tear inside record 7
+    log2 = PartitionedLog(tmp_path)
+    assert log2.end_offset("t", 0) == 7
+    recs = log2.read("t", 0, 0, max_records=20)
+    assert [r.value for r in recs] == [f"value-{i}".encode() for i in range(7)]
+    out = log2.append_batch("t", [(b"k", b"resumed")], partition=0)
+    assert out == [(0, 7)]
+    log2.close()
+
+
+def test_torn_tail_at_segment_roll_boundary(tmp_path):
+    """Crash exactly where an append_batch rolled to a fresh segment: the
+    partial record at the start of the tail segment is truncated away and
+    the log reopens cleanly at the roll boundary."""
+    log = PartitionedLog(tmp_path, segment_bytes=256)
+    log.create_topic("t", partitions=1)
+    values = [bytes([65 + i % 26]) * 40 for i in range(30)]
+    log.append_batch("t", [(b"k", v) for v in values], partition=0)
+    log.flush()
+    log.close()
+    segs = sorted((tmp_path / "t" / "0").glob("*.seg"))
+    assert len(segs) > 1                          # the batch really rolled
+    last = segs[-1]
+    base = int(last.stem)
+    last.write_bytes(last.read_bytes()[:5])       # partial header only
+    log2 = PartitionedLog(tmp_path, segment_bytes=256)
+    assert log2.end_offset("t", 0) == base
+    recs = log2.read("t", 0, 0, max_records=100)
+    assert [r.value for r in recs] == values[:base]
+    _, off = log2.append("t", b"k", b"tail", partition=0)
+    assert off == base
+    log2.close()
+
+
+def test_append_batch_rolls_segments_like_append(tmp_path):
+    """One big batch must spill across segments under the same growth rule
+    as record-at-a-time appends."""
+    log_a = PartitionedLog(tmp_path / "a", segment_bytes=256)
+    log_b = PartitionedLog(tmp_path / "b", segment_bytes=256)
+    recs = [(b"k", b"x" * 40) for _ in range(100)]
+    for log in (log_a, log_b):
+        log.create_topic("t", partitions=1)
+    for k, v in recs:
+        log_a.append("t", k, v, partition=0)
+    log_b.append_batch("t", recs, partition=0)
+    names_a = sorted(p.name for p in (tmp_path / "a" / "t" / "0").glob("*.seg"))
+    names_b = sorted(p.name for p in (tmp_path / "b" / "t" / "0").glob("*.seg"))
+    assert names_a == names_b and len(names_b) > 1
+    recs_b = log_b.read("t", 0, 37, max_records=30)
+    assert [r.offset for r in recs_b] == list(range(37, 67))
+    log_a.close()
+    log_b.close()
+
+
+def test_fsync_every_counts_per_partition(tmp_path):
+    """fsync_every is a per-partition group-flush counter (kept under the
+    partition lock); both single and batched appends feed it."""
+    log = PartitionedLog(tmp_path, fsync_every=8)
+    log.create_topic("t", partitions=2)
+    for i in range(20):
+        log.append("t", b"", f"a{i}".encode(), partition=0)
+    log.append_batch("t", [(b"", f"b{i}".encode()) for i in range(20)],
+                     partition=1)
+    # data written through the group-flush path is durable + readable
+    assert [r.value for r in log.read("t", 0, 0, 50)] == \
+           [f"a{i}".encode() for i in range(20)]
+    assert [r.value for r in log.read("t", 1, 0, 50)] == \
+           [f"b{i}".encode() for i in range(20)]
+    log.close()
+
+
 def test_retention_drops_oldest_segments(tmp_path):
     log = PartitionedLog(tmp_path, segment_bytes=256)
     log.create_topic("t", partitions=1)

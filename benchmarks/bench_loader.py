@@ -72,11 +72,11 @@ def run(n_docs: int = 20_000, batch: int = 8, seq: int = 1024,
         shutil.rmtree(tmp, ignore_errors=True)
 
 
-def main() -> list[dict]:
+def main(n_docs: int = 20_000) -> list[dict]:
     return [
-        run(prefetch=False, poll_records=64),
-        run(prefetch=False, poll_records=512),
-        run(prefetch=True, poll_records=512),
+        run(n_docs=n_docs, prefetch=False, poll_records=64),
+        run(n_docs=n_docs, prefetch=False, poll_records=512),
+        run(n_docs=n_docs, prefetch=True, poll_records=512),
     ]
 
 

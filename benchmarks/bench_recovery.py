@@ -1,22 +1,26 @@
 """Fault-tolerance benchmark (paper §II.B): crash-recovery of the durable
-log (torn-tail truncation + reopen latency) and consumer-group redelivery
-overlap (at-least-once accounting).
+log (torn-tail truncation + reopen latency), consumer-group redelivery
+overlap (at-least-once accounting), and a supervised flow surviving a
+mid-graph processor that is fault-injected to crash every ~500 records
+(zero record loss, poison quarantine).
 """
 from __future__ import annotations
 
+import json
 import shutil
-import struct
 import tempfile
 import time
 from pathlib import Path
 
-from repro.core import ConsumerGroup, PartitionedLog
+from repro.core import ConsumerGroup, PartitionedLog, RestartPolicy
+from repro.core.faults import INJECTOR
 from repro.core.log import _HEADER
+from repro.data.pipeline import (arm_news_chaos, build_news_pipeline,
+                                 expected_clean_doc_ids)
 
 
-def main(n_records: int = 50_000, partitions: int = 8) -> list[dict]:
+def log_crash_recovery(n_records: int = 50_000, partitions: int = 8) -> dict:
     tmp = Path(tempfile.mkdtemp(prefix="bench_recovery_"))
-    rows = []
     try:
         log = PartitionedLog(tmp, segment_bytes=1 << 20)
         log.create_topic("t", partitions=partitions)
@@ -60,7 +64,7 @@ def main(n_records: int = 50_000, partitions: int = 8) -> list[dict]:
                 break
             redelivered += len(recs)
         expected_redelivery = n_records - committed
-        rows.append({
+        return {
             "name": "log_crash_recovery",
             "records": n_records,
             "append_records_per_sec": round(n_records / append_dt, 1),
@@ -70,10 +74,72 @@ def main(n_records: int = 50_000, partitions: int = 8) -> list[dict]:
             "redelivered": redelivered,
             "redelivery_overlap": redelivered - expected_redelivery,
             "at_least_once_ok": redelivered >= expected_redelivery,
-        })
+        }
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
-    return rows
+
+
+def supervised_fault_flow(n_rss: int = 6_000, crash_every: int = 500,
+                          poison_rate: float = 0.005, seed: int = 11) -> dict:
+    """The acceptance scenario: the news topology with the enrich stage
+    fault-injected to raise every ~``crash_every`` records AND to choke on
+    poison records. The supervised/retrying graph must finish with zero
+    record loss (at-least-once: every clean article lands in the log,
+    duplicates allowed) and every poison record quarantined in the DLQ."""
+    tmp = Path(tempfile.mkdtemp(prefix="bench_supervised_"))
+    try:
+        flow, log = build_news_pipeline(
+            tmp, n_rss=n_rss, n_firehose=0, n_ws=0, partitions=4, seed=seed,
+            restart_policy=RestartPolicy(max_restarts=10 + 3 * n_rss // crash_every,
+                                         backoff_base_sec=0.002,
+                                         backoff_cap_sec=0.05),
+            max_retries=3, dead_letter_topic="dead-letters",
+            poison_rate=poison_rate)
+        arm_news_chaos(crash_every=crash_every)
+        t0 = time.monotonic()
+        try:
+            flow.run_to_completion(timeout=600)
+            source_faults = INJECTOR.fired("proc.big-rss")
+        finally:
+            INJECTOR.reset()
+        dt = time.monotonic() - t0
+        st = flow.status()
+        landed: set[str] = set()
+        duplicates = 0
+        for r in log.iter_records("articles"):
+            doc_id = json.loads(r.key).get("attributes", {}).get("doc_id", "")
+            if doc_id in landed:
+                duplicates += 1
+            landed.add(doc_id)
+        expected = expected_clean_doc_ids(n_rss, seed, poison_rate)
+        dlq = flow.nodes["dead-letter"].processor
+        enrich = st["processors"]["enrich"]
+        log.close()
+        assert st["processors"]["big-rss"]["restarts"] > 0, \
+            "scenario no longer exercises the supervisor restart path"
+        return {
+            "name": "supervised_fault_flow",
+            "records": n_rss,
+            "wall_sec": round(dt, 3),
+            "records_per_sec": round(n_rss / dt, 1),
+            "source_faults_fired": source_faults,
+            "restarts": sum(p["restarts"] for p in st["processors"].values()),
+            "retries": enrich["retries"],
+            "dead_lettered": dlq.quarantined,
+            "missing_records": len(expected - landed),
+            "zero_record_loss": expected <= landed,
+            "redelivery_duplicates": duplicates,
+        }
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def main(n_records: int = 50_000, partitions: int = 8,
+         n_flow: int = 6_000) -> list[dict]:
+    return [
+        log_crash_recovery(n_records, partitions),
+        supervised_fault_flow(n_rss=n_flow),
+    ]
 
 
 if __name__ == "__main__":

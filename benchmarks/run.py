@@ -8,9 +8,13 @@ loader variant).
 
   bench_ingest_throughput   paper Fig. 3 (ingest → HDFS/log landing rate)
   bench_backpressure        paper Fig. 5 (sink outage, clamp at 10k, replay)
-  bench_recovery            paper §II.B (crash recovery, delivery guarantees)
+  bench_recovery            paper §II.B (crash recovery, delivery guarantees,
+                            supervised flow under injected faults)
   bench_loader              host→device feed rate (ingestion fabric edge)
   roofline                  §Roofline table from artifacts/dryrun (if present)
+
+``--quick`` runs a CI-sized smoke pass (~10x smaller inputs) and leaves
+``BENCH_ingest.json`` untouched.
 """
 from __future__ import annotations
 
@@ -54,16 +58,26 @@ def write_snapshot(ingest_rows, loader_rows,
     path.write_text(json.dumps(snapshot, indent=2) + "\n")
 
 
-def main() -> None:
+def main(quick: bool = False) -> None:
     print("bench,metric,value")
-    ingest_rows = bench_ingest_throughput.main()
-    emit(ingest_rows)
-    emit(bench_backpressure.main())
-    emit(bench_recovery.main())
-    loader_rows = bench_loader.main()
-    emit(loader_rows)
-    write_snapshot(ingest_rows, loader_rows)
-    print(f"snapshot,written,{SNAPSHOT_PATH}")
+    if quick:
+        # CI-sized smoke pass: same scenarios, ~10x smaller inputs. Does NOT
+        # rewrite BENCH_ingest.json — the perf trajectory is full-run only.
+        ingest_rows = bench_ingest_throughput.main(n=2_000)
+        emit(ingest_rows)
+        emit(bench_backpressure.main(produced=5_000))
+        emit(bench_recovery.main(n_records=5_000, n_flow=1_500))
+        emit(bench_loader.main(n_docs=2_000))
+        print("snapshot,skipped,--quick")
+    else:
+        ingest_rows = bench_ingest_throughput.main()
+        emit(ingest_rows)
+        emit(bench_backpressure.main())
+        emit(bench_recovery.main())
+        loader_rows = bench_loader.main()
+        emit(loader_rows)
+        write_snapshot(ingest_rows, loader_rows)
+        print(f"snapshot,written,{SNAPSHOT_PATH}")
     art = roofline.ART_DIR
     if art.exists():
         for mesh in ("single", "multi"):
@@ -75,4 +89,8 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized smoke pass (no BENCH_ingest.json rewrite)")
+    main(quick=ap.parse_args().quick)

@@ -7,19 +7,66 @@ Layers (paper Fig. 1):
   extract/enrich/integrate — processors.py (dedup, filter, route, enrich, merge)
   distribution  — PartitionedLog (durable pub-sub) + ConsumerGroup (delivery.py)
 cross-cutting: Connection backpressure, ProvenanceRepository lineage, metrics.
+
+Failure-handling model (paper: "robustness in handling failures")
+-----------------------------------------------------------------
+Three opt-in layers, all defaulting to the seed's fail-fast behaviour:
+
+1. **Supervision** — ``graph.add(proc, restart_policy=RestartPolicy(
+   max_restarts=5))`` restarts a crashed processor with exponential backoff
+   (``backoff_base_sec * backoff_factor**k``, capped). The in-flight batch is
+   re-queued before the restart and a source restart fast-forwards its
+   replayable generator, so supervision is at-least-once: duplicates are
+   possible, loss is not. Once the budget is spent the node turns ``FAILED``
+   (visible in ``graph.status()``) and ``join()`` raises ``FlowError``.
+
+2. **Retry + dead-letter routing** — ``graph.connect(..., max_retries=3)``
+   arms record-level retry on a connection: a failing batch is re-triggered
+   record-at-a-time to isolate the poison record, which is penalized
+   (``retry_penalty_sec * 2**k``) and re-queued with a ``retry.count``
+   attribute. After ``max_retries`` the record goes to the graph's
+   quarantine — ``dlq = graph.add(DeadLetterQueue("dlq", log, "dead-letters"));
+   graph.route_dead_letters_to(dlq)`` — which persists it to a log topic
+   keyed by provenance lineage id; ``DeadLetterQueue.replay(log)`` yields the
+   quarantined FlowFiles for re-ingestion once the poison is fixed.
+
+3. **WAL-backed connections** — ``graph.connect(..., durable=log)`` journals
+   every accepted FlowFile through the durable log and the consumer's acked
+   frontier through a ``<topic>.__acks__`` topic. Rebuilding the same graph
+   over the same log replays the un-acked suffix into the queue: a hard
+   process crash resumes from the last acked frontier, at-least-once.
+
+Deterministic fault injection (faults.py) drives the tests and
+``benchmarks/bench_recovery.py``::
+
+    from repro.core.faults import INJECTOR, raise_every_records
+    INJECTOR.arm("proc.enrich", raise_every_records(500), every=1)  # crash ~every 500 records
+    INJECTOR.arm("log.segment.append_batch", "crash", nth=3)        # hard-kill mid-write
+    ...
+    INJECTOR.reset()
+
+Sites built into the runtime: ``proc.<name>`` (every trigger, ctx carries the
+batch), ``log.segment.append_batch`` (before each chunk ``write``),
+``delivery.producer.drain`` and ``delivery.consumer.poll``. Actions:
+``"raise"`` / ``"delay"`` / ``"crash"`` (``os._exit``) or any callable, on an
+``nth``/``every`` call schedule.
 """
-from .connection import (BackpressureTimeout, Connection, RateThrottle,
+from .connection import (BackpressureTimeout, Connection, DurableConnection,
+                         RateThrottle,
                          DEFAULT_OBJECT_THRESHOLD, DEFAULT_SIZE_THRESHOLD)
 from .delivery import (Consumer, ConsumerGroup, OffsetStore, Producer,
                        StaleGeneration, range_assign)
+from .faults import FaultInjector, InjectedFault, INJECTOR
 from .flow import FlowError, FlowGraph
 from .flowfile import FlowFile, make_flowfile
 from .log import CorruptRecord, LogRecord, PartitionedLog
-from .processor import Processor, Source, REL_DROP, REL_FAILURE, REL_SUCCESS
+from .processor import (Processor, RestartPolicy, Source, REL_DROP,
+                        REL_FAILURE, REL_SUCCESS)
 from .processors import (BloomFilter, CollectSink, ContentFilter,
-                         DetectDuplicate, ExecuteScript, FileSink,
-                         LookupEnrich, MergeContent, PartitionRecords,
-                         PublishToLog, RouteOnAttribute, Throttle)
+                         DeadLetterQueue, DetectDuplicate, ExecuteScript,
+                         FileSink, LookupEnrich, MergeContent,
+                         PartitionRecords, PublishToLog, RouteOnAttribute,
+                         Throttle)
 from .provenance import ProvenanceEvent, ProvenanceRepository
 from .sources import (FirehoseSource, RssAggregatorSource, WebSocketSource,
                       corpus_documents, synth_article)
@@ -27,13 +74,17 @@ from .sources import (FirehoseSource, RssAggregatorSource, WebSocketSource,
 __all__ = [
     "BackpressureTimeout", "BloomFilter", "CollectSink", "Connection",
     "ConsumerGroup", "Consumer", "ContentFilter", "CorruptRecord",
-    "DEFAULT_OBJECT_THRESHOLD", "DEFAULT_SIZE_THRESHOLD", "DetectDuplicate",
-    "ExecuteScript", "FileSink", "FirehoseSource", "FlowError", "FlowFile",
-    "FlowGraph", "LogRecord", "LookupEnrich", "MergeContent", "OffsetStore",
+    "DEFAULT_OBJECT_THRESHOLD", "DEFAULT_SIZE_THRESHOLD", "DeadLetterQueue",
+    "DetectDuplicate", "DurableConnection",
+    "ExecuteScript", "FaultInjector", "FileSink", "FirehoseSource",
+    "FlowError", "FlowFile",
+    "FlowGraph", "INJECTOR", "InjectedFault", "LogRecord", "LookupEnrich",
+    "MergeContent", "OffsetStore",
     "PartitionRecords", "PartitionedLog", "Processor", "Producer",
     "ProvenanceEvent",
     "ProvenanceRepository", "PublishToLog", "RateThrottle", "REL_DROP",
-    "REL_FAILURE", "REL_SUCCESS", "RouteOnAttribute", "RssAggregatorSource",
+    "REL_FAILURE", "REL_SUCCESS", "RestartPolicy", "RouteOnAttribute",
+    "RssAggregatorSource",
     "Source", "StaleGeneration", "Throttle", "WebSocketSource",
     "corpus_documents", "make_flowfile", "range_assign", "synth_article",
 ]

@@ -54,12 +54,22 @@ class Connection:
     def __init__(self, name: str,
                  object_threshold: int = DEFAULT_OBJECT_THRESHOLD,
                  size_threshold: int = DEFAULT_SIZE_THRESHOLD,
-                 prioritizer: Optional[Callable[[FlowFile], float]] = None) -> None:
+                 prioritizer: Optional[Callable[[FlowFile], float]] = None,
+                 max_retries: int = 0,
+                 retry_penalty_sec: float = 0.01) -> None:
         if object_threshold <= 0 or size_threshold <= 0:
             raise ValueError("backpressure thresholds must be positive")
+        if max_retries < 0 or retry_penalty_sec < 0:
+            raise ValueError("retry settings must be non-negative")
         self.name = name
         self.object_threshold = object_threshold
         self.size_threshold = size_threshold
+        #: failed records pulled from this connection are re-queued up to
+        #: ``max_retries`` times (with escalating penalization) before being
+        #: routed to the graph's dead-letter queue; 0 == legacy fail-fast
+        self.max_retries = max_retries
+        #: base penalization delay; retry k waits ``retry_penalty_sec * 2**k``
+        self.retry_penalty_sec = retry_penalty_sec
         self._prioritizer = prioritizer
         # FIFO deque unless a prioritizer demands heap ordering
         self._heap: list[tuple[float, int, FlowFile]] = []
@@ -187,6 +197,17 @@ class Connection:
                 self._not_empty.notify_all()
             return accepted
 
+    def requeue(self, ffs: Sequence[FlowFile]) -> None:
+        """Consumer-side redelivery: push records back in, *bypassing* the
+        backpressure thresholds. The consuming worker is this queue's only
+        drainer — a blocking re-offer against a full queue would deadlock it
+        (nobody else frees space). The overshoot is bounded by one in-flight
+        batch plus pending retries."""
+        with self._lock:
+            for ff in ffs:
+                self._push_locked(ff)
+            self._not_empty.notify_all()
+
     # -- consumer side -------------------------------------------------------
     def poll(self, block: bool = True, timeout: float | None = None
              ) -> FlowFile | None:
@@ -234,6 +255,191 @@ class Connection:
                 "total_in": self.total_in,
                 "total_out": self.total_out,
             }
+
+
+class DurableConnection(Connection):
+    """WAL-backed connection: an opt-in ``Connection`` that journals every
+    accepted FlowFile through the existing durable log (``append_batch``)
+    and tracks the consumer's acked frontier, so a crashed graph restarts
+    from its last acked record with **at-least-once** delivery.
+
+    Contract
+    --------
+    * ``offer``/``offer_batch`` return only after the accepted records are
+      journaled to ``topic`` (WAL order == queue order; one outer lock
+      serializes enqueue+journal). A crash *after* an offer returns cannot
+      lose the record; a crash *during* it means the producer never got its
+      ack and must re-offer (its own at-least-once contract).
+    * the consuming worker calls ``ack(n)`` once a polled batch is fully
+      settled (emitted downstream / re-queued / dead-lettered); the frontier
+      is journaled to ``<topic>.__acks__``.
+    * on construction, the un-acked suffix ``[frontier, end)`` is replayed
+      straight into the in-memory queue (bypassing backpressure thresholds:
+      the suffix is bounded by what was queued at crash time). Records that
+      were settled but whose ack never hit disk are replayed too — duplicates
+      are the price of at-least-once.
+
+    FIFO only (a prioritizer would break the frontier's prefix semantics).
+    ``wal_fsync=True`` upgrades durability from process-crash to
+    machine-crash at ~160 ms per journal append on this host — leave it off
+    unless you mean it.
+    """
+
+    def __init__(self, name: str, log, *, topic: str | None = None,
+                 object_threshold: int = DEFAULT_OBJECT_THRESHOLD,
+                 size_threshold: int = DEFAULT_SIZE_THRESHOLD,
+                 max_retries: int = 0, retry_penalty_sec: float = 0.01,
+                 wal_fsync: bool = False) -> None:
+        super().__init__(name, object_threshold, size_threshold,
+                         prioritizer=None, max_retries=max_retries,
+                         retry_penalty_sec=retry_penalty_sec)
+        self.log = log
+        self.topic = topic or "__wal__." + name.replace("/", "_")
+        self.ack_topic = self.topic + ".__acks__"
+        self.wal_fsync = wal_fsync
+        log.create_topic(self.topic, partitions=1)
+        log.create_topic(self.ack_topic, partitions=1)
+        # serializes enqueue+journal so WAL order matches queue order; never
+        # taken by the consumer side (poll/ack), so a producer blocked on
+        # backpressure inside it cannot deadlock the draining consumer
+        self._wal_lock = threading.Lock()
+        self._ack_lock = threading.Lock()
+        self._acks_since_gc = 0
+        self._acked = self._load_frontier()
+        self.replayed = self._replay()
+
+    def _load_frontier(self) -> int:
+        end = self.log.end_offset(self.ack_topic, 0)
+        if end == 0:
+            return 0
+        recs = self.log.read(self.ack_topic, 0, end - 1, 1)
+        return int(recs[0].value) if recs else 0
+
+    def _replay(self) -> int:
+        off, n = self._acked, 0
+        end = self.log.end_offset(self.topic, 0)
+        while off < end:
+            recs = self.log.read(self.topic, 0, off, 512)
+            if not recs:
+                break
+            with self._lock:
+                for r in recs:
+                    self._push_locked(FlowFile.from_record(r.key, r.value))
+                self._not_empty.notify_all()
+            off = recs[-1].offset + 1
+            n += len(recs)
+        return n
+
+    # -- producer side (journal-on-accept) -----------------------------------
+    def offer(self, ff: FlowFile, block: bool = True,
+              timeout: float | None = None) -> bool:
+        n = self.offer_batch((ff,), block=block, timeout=timeout)
+        if n == 0 and block and timeout is not None:
+            raise BackpressureTimeout(f"connection {self.name!r} full")
+        return n == 1
+
+    def _journal_and_push_locked(self, ffs: Sequence[FlowFile]) -> None:
+        """Journal-then-enqueue atomically (caller holds ``_wal_lock`` and
+        ``_lock``). Journal FIRST: a record must never be pollable before it
+        is durable, or a fast consumer could ack past the WAL end and a
+        crash mid-append would lose the record on replay. flush() moves the
+        journal out of userspace buffers so it survives a process kill
+        (fsync only for machine-crash durability)."""
+        self.log.append_batch(self.topic, [ff.to_record() for ff in ffs],
+                              partition=0)
+        self.log.flush_topic(self.topic, fsync=self.wal_fsync)
+        for ff in ffs:
+            self._push_locked(ff)
+        self._not_empty.notify_all()
+
+    def offer_batch(self, ffs: Sequence[FlowFile], block: bool = True,
+                    timeout: float | None = None) -> int:
+        # Journal+enqueue in non-blocking chunks under _wal_lock (keeps WAL
+        # order == queue order), but wait for backpressure space with the
+        # lock RELEASED — holding it across a stall would convoy every other
+        # producer (and the consumer's requeue path) behind one full queue.
+        deadline = None if timeout is None else time.monotonic() + timeout
+        n = len(ffs)
+        accepted = 0
+        engaged = False
+        while accepted < n:
+            with self._wal_lock:
+                with self._lock:
+                    # how many fit right now, under the same growth rule as
+                    # the base offer_batch (threshold checked before each)
+                    count = self._count_locked()
+                    size = self._bytes
+                    k = 0
+                    while (accepted + k < n
+                           and count + k < self.object_threshold
+                           and size < self.size_threshold):
+                        size += ffs[accepted + k].size
+                        k += 1
+                    if k:
+                        self._journal_and_push_locked(
+                            ffs[accepted:accepted + k])
+                        accepted += k
+                        continue
+                    if not engaged:
+                        self.backpressure_engagements += 1
+                        engaged = True
+            if not block:
+                break
+            remaining = None
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+            with self._not_full:
+                if self._full_locked():
+                    self._not_full.wait(0.05 if remaining is None
+                                        else min(remaining, 0.05))
+        return accepted
+
+    def requeue(self, ffs: Sequence[FlowFile]) -> None:
+        """Consumer-side redelivery with journaling: the re-queued copies are
+        appended to the WAL (so the acked frontier stays a strict prefix) and
+        pushed past the thresholds — never blocks, so the sole drainer of
+        this queue cannot deadlock itself."""
+        with self._wal_lock:
+            with self._lock:
+                self._journal_and_push_locked(ffs)
+
+    # -- consumer side -------------------------------------------------------
+    #: acks between WAL garbage-collection sweeps (dead segments below the
+    #: frontier are dropped so the journal stays O(in-flight), not O(ever))
+    _GC_EVERY_ACKS = 64
+
+    def ack(self, n: int) -> None:
+        """Advance the consumed frontier by ``n`` records and journal it."""
+        if n <= 0:
+            return
+        with self._ack_lock:
+            self._acked += n
+            self._acks_since_gc += 1
+            self.log.append(self.ack_topic, b"", str(self._acked).encode(),
+                            partition=0)
+            self.log.flush_topic(self.ack_topic, fsync=self.wal_fsync)
+            if self._acks_since_gc >= self._GC_EVERY_ACKS:
+                self._acks_since_gc = 0
+                # everything below the frontier (and every ack record but
+                # the last) is dead: drop whole sealed segments behind them
+                self.log.drop_segments_below(self.topic, 0, self._acked)
+                self.log.drop_segments_below(
+                    self.ack_topic, 0, self.log.end_offset(self.ack_topic, 0) - 1)
+
+    @property
+    def acked(self) -> int:
+        with self._ack_lock:
+            return self._acked
+
+    def snapshot(self) -> dict:
+        snap = super().snapshot()
+        snap["durable"] = True
+        snap["wal_topic"] = self.topic
+        snap["acked"] = self.acked
+        snap["replayed"] = self.replayed
+        return snap
 
 
 class RateThrottle:

@@ -34,6 +34,7 @@ import time
 from pathlib import Path
 from typing import Iterable
 
+from . import faults
 from .log import LogRecord, PartitionedLog
 
 
@@ -96,6 +97,9 @@ class Producer:
         n = len(records)
         if not n:
             return
+        # fault site: crash/raise between accumulation and the log append —
+        # the producer's at-least-once retry contract is exercised here
+        faults.fire("delivery.producer.drain", records=records)
         # group consecutive-partition runs so explicit partitions batch too;
         # None-partition records are key-routed by append_batch itself.
         # The buffer is trimmed only as runs land, so an append failure
@@ -220,6 +224,9 @@ class Consumer:
         fill remaining budget. Determinism makes exactly-once replay after
         ``restore()`` byte-identical (the training loader relies on this)."""
         self._group.check_generation(self)
+        # fault site: kill/raise a member between poll and commit to exercise
+        # at-least-once redelivery after rebalance
+        faults.fire("delivery.consumer.poll", consumer=self)
         out: list[LogRecord] = []
         n = len(self.assignment)
         if n == 0:

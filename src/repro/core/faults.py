@@ -1,0 +1,171 @@
+"""Deterministic fault injection for the flow runtime (robustness testing).
+
+The paper's claim is as much *robustness* as scale; proving it needs faults
+that strike at exactly the same place on every run. A ``FaultInjector`` is a
+registry of named *sites*; runtime code calls ``fire(site, **ctx)`` at each
+site, and tests / benchmarks *arm* a site with a schedule and an action.
+Disarmed sites cost one dict lookup per call — nothing on the hot path.
+
+Built-in sites (fired by the library itself):
+
+  ``proc.<name>``              once per processor trigger, ``ctx: batch``
+  ``log.segment.append_batch`` per contiguous chunk write, ``ctx: segment,
+                               buf, records`` (before the ``write(2)``)
+  ``delivery.producer.drain``  per ``Producer`` drain into the log
+  ``delivery.consumer.poll``   per ``Consumer.poll``
+
+Schedules: ``arm(site, action, nth=N)`` fires on the Nth call only;
+``arm(site, action, nth=N, every=M)`` fires on call N, N+M, N+2M, ...
+
+Actions: ``"raise"`` (raise :class:`InjectedFault` — the supervisor /
+retry machinery sees an ordinary processor failure), ``"crash"``
+(``os._exit`` — a hard process kill for subprocess crash-recovery tests),
+``"delay"`` (sleep ``delay_sec``), or any callable taking the site's ``ctx``
+dict (e.g. :func:`raise_on` to poison specific records, or a custom partial
+write + ``os._exit`` to tear a log record mid-batch).
+
+A process-wide default instance :data:`INJECTOR` backs the module-level
+:func:`fire`; tests must ``INJECTOR.reset()`` on teardown (the repo's
+conftest does this automatically).
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Mapping
+
+__all__ = ["FaultInjector", "InjectedFault", "INJECTOR", "compose", "fire",
+           "raise_on", "raise_every_records"]
+
+
+class InjectedFault(RuntimeError):
+    """The exception raised by the ``"raise"`` action (and the helpers)."""
+
+
+@dataclass
+class _Arming:
+    action: str | Callable[[Mapping], None]
+    nth: int = 1
+    every: int | None = None
+    delay_sec: float = 0.05
+    exit_code: int = 17
+    calls: int = 0
+    fired: int = 0
+    lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def due(self) -> bool:
+        """Count one call and decide (thread-safe, deterministic)."""
+        with self.lock:
+            self.calls += 1
+            if self.calls < self.nth:
+                return False
+            if self.every is None:
+                hit = self.calls == self.nth
+            else:
+                hit = (self.calls - self.nth) % self.every == 0
+            if hit:
+                self.fired += 1
+            return hit
+
+
+class FaultInjector:
+    """Armable registry of deterministic fault sites."""
+
+    def __init__(self) -> None:
+        self._sites: dict[str, _Arming] = {}
+
+    # -- arming ---------------------------------------------------------------
+    def arm(self, site: str, action: str | Callable[[Mapping], None] = "raise",
+            *, nth: int = 1, every: int | None = None,
+            delay_sec: float = 0.05, exit_code: int = 17) -> None:
+        if isinstance(action, str) and action not in ("raise", "crash", "delay"):
+            raise ValueError(f"unknown fault action {action!r}")
+        if nth < 1 or (every is not None and every < 1):
+            raise ValueError("nth/every must be >= 1")
+        self._sites[site] = _Arming(action=action, nth=nth, every=every,
+                                    delay_sec=delay_sec, exit_code=exit_code)
+
+    def disarm(self, site: str) -> None:
+        self._sites.pop(site, None)
+
+    def reset(self) -> None:
+        self._sites = {}
+
+    # -- introspection --------------------------------------------------------
+    def calls(self, site: str) -> int:
+        a = self._sites.get(site)
+        return a.calls if a else 0
+
+    def fired(self, site: str) -> int:
+        a = self._sites.get(site)
+        return a.fired if a else 0
+
+    def armed(self) -> list[str]:
+        return sorted(self._sites)
+
+    # -- the call site --------------------------------------------------------
+    def fire(self, site: str, **ctx) -> None:
+        """Runtime hook: no-op unless ``site`` is armed and its schedule is
+        due. May raise :class:`InjectedFault`, sleep, or kill the process."""
+        if not self._sites:
+            return
+        arming = self._sites.get(site)
+        if arming is None or not arming.due():
+            return
+        action = arming.action
+        if callable(action):
+            action(ctx)
+            return
+        if action == "raise":
+            raise InjectedFault(f"{site} (call {arming.calls})")
+        if action == "delay":
+            time.sleep(arming.delay_sec)
+            return
+        # "crash": a hard kill — no cleanup, no atexit, no flush. Exactly
+        # what a power loss looks like to the durable log.
+        os._exit(arming.exit_code)
+
+
+#: Process-wide default injector (the library's built-in sites fire on it).
+INJECTOR = FaultInjector()
+fire = INJECTOR.fire
+
+
+# -- action helpers ----------------------------------------------------------
+def raise_on(predicate: Callable[["object"], bool],
+             message: str = "poison record") -> Callable[[Mapping], None]:
+    """Action for ``proc.*`` sites: raise iff the trigger batch contains a
+    FlowFile matching ``predicate``. Arm with ``every=1`` so every trigger is
+    inspected; the retry machinery then isolates the poison record and
+    quarantines it after ``max_retries``."""
+    def _action(ctx: Mapping) -> None:
+        for ff in ctx.get("batch") or ():
+            if predicate(ff):
+                raise InjectedFault(message)
+    return _action
+
+
+def compose(*actions: Callable[[Mapping], None]) -> Callable[[Mapping], None]:
+    """Run several callable actions in order at one site (e.g. a poison
+    predicate AND a periodic crash — the chaos mix the acceptance scenario
+    arms on the enrich stage)."""
+    def _action(ctx: Mapping) -> None:
+        for a in actions:
+            a(ctx)
+    return _action
+
+
+def raise_every_records(n: int) -> Callable[[Mapping], None]:
+    """Action for ``proc.*`` sites: raise after roughly every ``n`` records
+    have passed the site (triggers carry whole batches; the counter trips on
+    the batch that crosses each multiple of ``n``). Arm with ``every=1``."""
+    state = {"seen": 0, "next": n}
+
+    def _action(ctx: Mapping) -> None:
+        state["seen"] += len(ctx.get("batch") or ())
+        if state["seen"] >= state["next"]:
+            state["next"] = state["seen"] + n
+            raise InjectedFault(f"injected after ~{state['seen']} records")
+    return _action

@@ -1,15 +1,24 @@
 """FlowGraph: assembles processors + connections into a running dataflow
 (the NiFi canvas, paper Fig. 1/2) with provenance wired through and SEND
-events recorded at sinks."""
+events recorded at sinks.
+
+The graph is also the *supervisor* (paper: robustness in handling failures):
+``add(proc, restart_policy=...)`` sets a per-processor restart budget,
+``connect(..., max_retries=N)`` arms record-level retry on a connection,
+``connect(..., durable=log)`` makes a connection WAL-backed (crash recovery
+from the last acked frontier), and ``route_dead_letters_to(dlq)`` wires the
+quarantine path for poison/exhausted records. All knobs default off — a
+plain graph keeps the seed's fail-fast semantics.
+"""
 from __future__ import annotations
 
 import threading
 import time
 from typing import Callable
 
-from .connection import Connection
+from .connection import Connection, DurableConnection
 from .flowfile import FlowFile
-from .processor import FlowNode, Processor, Source, _Worker
+from .processor import FlowNode, Processor, RestartPolicy, Source, _Worker
 from .provenance import ProvenanceRepository
 
 
@@ -28,20 +37,30 @@ class FlowGraph:
         self._workers: list[_Worker] = []
         self._errors: list[tuple[str, BaseException]] = []
         self._lock = threading.Lock()
+        self._dlq_conn: Connection | None = None
+        self._dlq_node: FlowNode | None = None
 
     # -- assembly -------------------------------------------------------------
-    def add(self, processor: Processor) -> Processor:
+    def add(self, processor: Processor,
+            restart_policy: RestartPolicy | None = None) -> Processor:
         if processor.name in self.nodes:
             raise FlowError(f"duplicate processor name {processor.name!r}")
-        self.nodes[processor.name] = FlowNode(processor)
+        self.nodes[processor.name] = FlowNode(processor, restart_policy)
         return processor
 
     def connect(self, src: Processor | str, relationship: str,
                 dst: Processor | str,
                 object_threshold: int | None = None,
                 size_threshold: int | None = None,
-                prioritizer: Callable[[FlowFile], float] | None = None
+                prioritizer: Callable[[FlowFile], float] | None = None,
+                max_retries: int | None = None,
+                retry_penalty_sec: float | None = None,
+                durable=None
                 ) -> Connection:
+        """Wire ``src.relationship -> dst``. ``max_retries`` arms record
+        retry on the destination's input; ``durable`` (a ``PartitionedLog``)
+        makes that input a WAL-backed :class:`DurableConnection`. On fan-in
+        the first ``connect`` to a destination fixes its queue settings."""
         src_name = src if isinstance(src, str) else src.name
         dst_name = dst if isinstance(dst, str) else dst.name
         if src_name not in self.nodes or dst_name not in self.nodes:
@@ -58,9 +77,18 @@ class FlowGraph:
             kwargs["object_threshold"] = object_threshold
         if size_threshold is not None:
             kwargs["size_threshold"] = size_threshold
+        if max_retries is not None:
+            kwargs["max_retries"] = max_retries
+        if retry_penalty_sec is not None:
+            kwargs["retry_penalty_sec"] = retry_penalty_sec
         if dst_node.input is None:
-            conn = Connection(f"{src_name}:{relationship}->{dst_name}",
-                              prioritizer=prioritizer, **kwargs)
+            name = f"{src_name}:{relationship}->{dst_name}"
+            if durable is not None:
+                if prioritizer is not None:
+                    raise FlowError("durable connections are FIFO-only")
+                conn = DurableConnection(name, durable, **kwargs)
+            else:
+                conn = Connection(name, prioritizer=prioritizer, **kwargs)
             dst_node.input = conn
             self.connections.append(conn)
         else:
@@ -70,6 +98,32 @@ class FlowGraph:
         dst_node.upstreams.append(src_node)
         return conn
 
+    def route_dead_letters_to(self, dlq: Processor | str,
+                              object_threshold: int | None = None) -> Connection:
+        """Declare ``dlq`` (an already-``add``-ed processor, typically a
+        ``DeadLetterQueue``) as the graph-wide quarantine: any processor's
+        exhausted/poison records are offered to its input connection. The
+        node is kept alive until every other node finishes."""
+        name = dlq if isinstance(dlq, str) else dlq.name
+        if name not in self.nodes:
+            raise FlowError("route_dead_letters_to() before add()")
+        node = self.nodes[name]
+        if isinstance(node.processor, Source):
+            raise FlowError(f"{name} is a source; cannot be a dead-letter sink")
+        if node.input is None:
+            kwargs = {}
+            if object_threshold is not None:
+                kwargs["object_threshold"] = object_threshold
+            node.input = Connection(f"__dead_letters__->{name}", **kwargs)
+            self.connections.append(node.input)
+        elif object_threshold is not None:
+            raise FlowError(
+                f"{name} already has an input connection; "
+                "object_threshold cannot be applied retroactively")
+        self._dlq_conn = node.input
+        self._dlq_node = node
+        return node.input
+
     # -- execution --------------------------------------------------------------
     def _record_error(self, component: str, err: BaseException) -> None:
         with self._lock:
@@ -78,6 +132,11 @@ class FlowGraph:
 
     def start(self) -> None:
         self._validate()
+        if self._dlq_node is not None:
+            # the quarantine can receive from ANY node: it must outlive all
+            # of them before its drain-and-done termination check may pass
+            self._dlq_node.upstreams = [n for n in self.nodes.values()
+                                        if n is not self._dlq_node]
         for node in self.nodes.values():
             w = _Worker(node, self)
             self._workers.append(w)
@@ -116,9 +175,16 @@ class FlowGraph:
 
     # -- observability ------------------------------------------------------------
     def status(self) -> dict:
+        procs = {}
+        for n, fn in self.nodes.items():
+            snap = fn.processor.stats.snapshot()
+            snap["state"] = fn.state
+            snap["pending_retries"] = len(fn.pending_retries)
+            procs[n] = snap
         return {
-            "processors": {n: fn.processor.stats.snapshot()
-                           for n, fn in self.nodes.items()},
+            "processors": procs,
             "connections": [c.snapshot() for c in self.connections],
             "provenance_counts": self.provenance.counts(),
+            "failed": sorted(n for n, fn in self.nodes.items()
+                             if fn.state == "FAILED"),
         }

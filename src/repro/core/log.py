@@ -48,6 +48,8 @@ from dataclasses import dataclass
 from pathlib import Path
 from typing import Sequence
 
+from . import faults
+
 _HEADER = struct.Struct("<III")  # crc, key_len, val_len
 DEFAULT_SEGMENT_BYTES = 8 << 20  # 8 MiB segments
 
@@ -166,15 +168,22 @@ class _Segment:
         Byte-identical on disk to appending the records one at a time."""
         buf = bytearray()
         pos = self.next_pos
-        positions = self.positions
+        offsets = []
         pack, hsize = _HEADER.pack, _HEADER.size
         for key, value in records:
-            positions.append(pos)
+            offsets.append(pos)
             buf += pack(_crc(key, value), len(key), len(value))
             buf += key
             buf += value
             pos += hsize + len(key) + len(value)
+        # fault site: a "crash"/callable armed here dies with the packed
+        # buffer (fully or partially) unwritten — the torn-tail scenario
+        # recovery must truncate away. Fired before any index mutation so a
+        # "raise" action leaves the in-memory segment state untouched.
+        faults.fire("log.segment.append_batch", segment=self, buf=buf,
+                    records=records)
         self._fh.write(buf)
+        self.positions.extend(offsets)
         self.next_pos = pos
 
     def seal(self) -> None:
@@ -379,6 +388,21 @@ class _Partition:
                 deleted += 1
         return deleted
 
+    def drop_segments_below(self, offset: int) -> int:
+        """Drop leading whole segments whose every record sits below
+        ``offset`` (offset-targeted retention — the WAL frontier GC). The
+        active segment is never dropped."""
+        deleted = 0
+        with self.lock:
+            while (len(self.segments) > 1
+                   and self.segments[0].base_offset + self.segments[0].count
+                       <= offset):
+                victim = self.segments.pop(0)
+                victim.close()
+                victim.path.unlink(missing_ok=True)
+                deleted += 1
+        return deleted
+
     def close(self) -> None:
         with self.lock:
             for s in self.segments:
@@ -507,6 +531,23 @@ class PartitionedLog:
         return [LogRecord(topic, partition, off, k, v)
                 for off, k, v in part.read(offset, max_records)]
 
+    def iter_records(self, topic: str, partition: int | None = None,
+                     batch_records: int = 512):
+        """Scan every retained record of a topic (one partition, or all in
+        partition order), yielding ``LogRecord``s from each partition's
+        ``begin_offset`` to its end. The canonical full-scan loop — tests,
+        benches, and DLQ replay share it instead of hand-rolling offsets."""
+        parts = (range(self.num_partitions(topic))
+                 if partition is None else (partition,))
+        for p in parts:
+            off = self.begin_offset(topic, p)
+            while True:
+                recs = self.read(topic, p, off, max_records=batch_records)
+                if not recs:
+                    break
+                yield from recs
+                off = recs[-1].offset + 1
+
     def begin_offset(self, topic: str, partition: int) -> int:
         return self._part_list(topic)[partition].begin_offset
 
@@ -519,6 +560,10 @@ class PartitionedLog:
     def enforce_retention(self, topic: str, retention_bytes: int) -> int:
         return sum(p.enforce_retention(retention_bytes)
                    for p in self._part_list(topic))
+
+    def drop_segments_below(self, topic: str, partition: int,
+                            offset: int) -> int:
+        return self._part_list(topic)[partition].drop_segments_below(offset)
 
     def close(self) -> None:
         with self._lock:

@@ -16,6 +16,10 @@ class ComponentStats:
     out_records: int = 0
     out_bytes: int = 0
     dropped: int = 0
+    # fault-tolerance counters (supervisor / retry / dead-letter paths)
+    restarts: int = 0
+    retries: int = 0
+    dead_lettered: int = 0
 
     def snapshot(self) -> dict:
         return {
@@ -23,6 +27,8 @@ class ComponentStats:
             "in_records": self.in_records, "in_bytes": self.in_bytes,
             "out_records": self.out_records, "out_bytes": self.out_bytes,
             "dropped": self.dropped,
+            "restarts": self.restarts, "retries": self.retries,
+            "dead_lettered": self.dead_lettered,
         }
 
 

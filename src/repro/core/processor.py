@@ -13,15 +13,38 @@ draining *its* input — NiFi's transitive backpressure, for free.
 Termination: a source finishes when its generator is exhausted; an interior
 processor finishes when every upstream is finished and its input is drained.
 ``FlowGraph.run_to_completion`` joins the whole DAG.
+
+Fault tolerance (supervision, retry, dead-lettering)
+----------------------------------------------------
+Each worker runs under a supervisor loop governed by its node's
+:class:`RestartPolicy`. A processor-level failure (an exception escaping the
+trigger path) restarts the processor with exponential backoff up to
+``max_restarts``; the in-flight batch is re-queued first so no record is
+lost (at-least-once), and a source restart fast-forwards its replayable
+generator past the records it already emitted. When the restart budget is
+exhausted the node enters the terminal ``FAILED`` state and the graph
+surfaces a ``FlowError``.
+
+Record-level (data) failures take the retry path instead when the input
+connection opted in with ``max_retries > 0``: a failing batch is
+reprocessed record-at-a-time to isolate the poison record,
+which is penalized (``retry_penalty_sec * 2**k``) and re-queued with a
+``retry.count`` attribute; once the count exceeds ``max_retries`` the record
+is routed to the graph's dead-letter connection (or dropped with DROP
+provenance if none is wired). Innocent records in a failing batch may be
+re-emitted — duplicates are allowed, loss is not.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 import traceback
+from dataclasses import dataclass
 from typing import Callable, Iterable, Iterator, Mapping
 
-from .connection import Connection
+from . import faults
+from .connection import Connection, DurableConnection
 from .flowfile import FlowFile
 from .metrics import ComponentStats
 from .provenance import ProvenanceRepository
@@ -31,6 +54,37 @@ REL_FAILURE = "failure"
 
 #: Relationship name whose FlowFiles are dropped (with DROP provenance).
 REL_DROP = "__drop__"
+
+#: FlowFile attributes stamped by the retry / dead-letter machinery.
+ATTR_RETRY_COUNT = "retry.count"
+ATTR_LAST_ERROR = "retry.last.error"
+ATTR_RETRY_NOT_BEFORE = "retry.not.before"
+ATTR_DEAD_LETTER_SOURCE = "dead.letter.source"
+ATTR_DEAD_LETTER_REASON = "dead.letter.reason"
+
+#: ceiling on any single penalization wait (also guards against a stale
+#: ``retry.not.before`` replayed from a previous boot's monotonic clock)
+_MAX_PENALTY_WAIT = 2.0
+
+
+@dataclass(frozen=True)
+class RestartPolicy:
+    """Per-processor supervision policy (exponential backoff).
+
+    The default (``max_restarts=0``) preserves fail-fast semantics: the
+    first escaped exception marks the node ``FAILED`` and stops the graph.
+    Restart ``k`` (1-based) sleeps
+    ``min(backoff_cap_sec, backoff_base_sec * backoff_factor**(k-1))``.
+    """
+
+    max_restarts: int = 0
+    backoff_base_sec: float = 0.05
+    backoff_factor: float = 2.0
+    backoff_cap_sec: float = 2.0
+
+    def backoff_for(self, restart_no: int) -> float:
+        return min(self.backoff_cap_sec,
+                   self.backoff_base_sec * self.backoff_factor ** (restart_no - 1))
 
 
 class Processor:
@@ -47,6 +101,11 @@ class Processor:
     #: stall leaves the burst's tail buffered until the next yield or
     #: end-of-stream — bounding that would need a flush timer thread.)
     source_linger_sec: float = 0.05
+    #: processors that absorb records into internal state across triggers
+    #: (e.g. MergeContent) set this: a durable input connection then defers
+    #: its acks to the final flush, so a crash replays the whole buffered
+    #: window instead of losing it (at-least-once for buffering stages).
+    buffers_across_triggers: bool = False
 
     def __init__(self, name: str) -> None:
         self.name = name
@@ -94,38 +153,64 @@ class _Worker(threading.Thread):
         self.error: BaseException | None = None
 
     def run(self) -> None:
+        node, graph = self.node, self.graph
+        proc = node.processor
+        policy = node.restart_policy
         try:
-            if isinstance(self.node.processor, Source):
-                self._run_source()
-            else:
-                self._run_interior()
-        except BaseException as e:         # surfaced by FlowGraph.join
-            self.error = e
-            self.graph._record_error(self.node.processor.name, e)
+            while True:
+                try:
+                    node.state = "RUNNING"
+                    if isinstance(proc, Source):
+                        self._run_source()
+                    else:
+                        self._run_interior()
+                    # a worker that bailed out because the graph is being
+                    # torn down did not finish its stream — say so
+                    node.state = ("STOPPED" if graph.stopping.is_set()
+                                  else "COMPLETED")
+                    return
+                except BaseException as e:   # supervised (paper: robustness)
+                    if (graph.stopping.is_set()
+                            or node.restarts >= policy.max_restarts):
+                        node.state = "FAILED"
+                        self.error = e       # surfaced by FlowGraph.join
+                        graph._record_error(proc.name, e)
+                        return
+                    node.restarts += 1
+                    proc.stats.restarts += 1
+                    delay = policy.backoff_for(node.restarts)
+                    node.backoff_history.append(delay)
+                    node.state = "RESTARTING"
+                    node.last_error = e
+                    if graph.stopping.wait(delay):
+                        node.state = "STOPPED"
+                        return
         finally:
-            self.node.done.set()
+            node.done.set()
 
     # ------------------------------------------------------------------
     def _emit(self, rel: str, ff: FlowFile) -> None:
         self._emit_batch(rel, [ff])
 
-    def _emit_batch(self, rel: str, ffs: list[FlowFile]) -> None:
+    def _emit_batch(self, rel: str, ffs: list[FlowFile]) -> bool:
         """Route a same-relationship batch downstream: provenance per record,
-        but one ``offer_batch`` (single lock/notify) per connection."""
+        but one ``offer_batch`` (single lock/notify) per connection. Returns
+        False when a shutdown (``graph.stopping``) truncated delivery — the
+        caller must not ack a durable input for a partially-emitted batch."""
         node = self.node
         proc = node.processor
         prov = self.graph.provenance
         if rel == REL_DROP:
             prov.record_batch("DROP", ffs, proc.name)
             proc.stats.dropped += len(ffs)
-            return
+            return True
         conns = node.outputs.get(rel)
         if not conns:
             # unwired relationship == auto-terminated (NiFi semantics)
             prov.record_batch("DROP", ffs, proc.name,
                               details=f"auto-terminated:{rel}")
             proc.stats.dropped += len(ffs)
-            return
+            return True
         prov.record_batch("ROUTE", ffs, proc.name, details=rel)
         delivered = len(ffs)
         for conn in conns:
@@ -136,31 +221,44 @@ class _Worker(threading.Thread):
             delivered = min(delivered, offered)
         proc.stats.out_records += delivered
         proc.stats.out_bytes += sum(ff.size for ff in ffs[:delivered])
+        return delivered == len(ffs)
 
-    def _emit_all(self, outputs: Iterable[tuple[str, FlowFile]]) -> None:
+    def _emit_all(self, outputs: Iterable[tuple[str, FlowFile]]) -> bool:
         """Group a trigger's outputs by relationship (order preserved within
-        each relationship) and emit each group as one batch."""
+        each relationship) and emit each group as one batch. Returns True
+        only if every record was fully delivered downstream."""
         by_rel: dict[str, list[FlowFile]] = {}
         for rel, ff in outputs:
             by_rel.setdefault(rel, []).append(ff)
+        complete = True
         for rel, ffs in by_rel.items():
-            self._emit_batch(rel, ffs)
+            complete &= self._emit_batch(rel, ffs)
+        return complete
 
     def _run_source(self) -> None:
         node = self.node
         proc = node.processor
         proc.on_start()
         assert isinstance(proc, Source)
+        site = "proc." + proc.name
         batch: list[FlowFile] = []
 
         def trigger(batch: list[FlowFile]) -> None:
+            faults.fire(site, batch=batch)
             self.graph.provenance.record_batch("CREATE", batch, proc.name)
             proc.stats.in_records += len(batch)
             proc.stats.in_bytes += sum(ff.size for ff in batch)
             self._emit_all(proc.on_trigger(batch))
+            # counted only after a full emit: a supervisor restart replays
+            # the replayable generator from here (at-least-once — a crash
+            # mid-emit re-emits the whole batch, duplicates allowed)
+            node.source_emitted += len(batch)
 
         batch_t0 = 0.0
         it = iter(proc.records())
+        if node.source_emitted:      # restart: fast-forward the replay
+            next(itertools.islice(it, node.source_emitted,
+                                  node.source_emitted), None)
         pull_was_slow = True     # deliver the first record immediately
         while True:
             t_pull = time.monotonic()
@@ -198,24 +296,186 @@ class _Worker(threading.Thread):
         proc.on_start()
         conn = node.input
         assert conn is not None
+        site = "proc." + proc.name
+        durable = isinstance(conn, DurableConnection)
+        # buffering processors ack only at final flush: an ack at trigger
+        # boundaries would cover records still sitting in internal state,
+        # which a crash would then silently lose
+        defer_acks = durable and proc.buffers_across_triggers
+        deferred = 0
         while True:
+            if node.pending_retries:
+                self._requeue_due_retries(conn)
+            if self.graph.stopping.is_set():
+                # abandon the backlog on shutdown. This also closes a WAL
+                # frontier hole: the count-based frontier tolerates at most
+                # one unsettled (un-acked) batch, and unsettlement only
+                # happens when stopping truncates an emit — so no batch may
+                # be processed (and acked) after stopping lands.
+                break
             batch = conn.poll_batch(proc.batch_size, timeout=0.05)
             if not batch:
+                if self.graph.stopping.is_set():
+                    break
+                if node.pending_retries:
+                    continue          # penalized records still owed to us
                 upstream_done = all(u.done.is_set() for u in node.upstreams)
-                if (upstream_done and len(conn) == 0) or self.graph.stopping.is_set():
+                if upstream_done and len(conn) == 0:
                     break
                 continue
+            if durable and conn.max_retries > 0:
+                self._wait_for_penalties(batch)
             proc.stats.in_records += len(batch)
             proc.stats.in_bytes += sum(ff.size for ff in batch)
-            self._emit_all(proc.on_trigger(batch))
-        self._emit_all(proc.final_flush())
+            settled = self._process_batch(conn, batch, site)
+            if durable and settled:
+                # every record emitted / re-journaled / dead-lettered: the
+                # WAL frontier may advance past this batch
+                if defer_acks:
+                    deferred += len(batch)
+                else:
+                    conn.ack(len(batch))
+        flushed = self._emit_all(proc.final_flush())
+        if defer_acks and deferred and flushed \
+                and not self.graph.stopping.is_set():
+            conn.ack(deferred)
         proc.on_stop()
+
+    def _wait_for_penalties(self, batch: list[FlowFile]) -> None:
+        """Durable-connection penalization: retried records are re-queued
+        immediately (the WAL frontier must stay a strict prefix, so their
+        delayed copies cannot live outside the journal), carrying a
+        ``retry.not.before`` stamp instead. Honor it at delivery time —
+        head-of-line, like NiFi's penalized FlowFiles."""
+        now = time.monotonic()
+        wait = 0.0
+        for ff in batch:
+            nb = ff.attributes.get(ATTR_RETRY_NOT_BEFORE)
+            if nb is not None:
+                wait = max(wait, float(nb) - now)
+        if wait > 0:
+            self.graph.stopping.wait(min(wait, _MAX_PENALTY_WAIT))
+
+    # -- failure handling ------------------------------------------------------
+    def _requeue_due_retries(self, conn: Connection) -> None:
+        """Move penalized records whose penalty expired back into the input
+        queue (on a DurableConnection they were already re-journaled and
+        re-queued at failure time, so this list stays empty there)."""
+        node = self.node
+        now = time.monotonic()
+        due = [ff for t, ff in node.pending_retries if t <= now]
+        if not due:
+            return
+        node.pending_retries = [(t, ff) for t, ff in node.pending_retries
+                                if t > now]
+        # requeue() bypasses backpressure: this worker is the queue's only
+        # drainer, so a blocking offer against a full queue would deadlock
+        conn.requeue(due)
+
+    def _process_batch(self, conn: Connection, batch: list[FlowFile],
+                       site: str, top: bool = True) -> bool:
+        """Trigger the processor on ``batch``; on failure either escalate to
+        the supervisor (re-queueing the in-flight batch first so nothing is
+        lost) or, when retry/dead-letter routing is configured, isolate the
+        poison record. Returns True when every record is settled (emitted,
+        re-queued, or dead-lettered)."""
+        proc = self.node.processor
+        graph = self.graph
+        try:
+            faults.fire(site, batch=batch)
+            return self._emit_all(proc.on_trigger(batch))
+        except Exception as e:
+            # retry only when the connection opted in; a wired DLQ alone must
+            # not turn every transient failure into an instant quarantine
+            # (and the quarantine itself failing must escalate, not
+            # re-dead-letter into its own input forever)
+            retryable = (conn.max_retries > 0
+                         and self.node is not graph._dlq_node)
+            if not retryable:
+                # escalate to the supervisor — but first hand the in-flight
+                # batch back to the queue so a restart cannot lose it.
+                # requeue() bypasses backpressure: blocking here would
+                # deadlock (this worker is the queue's only drainer).
+                conn.requeue(batch)
+                # never ack for an ack-deferring processor: the frontier is
+                # a count-prefix, so this ack would cover the OLDEST unacked
+                # records — the ones still buffered inside the processor —
+                # not the batch just requeued
+                if (top and isinstance(conn, DurableConnection)
+                        and not proc.buffers_across_triggers):
+                    conn.ack(len(batch))
+                raise
+            if len(batch) == 1:
+                return self._retry_or_dead_letter(conn, batch[0], e)
+            # reprocess record-at-a-time: innocents pass, poison isolates
+            settled = True
+            for ff in batch:
+                settled &= self._process_batch(conn, [ff], site, top=False)
+            return settled
+
+    def _retry_or_dead_letter(self, conn: Connection, ff: FlowFile,
+                              err: Exception) -> bool:
+        """Penalize-and-retry a failing record; quarantine it once the
+        connection's retry budget is spent."""
+        node = self.node
+        proc = node.processor
+        rc = int(ff.attributes.get(ATTR_RETRY_COUNT, "0"))
+        if rc >= conn.max_retries:
+            return self._dead_letter([ff], err)
+        due = time.monotonic() + conn.retry_penalty_sec * (2 ** rc)
+        penalized = ff.with_attributes(**{
+            ATTR_RETRY_COUNT: str(rc + 1),
+            ATTR_LAST_ERROR: type(err).__name__,
+            ATTR_RETRY_NOT_BEFORE: f"{due:.6f}"})
+        proc.stats.retries += 1
+        self.graph.provenance.record_batch("ROUTE", [penalized], proc.name,
+                                           details=f"retry:{rc + 1}")
+        if isinstance(conn, DurableConnection):
+            # re-journal immediately so the acked frontier stays a prefix;
+            # the penalty is honored at delivery time (_wait_for_penalties)
+            conn.requeue([penalized])
+            return True
+        node.pending_retries.append((due, penalized))
+        return True
+
+    def _dead_letter(self, ffs: list[FlowFile], err: Exception) -> bool:
+        """Route exhausted/poison records to the graph's dead-letter
+        connection (or drop-with-provenance when none is wired)."""
+        proc = self.node.processor
+        graph = self.graph
+        tagged = [ff.with_attributes(**{
+            ATTR_DEAD_LETTER_SOURCE: proc.name,
+            ATTR_DEAD_LETTER_REASON: f"{type(err).__name__}: {err}"})
+            for ff in ffs]
+        proc.stats.dead_lettered += len(ffs)
+        dlq = graph._dlq_conn
+        if dlq is None:
+            graph.provenance.record_batch("DROP", tagged, proc.name,
+                                          details="dead-letter:unrouted")
+            proc.stats.dropped += len(ffs)
+            return True
+        graph.provenance.record_batch("ROUTE", tagged, proc.name,
+                                      details="dead-letter")
+        offered = 0
+        while offered < len(tagged) and not graph.stopping.is_set():
+            offered += dlq.offer_batch(tagged[offered:], block=True,
+                                       timeout=0.25)
+        return offered == len(tagged)
 
 
 class FlowNode:
-    def __init__(self, processor: Processor) -> None:
+    def __init__(self, processor: Processor,
+                 restart_policy: RestartPolicy | None = None) -> None:
         self.processor = processor
         self.input: Connection | None = None
         self.outputs: dict[str, list[Connection]] = {}
         self.upstreams: list[FlowNode] = []
         self.done = threading.Event()
+        # -- supervision state (see module docstring) -------------------------
+        self.restart_policy = restart_policy or RestartPolicy()
+        self.state = "PENDING"   # RUNNING|RESTARTING|COMPLETED|STOPPED|FAILED
+        self.restarts = 0
+        self.backoff_history: list[float] = []
+        self.last_error: BaseException | None = None
+        self.pending_retries: list[tuple[float, FlowFile]] = []
+        self.source_emitted = 0

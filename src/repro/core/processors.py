@@ -18,10 +18,11 @@ from __future__ import annotations
 import hashlib
 import json
 import math
+import struct
 import time
 import zlib
 from pathlib import Path
-from typing import Callable, Iterable, Mapping
+from typing import Callable, Iterable, Iterator, Mapping
 
 from .connection import RateThrottle
 from .delivery import Producer
@@ -196,6 +197,8 @@ class MergeContent(Processor):
     """Bundle up to ``max_records`` / ``max_bytes`` records into one FlowFile
     (newline-joined). Time-based flush keeps latency bounded."""
 
+    buffers_across_triggers = True     # durable inputs defer acks (see base)
+
     def __init__(self, name: str = "MergeContent", max_records: int = 64,
                  max_bytes: int = 1 << 20, max_latency_sec: float = 1.0,
                  separator: bytes = b"\n") -> None:
@@ -316,6 +319,66 @@ class PublishToLog(Processor):
     def on_stop(self) -> None:
         self._producer.flush()
         self.log.flush_topic(self.topic, fsync=True)
+
+
+class DeadLetterQueue(Processor):
+    """Quarantine sink for poison / retry-exhausted records (the robustness
+    half of the paper's claim). Persists each record to a ``PartitionedLog``
+    topic **keyed by its provenance lineage id**, so a quarantined record can
+    be joined back to its full lineage (paper Fig. 4) and replayed after the
+    bug that poisoned it is fixed.
+
+    Wire it with ``graph.route_dead_letters_to(dlq)``; it also accepts
+    explicit connections (e.g. a processor's ``failure`` relationship).
+    """
+
+    _VLEN = struct.Struct("<I")
+
+    def __init__(self, name: str, log: PartitionedLog, *,
+                 topic: str = "dead-letters", partitions: int = 1) -> None:
+        super().__init__(name)
+        self.log = log
+        self.topic = topic
+        log.create_topic(topic, partitions=partitions)
+        self._producer = Producer(log, topic)
+        self.quarantined = 0
+
+    # -- wire format: key = lineage id, value = len(header)|header|content --
+    @classmethod
+    def encode(cls, ff: FlowFile) -> tuple[bytes, bytes]:
+        header, content = ff.to_record()
+        return (ff.lineage_id.encode(),
+                cls._VLEN.pack(len(header)) + header + content)
+
+    @classmethod
+    def decode(cls, value: bytes) -> FlowFile:
+        (hlen,) = cls._VLEN.unpack_from(value, 0)
+        start = cls._VLEN.size
+        return FlowFile.from_record(value[start:start + hlen],
+                                    value[start + hlen:])
+
+    def process(self, ff: FlowFile):
+        return self.on_trigger([ff])
+
+    def on_trigger(self, batch: list[FlowFile]):
+        encode = self.encode
+        self._producer.send_many((*encode(ff), None) for ff in batch)
+        self.quarantined += len(batch)
+        # quarantine is cold-path: land every trigger immediately so the
+        # operator (and the replay helper) sees poison records right away
+        self._producer.flush()
+        return ()
+
+    def on_stop(self) -> None:
+        self._producer.flush()
+        self.log.flush_topic(self.topic, fsync=True)
+
+    @classmethod
+    def replay(cls, log: PartitionedLog, topic: str = "dead-letters"
+               ) -> Iterator[FlowFile]:
+        """Yield every quarantined FlowFile (for re-ingestion once fixed)."""
+        for r in log.iter_records(topic):
+            yield cls.decode(r.value)
 
 
 class FileSink(Processor):

@@ -47,14 +47,20 @@ def synth_article(rng: random.Random, idx: int, source: str) -> dict:
 
 class RssAggregatorSource:
     """Big-RSS analogue. ``dup_rate`` injects syndicated duplicates,
-    ``junk_rate`` injects malformed JSON (erroneous items to filter)."""
+    ``junk_rate`` injects malformed JSON (erroneous items to filter), and
+    ``poison_rate`` injects well-formed articles tagged ``kind="poison"`` —
+    records a downstream stage chokes on, for exercising the retry /
+    dead-letter machinery. With ``poison_rate=0`` (default) the yielded
+    stream is bit-identical to the seed's (same rng consumption)."""
 
     def __init__(self, count: int, seed: int = 0, dup_rate: float = 0.08,
-                 junk_rate: float = 0.01, name: str = "big-rss") -> None:
+                 junk_rate: float = 0.01, poison_rate: float = 0.0,
+                 name: str = "big-rss") -> None:
         self.count = count
         self.seed = seed
         self.dup_rate = dup_rate
         self.junk_rate = junk_rate
+        self.poison_rate = poison_rate
         self.name = name
 
     def __call__(self) -> Iterator[FlowFile]:
@@ -66,7 +72,15 @@ class RssAggregatorSource:
                 yield make_flowfile(b"\x00corrupt\xff" + bytes([i % 251]),
                                     source=self.name, kind="junk")
                 continue
-            if recent and r < self.junk_rate + self.dup_rate:
+            if (self.poison_rate
+                    and r < self.junk_rate + self.poison_rate):
+                art = synth_article(rng, i, rng.choice(_SOURCES_RSS))
+                art["poison"] = 1
+                yield make_flowfile(json.dumps(art, separators=(",", ":")),
+                                    source=self.name, kind="poison",
+                                    lang=art["lang"], origin=art["source"])
+                continue
+            if recent and r < self.junk_rate + self.poison_rate + self.dup_rate:
                 art = rng.choice(recent)          # syndicated duplicate
             else:
                 art = synth_article(rng, i, rng.choice(_SOURCES_RSS))

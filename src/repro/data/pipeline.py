@@ -9,10 +9,11 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from ..core import (ConsumerGroup, DetectDuplicate, ExecuteScript, FlowGraph,
-                    LookupEnrich, PartitionedLog, PublishToLog,
-                    RouteOnAttribute, RssAggregatorSource, FirehoseSource,
-                    Source, WebSocketSource)
+from ..core import (ConsumerGroup, DeadLetterQueue, DetectDuplicate,
+                    ExecuteScript, FlowGraph, LookupEnrich, PartitionedLog,
+                    PublishToLog, RestartPolicy, RouteOnAttribute,
+                    RssAggregatorSource, FirehoseSource, Source,
+                    WebSocketSource)
 from ..core.delivery import Consumer
 from .loader import StreamingDataLoader
 
@@ -28,9 +29,23 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
                         n_firehose: int = 2000, n_ws: int = 500,
                         partitions: int = 8, dedup_mode: str = "exact",
                         seed: int = 0,
-                        route_sample: int = 1) -> tuple[FlowGraph, PartitionedLog]:
+                        route_sample: int = 1,
+                        restart_policy: RestartPolicy | None = None,
+                        max_retries: int = 0,
+                        dead_letter_topic: str | None = None,
+                        durable: bool = False,
+                        poison_rate: float = 0.0
+                        ) -> tuple[FlowGraph, PartitionedLog]:
     """The paper §IV case study: returns (flow, log) with topic ``articles``
-    (clean, deduped, enriched news) and topic ``events`` (websocket feed)."""
+    (clean, deduped, enriched news) and topic ``events`` (websocket feed).
+
+    Fault-tolerance knobs (all off by default — the seed topology):
+    ``restart_policy`` supervises every non-source processor;
+    ``max_retries`` arms record retry on every interior connection;
+    ``dead_letter_topic`` wires a ``DeadLetterQueue`` quarantine;
+    ``durable`` makes the interior connections WAL-backed through ``log``;
+    ``poison_rate`` makes the RSS source emit records the enrich stage can be
+    made to choke on (see ``faults.raise_on``)."""
     root = Path(root)
     log = PartitionedLog(root / "log")
     log.create_topic("articles", partitions=partitions)
@@ -39,9 +54,16 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
     from ..core import ProvenanceRepository
     g = FlowGraph("news-pipeline",
                   provenance=ProvenanceRepository(route_sample=route_sample))
-    rss = g.add(Source("big-rss", RssAggregatorSource(n_rss, seed=seed)))
-    fire = g.add(Source("twitter", FirehoseSource(n_firehose, seed=seed + 1)))
-    ws = g.add(Source("websocket", WebSocketSource(n_ws, seed=seed + 2)))
+    conn_kw = {"max_retries": max_retries} if max_retries else {}
+    if durable:
+        conn_kw["durable"] = log
+    add_kw = {"restart_policy": restart_policy} if restart_policy else {}
+    rss = g.add(Source("big-rss", RssAggregatorSource(
+        n_rss, seed=seed, poison_rate=poison_rate)), **add_kw)
+    fire = g.add(Source("twitter", FirehoseSource(n_firehose, seed=seed + 1)),
+                 **add_kw)
+    ws = g.add(Source("websocket", WebSocketSource(n_ws, seed=seed + 2)),
+               **add_kw)
 
     def parse(ff):
         try:
@@ -56,33 +78,68 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
             doc_id=str(doc.get("id", "")),
             lang=str(doc.get("lang", "")),
             text=(text + " " + body).strip())
-    parser = g.add(ExecuteScript("parse", parse))
+    parser = g.add(ExecuteScript("parse", parse), **add_kw)
 
     dedup = g.add(DetectDuplicate(
         "dedup", mode=dedup_mode,
-        key_fn=lambda ff: ff.attributes.get("text", "").encode()))
+        key_fn=lambda ff: ff.attributes.get("text", "").encode()), **add_kw)
 
     enrich = g.add(LookupEnrich(
         "enrich", SOURCE_REGIONS,
-        key_fn=lambda ff: ff.attributes.get("origin", "")))
+        key_fn=lambda ff: ff.attributes.get("origin", "")), **add_kw)
 
     route = g.add(RouteOnAttribute("route", {
         "en": lambda ff: ff.attributes.get("lang") == "en",
         "other": lambda ff: True,
-    }))
+    }), **add_kw)
 
-    pub_articles = g.add(PublishToLog("pub-articles", log, "articles"))
-    pub_events = g.add(PublishToLog("pub-events", log, "events"))
+    pub_articles = g.add(PublishToLog("pub-articles", log, "articles"),
+                         **add_kw)
+    pub_events = g.add(PublishToLog("pub-events", log, "events"), **add_kw)
 
-    g.connect(rss, "success", parser)
+    g.connect(rss, "success", parser, **conn_kw)
     g.connect(fire, "success", parser)
-    g.connect(ws, "success", pub_events)
-    g.connect(parser, "success", dedup)
-    g.connect(dedup, "unique", enrich)
-    g.connect(enrich, "success", route)
-    g.connect(route, "en", pub_articles)
+    g.connect(ws, "success", pub_events, **conn_kw)
+    g.connect(parser, "success", dedup, **conn_kw)
+    g.connect(dedup, "unique", enrich, **conn_kw)
+    g.connect(enrich, "success", route, **conn_kw)
+    g.connect(route, "en", pub_articles, **conn_kw)
     g.connect(route, "other", pub_articles)   # all langs land, tagged
+    if dead_letter_topic:
+        dlq = g.add(DeadLetterQueue("dead-letter", log,
+                                    topic=dead_letter_topic))
+        g.route_dead_letters_to(dlq)
     return g, log
+
+
+def arm_news_chaos(*, crash_every: int = 500, source_nth: int = 4,
+                   source_every: int = 8) -> None:
+    """Arm the case study's standard chaos mix on the process-wide injector:
+    the enrich stage chokes on poison records AND raises every
+    ~``crash_every`` records (both absorbed by the retry machinery), while
+    the RSS source — which has no input connection — raises on a trigger
+    schedule, exercising the supervisor restart + replayable-generator
+    fast-forward path. Caller must ``INJECTOR.reset()`` afterwards."""
+    from ..core.faults import (INJECTOR, compose, raise_every_records,
+                               raise_on)
+    INJECTOR.arm("proc.enrich", compose(
+        raise_on(lambda ff: ff.attributes.get("kind") == "poison",
+                 "poison record"),
+        raise_every_records(crash_every)), every=1)
+    INJECTOR.arm("proc.big-rss", "raise", nth=source_nth, every=source_every)
+
+
+def expected_clean_doc_ids(n_rss: int, seed: int,
+                           poison_rate: float) -> set[str]:
+    """Replay the seeded RSS source: the doc ids of every non-junk,
+    non-poison article (duplicates collapse into the set) — the ground truth
+    the zero-record-loss acceptance checks the landed topic against."""
+    out: set[str] = set()
+    for ff in RssAggregatorSource(n_rss, seed=seed,
+                                  poison_rate=poison_rate)():
+        if ff.attributes.get("kind") == "article":
+            out.add(str(json.loads(ff.content)["id"]))
+    return out
 
 
 def attach_training_loader(log: PartitionedLog, *, topic: str = "articles",

@@ -21,3 +21,12 @@ def tmp_log(tmp_path):
     log = PartitionedLog(tmp_path / "log")
     yield log
     log.close()
+
+
+@pytest.fixture(autouse=True)
+def _reset_fault_injector():
+    """Disarm the process-wide fault injector after every test — an armed
+    site leaking across tests would fire in unrelated code."""
+    yield
+    from repro.core.faults import INJECTOR
+    INJECTOR.reset()

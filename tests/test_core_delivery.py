@@ -169,6 +169,75 @@ def test_poll_sees_interleaved_appends_despite_end_offset_cache(tmp_log):
         assert c.lag() == 0
 
 
+def test_dead_member_uncommitted_records_redelivered(tmp_log):
+    """A member that dies after poll() but before commit() must have its
+    records redelivered to the surviving member after rebalance."""
+    fill(tmp_log, partitions=4, n=40)
+    g = ConsumerGroup(tmp_log, "t", "grp")
+    c0 = g.add_member("m0")
+    c1 = g.add_member("m1")
+    while c0.lag():
+        c0.poll(max_records=8)
+        c0.commit()                       # the healthy member commits
+    dead_partitions = set(c1.assignment)
+    died_with = []
+    while True:                           # m1 consumes but NEVER commits
+        recs = c1.poll(max_records=8)
+        if not recs:
+            break
+        died_with.extend(recs)
+    assert died_with
+    g.remove_member("m1")                 # failure detector evicts m1
+    assert sorted(c0.assignment) == list(range(4))
+    redelivered = []
+    while True:
+        recs = c0.poll(max_records=8)
+        if not recs:
+            break
+        redelivered.extend(recs)
+    # every record the dead member read-but-didn't-commit comes back
+    assert {(r.partition, r.offset) for r in died_with} <= \
+           {(r.partition, r.offset) for r in redelivered}
+    # ...and the survivor's own committed partitions are not rewound
+    assert {r.partition for r in redelivered} <= dead_partitions
+
+
+def test_zombie_member_raises_stale_generation(tmp_log):
+    """The evicted member is a zombie: its next poll must fail loudly (fenced
+    by the group generation), not silently double-consume."""
+    from repro.core import StaleGeneration as SG
+    from repro.core.faults import INJECTOR, InjectedFault
+
+    fill(tmp_log, partitions=2, n=20)
+    g = ConsumerGroup(tmp_log, "t", "grp")
+    c0 = g.add_member("m0")
+    c1 = g.add_member("m1")
+    # deterministic death: the injector kills m1's poll after it has read
+    # (but not committed) its partition
+    c1.poll(max_records=100)
+
+    def kill_m1(ctx):
+        if ctx["consumer"].member_id == "m1":
+            raise InjectedFault("m1 died")
+    INJECTOR.arm("delivery.consumer.poll", kill_m1, every=1)
+    with pytest.raises(InjectedFault):
+        c1.poll()
+    INJECTOR.reset()
+    g.remove_member("m1")                 # group notices the death
+    with pytest.raises(SG):
+        c1.poll()                         # zombie is fenced
+    # survivor owns everything and can finish the job
+    assert sorted(c0.assignment) == [0, 1]
+    total = []
+    while True:
+        recs = c0.poll(max_records=50)
+        if not recs:
+            break
+        total.extend(recs)
+    assert {(r.partition, r.offset) for r in total} == \
+           {(p, o) for p in range(2) for o in range(10)}
+
+
 def test_offset_store_atomic_persistence(tmp_path):
     s = OffsetStore(tmp_path / "offsets.json")
     s.commit("g", "t", {0: 5, 1: 7})

@@ -1,0 +1,152 @@
+"""Crash-recovery property tests: a writer process is hard-killed (via
+``FaultInjector``) mid-``append_batch`` — including across a segment roll —
+and the reopened log must recover to a clean prefix with no torn records.
+A flow over a WAL-backed ``DurableConnection`` killed mid-run must resume
+from its last acked frontier with at-least-once delivery.
+
+Subprocess-based (a real ``os._exit``, no interpreter cleanup) — marked
+``slow``; deselect with ``-m 'not slow'``.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.core import DurableConnection, PartitionedLog
+from repro.core.log import _HEADER
+
+pytestmark = pytest.mark.slow
+
+ROOT = Path(__file__).resolve().parent.parent
+
+N_RECORDS = 400
+BATCH = 50
+
+
+def run_sub(code: str, timeout=120) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=timeout,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp"})
+
+
+def _writer_code(root: Path, *, nth: int, segment_bytes: int) -> str:
+    """A child that appends batches, armed to die with a half-written
+    record on the ``nth`` contiguous chunk write."""
+    return textwrap.dedent(f"""
+    import os
+    from repro.core import PartitionedLog
+    from repro.core.faults import INJECTOR
+
+    def torn_write_then_die(ctx):
+        seg, buf = ctx["segment"], ctx["buf"]
+        seg._fh.write(buf[: max(1, len(buf) // 2)])   # half a chunk
+        seg._fh.flush()                               # make the tear visible
+        os._exit(23)
+
+    INJECTOR.arm("log.segment.append_batch", torn_write_then_die, nth={nth})
+    log = PartitionedLog(r"{root}", segment_bytes={segment_bytes})
+    log.create_topic("t", partitions=1)
+    recs = [(str(i).encode(), ("value-%05d" % i).encode() * 3)
+            for i in range({N_RECORDS})]
+    for start in range(0, {N_RECORDS}, {BATCH}):
+        log.append_batch("t", recs[start:start + {BATCH}], partition=0)
+        log.flush_topic("t", fsync=False)
+    os._exit(0)                                       # fault did not fire
+    """)
+
+
+def _assert_clean_prefix(root: Path, segment_bytes: int) -> int:
+    """Reopen and require: offsets form a contiguous prefix whose contents
+    byte-match the writer's deterministic records; appends continue."""
+    log = PartitionedLog(root, segment_bytes=segment_bytes)
+    end = log.end_offset("t", 0)
+    assert 0 < end < N_RECORDS                 # crashed mid-stream
+    recs = list(log.iter_records("t", 0, batch_records=64))
+    assert [r.offset for r in recs] == list(range(end))
+    for r in recs:                             # prefix, bit-exact
+        i = int(r.key.decode())
+        assert i == r.offset
+        assert r.value == ("value-%05d" % i).encode() * 3
+    _, cont = log.append("t", b"resumed", b"after-crash", partition=0)
+    assert cont == end
+    log.close()
+    return end
+
+
+def test_writer_killed_mid_append_batch_recovers_to_prefix(tmp_path):
+    res = run_sub(_writer_code(tmp_path, nth=3, segment_bytes=1 << 20))
+    assert res.returncode == 23, res.stderr
+    end = _assert_clean_prefix(tmp_path, 1 << 20)
+    # two whole batches landed; the half-written third chunk recovers its
+    # leading whole records and truncates the one torn mid-record
+    assert 2 * BATCH <= end < 3 * BATCH
+
+
+def test_writer_killed_on_chunk_after_segment_roll(tmp_path):
+    """Small segments force one append_batch to span a roll; the kill lands
+    on a chunk write in a freshly rolled segment, so the torn bytes sit at
+    the very start of the tail segment."""
+    segment_bytes = 1024                       # ~25 records per segment
+    res = run_sub(_writer_code(tmp_path, nth=2, segment_bytes=segment_bytes))
+    assert res.returncode == 23, res.stderr
+    segs = sorted((tmp_path / "t" / "0").glob("*.seg"))
+    assert len(segs) > 1                       # the batch really rolled
+    end = _assert_clean_prefix(tmp_path, segment_bytes)
+    # the tear landed in the freshly rolled tail segment: everything in the
+    # sealed segments survived, and the tail recovered to a record boundary
+    assert end >= int(segs[-1].stem)
+
+
+def test_durable_flow_killed_mid_run_resumes_from_acked_frontier(tmp_path):
+    """A graph publishing through a DurableConnection is hard-killed by the
+    injector mid-run; rebuilding the same topology over the same log replays
+    the un-acked suffix and every source record lands (duplicates allowed)."""
+    n = 300
+    code = textwrap.dedent(f"""
+    from repro.core import (FlowGraph, PartitionedLog, PublishToLog, Source,
+                            make_flowfile)
+    from repro.core.faults import INJECTOR
+
+    log = PartitionedLog(r"{tmp_path}" + "/log")
+    log.create_topic("articles", partitions=2)
+    g = FlowGraph("durable")
+    src = g.add(Source("s", lambda: (
+        make_flowfile("payload-%d" % i, i=str(i)) for i in range({n}))))
+    pub = g.add(PublishToLog("pub", log, "articles", flush_every=1))
+    src.batch_size = 16        # many small triggers -> kill lands mid-stream
+    pub.batch_size = 16
+    INJECTOR.arm("proc.pub", "crash", nth=6, exit_code=29)
+    g.connect(src, "success", pub, durable=log)
+    g.run_to_completion(timeout=60)
+    """)
+    res = run_sub(code)
+    assert res.returncode == 29, res.stderr
+
+    log = PartitionedLog(tmp_path / "log")
+    before = sum(log.end_offsets("articles"))
+    assert 0 < before < n                      # died with records in flight
+
+    # rebuild the same topology (same names => same WAL topic). The WAL's
+    # end offset is the durable count of records the source got accepted
+    # before the kill: the replayable source resumes from there, and the
+    # un-acked suffix below it is replayed from the journal.
+    from repro.core import FlowGraph, PublishToLog, Source, make_flowfile
+    wal_end = log.end_offset("__wal__.s:success->pub", 0)
+    assert 0 < wal_end <= n
+    g = FlowGraph("durable")
+    src = g.add(Source("s", lambda: (
+        make_flowfile("payload-%d" % i, i=str(i)) for i in range(wal_end, n))))
+    pub = g.add(PublishToLog("pub", log, "articles", flush_every=1))
+    conn = g.connect(src, "success", pub, durable=log)
+    assert conn.replayed > 0                   # polled-but-unacked came back
+    g.run_to_completion(timeout=60)
+
+    landed = {json.loads(r.key)["attributes"]["i"]
+              for r in log.iter_records("articles")}
+    assert landed == {str(i) for i in range(n)}   # zero loss, dups allowed
+    log.close()

@@ -1,0 +1,389 @@
+"""Fault-tolerant flow runtime: supervised restarts with backoff, record
+retry + penalization, dead-letter quarantine, WAL-backed connections, and
+the acceptance scenario — the news topology surviving a mid-graph processor
+fault-injected to crash every ~N records with zero record loss."""
+import json
+import time
+
+import pytest
+
+from repro.core import (CollectSink, DeadLetterQueue, DurableConnection,
+                        ExecuteScript, FlowError, FlowGraph, PartitionedLog,
+                        RestartPolicy, RssAggregatorSource, Source,
+                        make_flowfile)
+from repro.core.faults import INJECTOR, InjectedFault, raise_on
+from repro.data.pipeline import (arm_news_chaos, build_news_pipeline,
+                                 expected_clean_doc_ids)
+
+
+def _linear_flow(n=100, policy=None, max_retries=0, dlq_log=None,
+                 topic="dead"):
+    g = FlowGraph("ft")
+    src = g.add(Source("src", lambda: (
+        make_flowfile(f"rec-{i}", i=str(i), poison="1" if i % 10 == 3 else "0")
+        for i in range(n))))
+    work = g.add(ExecuteScript("work", lambda ff: ff), restart_policy=policy)
+    sink = g.add(CollectSink("sink"))
+    g.connect(src, "success", work, max_retries=max_retries,
+              retry_penalty_sec=0.001)
+    g.connect(work, "success", sink)
+    dlq = None
+    if dlq_log is not None:
+        dlq = g.add(DeadLetterQueue("dlq", dlq_log, topic=topic))
+        g.route_dead_letters_to(dlq)
+    return g, sink, dlq
+
+
+# ---------------------------------------------------------------------------
+# supervisor
+# ---------------------------------------------------------------------------
+def test_transient_fault_restarts_without_record_loss():
+    g, sink, _ = _linear_flow(
+        n=200, policy=RestartPolicy(max_restarts=3, backoff_base_sec=0.01))
+    INJECTOR.arm("proc.work", "raise", nth=1)          # fails exactly once
+    g.run_to_completion(timeout=60)
+    st = g.status()
+    assert len(sink.items) == 200                      # in-flight batch kept
+    assert st["processors"]["work"]["restarts"] == 1
+    assert st["processors"]["work"]["state"] == "COMPLETED"
+    assert st["failed"] == []
+
+
+def test_restart_backoff_schedule_observed():
+    policy = RestartPolicy(max_restarts=3, backoff_base_sec=0.01,
+                           backoff_factor=2.0, backoff_cap_sec=10.0)
+    g, sink, _ = _linear_flow(n=50, policy=policy)
+    fires = {"n": 0}
+
+    def three_times(ctx):
+        if fires["n"] < 3:
+            fires["n"] += 1
+            raise InjectedFault("transient")
+    INJECTOR.arm("proc.work", three_times, every=1)
+    g.run_to_completion(timeout=60)
+    node = g.nodes["work"]
+    assert node.restarts == 3
+    assert node.backoff_history == [0.01, 0.02, 0.04]  # exponential
+    assert len(sink.items) == 50
+
+
+def test_failed_terminal_only_after_budget_exhausted():
+    policy = RestartPolicy(max_restarts=2, backoff_base_sec=0.005)
+    g, sink, _ = _linear_flow(n=10, policy=policy)
+    INJECTOR.arm("proc.work", "raise", nth=1, every=1)  # always fails
+    with pytest.raises(FlowError, match="work"):
+        g.run_to_completion(timeout=60)
+    node = g.nodes["work"]
+    assert node.state == "FAILED"
+    assert node.restarts == 2                     # full budget consumed first
+    assert g.status()["failed"] == ["work"]
+
+
+def test_default_policy_preserves_fail_fast():
+    g, sink, _ = _linear_flow(n=10)               # no policy, no retries
+    INJECTOR.arm("proc.work", "raise", nth=1)
+    with pytest.raises(FlowError, match="work"):
+        g.run_to_completion(timeout=60)
+    assert g.nodes["work"].restarts == 0
+    assert g.nodes["work"].state == "FAILED"
+
+
+def test_source_restart_fast_forwards_replayable_generator():
+    g = FlowGraph("src-restart")
+    src = g.add(Source("src", lambda: (make_flowfile(f"{i}", i=str(i))
+                                       for i in range(100))),
+                restart_policy=RestartPolicy(max_restarts=2,
+                                             backoff_base_sec=0.005))
+    sink = g.add(CollectSink("sink"))
+    g.connect(src, "success", sink)
+    INJECTOR.arm("proc.src", "raise", nth=2)      # fail on the 2nd trigger
+    g.run_to_completion(timeout=60)
+    # the fault fired before any emit of that batch: replay is exact
+    assert sorted(int(f.attributes["i"]) for f in sink.items) == list(range(100))
+    assert g.nodes["src"].restarts == 1
+
+
+# ---------------------------------------------------------------------------
+# retry + dead-letter routing
+# ---------------------------------------------------------------------------
+def test_poison_routed_to_dlq_after_max_retries(tmp_path):
+    log = PartitionedLog(tmp_path / "log")
+    g, sink, dlq = _linear_flow(n=100, max_retries=2, dlq_log=log)
+    INJECTOR.arm("proc.work",
+                 raise_on(lambda ff: ff.attributes.get("poison") == "1"),
+                 every=1)
+    g.run_to_completion(timeout=60)
+    st = g.status()
+    assert len(sink.items) == 90                  # innocents all pass
+    assert dlq.quarantined == 10
+    assert st["processors"]["work"]["retries"] == 20        # 10 poison * 2
+    assert st["processors"]["work"]["dead_lettered"] == 10
+    # quarantined records carry the retry/dead-letter audit trail and are
+    # keyed by provenance lineage id in the log
+    quarantined = list(DeadLetterQueue.replay(log, "dead"))
+    assert len(quarantined) == 10
+    assert all(ff.attributes["retry.count"] == "2" for ff in quarantined)
+    assert all(ff.attributes["dead.letter.source"] == "work"
+               for ff in quarantined)
+    recs = log.read("dead", 0, 0, max_records=100)
+    assert {r.key.decode() for r in recs} == \
+           {ff.lineage_id for ff in quarantined}
+    log.close()
+
+
+def test_record_recovers_within_retry_budget():
+    """A record that fails twice and then succeeds must land downstream,
+    not in the DLQ (penalization + retry.count attribute observable)."""
+    g, sink, _ = _linear_flow(n=40, max_retries=3)
+    INJECTOR.arm("proc.work", raise_on(
+        lambda ff: (ff.attributes.get("poison") == "1"
+                    and int(ff.attributes.get("retry.count", "0")) < 2)),
+        every=1)
+    g.run_to_completion(timeout=60)
+    assert len(sink.items) == 40                  # nothing lost, nothing DLQd
+    st = g.status()
+    assert st["processors"]["work"]["dead_lettered"] == 0
+    retried = [f for f in sink.items if f.attributes.get("retry.count")]
+    assert retried and all(f.attributes["retry.count"] == "2"
+                           for f in retried)
+    assert st["processors"]["work"]["retries"] == 2 * len(retried)
+
+
+def test_exhausted_records_without_dlq_are_dropped_with_provenance():
+    g, sink, _ = _linear_flow(n=50, max_retries=1)
+    INJECTOR.arm("proc.work",
+                 raise_on(lambda ff: ff.attributes.get("poison") == "1"),
+                 every=1)
+    g.run_to_completion(timeout=60)               # must NOT raise
+    st = g.status()
+    assert len(sink.items) == 45
+    assert st["processors"]["work"]["dead_lettered"] == 5
+    drops = g.provenance.events(event_type="DROP", component="work")
+    assert sum(1 for e in drops if e.details == "dead-letter:unrouted") == 5
+
+
+def test_failing_dlq_escalates_instead_of_self_looping(tmp_path):
+    """If the quarantine itself breaks, records must NOT be dead-lettered
+    back into its own input (infinite self-loop); the supervisor escalates
+    and the graph fails fast."""
+    log = PartitionedLog(tmp_path / "log")
+    g, sink, dlq = _linear_flow(n=30, max_retries=1, dlq_log=log)
+    INJECTOR.arm("proc.work",
+                 raise_on(lambda ff: ff.attributes.get("poison") == "1"),
+                 every=1)
+    log.close()                                   # breaks every DLQ append
+    with pytest.raises(FlowError, match="dlq"):
+        g.run_to_completion(timeout=30)
+    assert g.nodes["dlq"].state == "FAILED"
+
+
+def test_escalation_requeue_with_full_input_queue_fails_fast():
+    """Default (no-FT) config with the input queue at its backpressure
+    threshold: the pre-restart requeue must not deadlock against the queue
+    this worker itself drains — the error still surfaces promptly."""
+    g = FlowGraph("full-queue")
+    src = g.add(Source("src", lambda: (make_flowfile(f"{i}", i=str(i))
+                                       for i in range(500))))
+    work = g.add(ExecuteScript("work", lambda ff: ff))
+    sink = g.add(CollectSink("sink"))
+    g.connect(src, "success", work, object_threshold=8)   # tiny queue
+    g.connect(work, "success", sink)
+    INJECTOR.arm("proc.work", "raise", nth=2)
+    t0 = time.monotonic()
+    with pytest.raises(FlowError, match="work"):
+        g.run_to_completion(timeout=60)
+    assert time.monotonic() - t0 < 30             # failed fast, no hang
+
+
+# ---------------------------------------------------------------------------
+# WAL-backed connections
+# ---------------------------------------------------------------------------
+def test_durable_wal_gc_drops_acked_segments(tmp_path):
+    """The WAL must stay O(in-flight): segments wholly below the acked
+    frontier are garbage-collected as acks accumulate."""
+    log = PartitionedLog(tmp_path / "log", segment_bytes=2048)
+    c = DurableConnection("a:success->b", log)
+    for i in range(400):                          # ~ many small segments
+        c.offer(make_flowfile(f"record-{i:04d}" * 4, i=str(i)))
+        got = c.poll_batch(4)
+        c.ack(len(got))
+    wal_dir = tmp_path / "log" / c.topic / "0"
+    segs = sorted(int(p.stem) for p in wal_dir.glob("*.seg"))
+    assert segs and segs[0] > 0                   # leading segments dropped
+    assert len(segs) < 10
+    # recovery still works against the GC'd journal
+    log2 = PartitionedLog(tmp_path / "log", segment_bytes=2048)
+    c2 = DurableConnection("a:success->b", log2)
+    remaining = [ff.attributes["i"] for ff in c2.poll_batch(500)]
+    assert remaining == [str(i) for i in range(c.acked, 400)]
+    log.close()
+    log2.close()
+def test_durable_connection_offer_poll_ack_replay(tmp_path):
+    log = PartitionedLog(tmp_path / "log")
+    c = DurableConnection("a:success->b", log)
+    for i in range(30):
+        c.offer(make_flowfile(f"r{i}", i=str(i)))
+    first = c.poll_batch(10)
+    c.ack(len(first))
+    c.poll_batch(5)                               # polled but never acked
+    # crash: rebuild the connection over a fresh log handle
+    log2 = PartitionedLog(tmp_path / "log")
+    c2 = DurableConnection("a:success->b", log2)
+    assert c2.replayed == 20                      # 30 offered - 10 acked
+    replay = [ff.attributes["i"] for ff in c2.poll_batch(50)]
+    assert replay == [str(i) for i in range(10, 30)]   # frontier order kept
+    snap = c2.snapshot()
+    assert snap["durable"] and snap["acked"] == 10
+    log.close()
+    log2.close()
+
+
+def test_durable_connection_in_graph_acks_to_frontier(tmp_path):
+    log = PartitionedLog(tmp_path / "log")
+    g = FlowGraph("durable")
+    src = g.add(Source("s", lambda: (make_flowfile(f"{i}") for i in range(64))))
+    sink = g.add(CollectSink("sink"))
+    conn = g.connect(src, "success", sink, durable=log)
+    assert isinstance(conn, DurableConnection)
+    g.run_to_completion(timeout=60)
+    assert len(sink.items) == 64
+    # every consumed batch was acked: a rebuild has nothing to replay
+    assert conn.acked == 64
+    c2 = DurableConnection("s:success->sink", PartitionedLog(tmp_path / "log"))
+    assert c2.replayed == 0
+    log.close()
+
+
+def test_durable_connection_rejects_prioritizer(tmp_path):
+    log = PartitionedLog(tmp_path / "log")
+    g = FlowGraph("bad")
+    src = g.add(Source("s", lambda: iter(())))
+    sink = g.add(CollectSink("k"))
+    with pytest.raises(FlowError, match="FIFO"):
+        g.connect(src, "success", sink, durable=log,
+                  prioritizer=lambda ff: 0.0)
+    log.close()
+
+
+def test_durable_buffering_processor_defers_acks(tmp_path):
+    """A buffering processor (MergeContent) on a durable input must not ack
+    records it absorbed into internal state at trigger time — acks land only
+    at the final flush, so a crash replays the whole buffered window."""
+    from repro.core import MergeContent
+    assert MergeContent.buffers_across_triggers
+    log = PartitionedLog(tmp_path / "log")
+    g = FlowGraph("merge")
+    src = g.add(Source("s", lambda: (make_flowfile(f"rec-{i}")
+                                     for i in range(100))))
+    merge = g.add(MergeContent("merge", max_records=1000,
+                               max_latency_sec=1e9))
+    sink = g.add(CollectSink("sink"))
+    conn = g.connect(src, "success", merge, durable=log)
+    g.connect(merge, "success", sink)
+    g.run_to_completion(timeout=60)
+    assert len(sink.items) == 1                   # one final bundle
+    assert conn.acked == 100                      # acked only at the end
+    log.close()
+
+
+def test_durable_buffering_escalation_does_not_ack_over_buffered(tmp_path):
+    """Supervisor escalation on a later trigger must not ack the durable
+    frontier past records an ack-deferring processor still holds in its
+    internal buffer — after the crash they must be replayable."""
+    from repro.core import MergeContent
+    log = PartitionedLog(tmp_path / "log")
+    g = FlowGraph("merge-crash")
+    src = g.add(Source("s", lambda: (make_flowfile(f"rec-{i}", i=str(i))
+                                     for i in range(10))))
+    merge = g.add(MergeContent("merge", max_records=1000,
+                               max_latency_sec=1e9))
+    merge.batch_size = 5                          # >= two triggers
+    sink = g.add(CollectSink("sink"))
+    g.connect(src, "success", merge, durable=log)
+    g.connect(merge, "success", sink)
+    INJECTOR.arm("proc.merge", "raise", nth=2)    # escalates: no retry wired
+    with pytest.raises(FlowError, match="merge"):
+        g.run_to_completion(timeout=30)
+    # rebuild: every source record is still in the un-acked WAL suffix,
+    # including the ones trigger 1 had buffered inside the merger
+    c2 = DurableConnection("s:success->merge", PartitionedLog(tmp_path / "log"))
+    replayed = {ff.attributes["i"] for ff in c2.poll_batch(100)}
+    assert {str(i) for i in range(10)} <= replayed
+    log.close()
+
+
+def test_durable_retry_penalty_is_honored(tmp_path):
+    """On a durable connection the penalized copy is re-journaled at once
+    (frontier must stay a prefix) but delivery waits out retry.not.before —
+    a transient blip must not burn the whole retry budget in microseconds."""
+    log = PartitionedLog(tmp_path / "log")
+    g = FlowGraph("penalty")
+    src = g.add(Source("s", lambda: iter([make_flowfile("x", poison="1")])))
+    work = g.add(ExecuteScript("work", lambda ff: ff))
+    sink = g.add(CollectSink("sink"))
+    g.connect(src, "success", work, durable=log, max_retries=3,
+              retry_penalty_sec=0.05)
+    g.connect(work, "success", sink)
+    INJECTOR.arm("proc.work", raise_on(
+        lambda ff: (ff.attributes.get("poison") == "1"
+                    and int(ff.attributes.get("retry.count", "0")) < 2)),
+        every=1)
+    t0 = time.monotonic()
+    g.run_to_completion(timeout=60)
+    elapsed = time.monotonic() - t0
+    assert len(sink.items) == 1                   # recovered, not quarantined
+    assert sink.items[0].attributes["retry.count"] == "2"
+    assert elapsed >= 0.05 + 0.10                 # 0.05 * 2**0 + 0.05 * 2**1
+    log.close()
+
+
+def test_log_append_batch_raise_site_leaves_index_consistent(tmp_path):
+    """A 'raise' armed at log.segment.append_batch must not corrupt the
+    in-memory offset index: the failed batch contributes nothing, and a
+    retried append lands cleanly."""
+    log = PartitionedLog(tmp_path / "log")
+    log.create_topic("t", partitions=1)
+    recs = [(b"k", f"v{i}".encode()) for i in range(10)]
+    INJECTOR.arm("log.segment.append_batch", "raise", nth=1)
+    with pytest.raises(InjectedFault):
+        log.append_batch("t", recs, partition=0)
+    assert log.end_offset("t", 0) == 0            # no phantom records
+    log.append_batch("t", recs, partition=0)      # injector spent: succeeds
+    assert log.end_offset("t", 0) == 10
+    assert [r.value for r in log.iter_records("t", 0)] == \
+           [v for _, v in recs]
+    log.close()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: news topology + injected crashes every ~N records
+# ---------------------------------------------------------------------------
+def test_news_topology_zero_record_loss_under_periodic_faults(tmp_path):
+    n, seed, poison_rate = 2_000, 11, 0.005
+    flow, log = build_news_pipeline(
+        tmp_path, n_rss=n, n_firehose=0, n_ws=0, partitions=4, seed=seed,
+        restart_policy=RestartPolicy(max_restarts=40, backoff_base_sec=0.002,
+                                     backoff_cap_sec=0.05),
+        max_retries=3, dead_letter_topic="dead-letters",
+        poison_rate=poison_rate)
+    arm_news_chaos(crash_every=300, source_nth=3, source_every=5)
+    flow.run_to_completion(timeout=120)
+
+    # at-least-once: every clean article id lands (duplicates allowed)
+    expected = expected_clean_doc_ids(n, seed, poison_rate)
+    n_poison = sum(
+        1 for ff in RssAggregatorSource(n, seed=seed,
+                                        poison_rate=poison_rate)()
+        if ff.attributes.get("kind") == "poison")
+    landed = {json.loads(r.key)["attributes"].get("doc_id", "")
+              for r in log.iter_records("articles")}
+    assert expected <= landed, f"lost {len(expected - landed)} records"
+    # poison records ended up quarantined, not lost and not published
+    dlq = flow.nodes["dead-letter"].processor
+    assert n_poison > 0 and dlq.quarantined == n_poison
+    st = flow.status()
+    assert st["failed"] == []
+    # both halves of the fault-tolerance story actually fired
+    assert st["processors"]["big-rss"]["restarts"] > 0
+    assert st["processors"]["enrich"]["retries"] > 0
+    log.close()

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# One-command verify (documented in pyproject.toml + ROADMAP):
+#   scripts/ci.sh            tier-1 pytest + CI-sized bench smoke pass
+#   scripts/ci.sh -m 'not slow'   ... forwarding extra pytest args
+#
+# The bench smoke (`benchmarks/run.py --quick`) runs the same ingest /
+# backpressure / recovery / loader scenarios as the full run at ~10x
+# smaller inputs and does NOT rewrite BENCH_ingest.json.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -q "$@"
+
+echo "== bench smoke (--quick) =="
+python benchmarks/run.py --quick
+
+echo "== ci.sh: OK =="

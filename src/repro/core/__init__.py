@@ -5,7 +5,8 @@ re-implemented as a JAX-cluster-native library.
 Layers (paper Fig. 1):
   acquisition   — Source processors over replayable generators (sources.py)
   extract/enrich/integrate — processors.py (dedup, filter, route, enrich, merge)
-  distribution  — PartitionedLog (durable pub-sub) + ConsumerGroup (delivery.py)
+  distribution  — LogStore (pluggable durable pub-sub: single-host
+                  PartitionedLog or N-replica ReplicatedLog) + ConsumerGroup
 cross-cutting: Connection backpressure, ProvenanceRepository lineage, metrics.
 
 Failure-handling model (paper: "robustness in handling failures")
@@ -47,9 +48,18 @@ Deterministic fault injection (faults.py) drives the tests and
 
 Sites built into the runtime: ``proc.<name>`` (every trigger, ctx carries the
 batch), ``log.segment.append_batch`` (before each chunk ``write``),
-``delivery.producer.drain`` and ``delivery.consumer.poll``. Actions:
-``"raise"`` / ``"delay"`` / ``"crash"`` (``os._exit``) or any callable, on an
-``nth``/``every`` call schedule.
+``delivery.producer.drain``, ``delivery.consumer.poll``, and the replication
+sites ``replica.leader`` / ``replica.ship`` (before each leader-store append
+/ follower range-ship — arm them to exercise deterministic failover).
+Actions: ``"raise"`` / ``"delay"`` / ``"crash"`` (``os._exit``) or any
+callable, on an ``nth``/``every`` call schedule.
+
+Storage (the distribution layer) is pluggable: every component above
+programs against the :class:`LogStore` interface (logstore.py).
+``PartitionedLog`` is the single-host implementation; ``ReplicatedLog``
+(replicated.py) adds N-replica partitions with a deterministic leader,
+follower segment shipping, ``acks="leader"|"all"`` durability levels, and
+epoch-fenced failover.
 """
 from .connection import (BackpressureTimeout, Connection, DurableConnection,
                          RateThrottle,
@@ -59,9 +69,11 @@ from .delivery import (Consumer, ConsumerGroup, OffsetStore, Producer,
 from .faults import FaultInjector, InjectedFault, INJECTOR
 from .flow import FlowError, FlowGraph
 from .flowfile import FlowFile, make_flowfile
-from .log import CorruptRecord, LogRecord, PartitionedLog
+from .log import CorruptRecord, PartitionedLog, route_partition
+from .logstore import LogRecord, LogStore
 from .processor import (Processor, RestartPolicy, Source, REL_DROP,
                         REL_FAILURE, REL_SUCCESS)
+from .replicated import ReplicatedLog, ReplicationError, StaleEpoch
 from .processors import (BloomFilter, CollectSink, ContentFilter,
                          DeadLetterQueue, DetectDuplicate, ExecuteScript,
                          FileSink, LookupEnrich, MergeContent,
@@ -78,13 +90,16 @@ __all__ = [
     "DetectDuplicate", "DurableConnection",
     "ExecuteScript", "FaultInjector", "FileSink", "FirehoseSource",
     "FlowError", "FlowFile",
-    "FlowGraph", "INJECTOR", "InjectedFault", "LogRecord", "LookupEnrich",
+    "FlowGraph", "INJECTOR", "InjectedFault", "LogRecord", "LogStore",
+    "LookupEnrich",
     "MergeContent", "OffsetStore",
     "PartitionRecords", "PartitionedLog", "Processor", "Producer",
     "ProvenanceEvent",
     "ProvenanceRepository", "PublishToLog", "RateThrottle", "REL_DROP",
-    "REL_FAILURE", "REL_SUCCESS", "RestartPolicy", "RouteOnAttribute",
+    "REL_FAILURE", "REL_SUCCESS", "ReplicatedLog", "ReplicationError",
+    "RestartPolicy", "RouteOnAttribute",
     "RssAggregatorSource",
-    "Source", "StaleGeneration", "Throttle", "WebSocketSource",
-    "corpus_documents", "make_flowfile", "range_assign", "synth_article",
+    "Source", "StaleEpoch", "StaleGeneration", "Throttle", "WebSocketSource",
+    "corpus_documents", "make_flowfile", "range_assign", "route_partition",
+    "synth_article",
 ]

@@ -27,9 +27,12 @@ import itertools
 import threading
 import time
 from collections import deque
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, TYPE_CHECKING
 
 from .flowfile import FlowFile
+
+if TYPE_CHECKING:   # annotation only — connection.py stays import-light
+    from .logstore import LogStore
 
 DEFAULT_OBJECT_THRESHOLD = 10_000          # NiFi default (paper §IV.C)
 DEFAULT_SIZE_THRESHOLD = 1 << 30           # 1 GB  (paper §IV.C)
@@ -259,9 +262,12 @@ class Connection:
 
 class DurableConnection(Connection):
     """WAL-backed connection: an opt-in ``Connection`` that journals every
-    accepted FlowFile through the existing durable log (``append_batch``)
-    and tracks the consumer's acked frontier, so a crashed graph restarts
-    from its last acked record with **at-least-once** delivery.
+    accepted FlowFile through a durable :class:`~repro.core.logstore.LogStore`
+    (``append_batch``) and tracks the consumer's acked frontier, so a
+    crashed graph restarts from its last acked record with
+    **at-least-once** delivery. Journaling through a replicated store
+    (``ReplicatedLog`` with ``acks="all"``) upgrades the WAL from
+    disk-loss-fragile to replica-loss-tolerant without touching this class.
 
     Contract
     --------
@@ -285,7 +291,8 @@ class DurableConnection(Connection):
     unless you mean it.
     """
 
-    def __init__(self, name: str, log, *, topic: str | None = None,
+    def __init__(self, name: str, log: "LogStore", *,
+                 topic: str | None = None,
                  object_threshold: int = DEFAULT_OBJECT_THRESHOLD,
                  size_threshold: int = DEFAULT_SIZE_THRESHOLD,
                  max_retries: int = 0, retry_penalty_sec: float = 0.01,

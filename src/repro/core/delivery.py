@@ -18,9 +18,11 @@ Batched hot path
 ----------------
 ``Producer`` is the write-side batching front end: a size/time-bounded
 accumulator (knobs: ``max_batch_records``, ``max_batch_bytes``,
-``linger_sec``) that drains whole batches through
-``PartitionedLog.append_batch`` — one lock/pack/write per partition per
-drain instead of per record. ``Consumer.poll`` keeps a cached end offset per
+``linger_sec``) that drains whole batches through the ``LogStore``'s
+``append_batch`` — one lock/pack/write per partition per
+drain instead of per record. Producers, consumer groups, and the offset
+store are store-agnostic: they run unchanged over the single-host
+``PartitionedLog`` or the fault-tolerant ``ReplicatedLog``. ``Consumer.poll`` keeps a cached end offset per
 partition and skips the log read (and therefore the partition flush)
 entirely while the cache says the reader is caught up, so an idle poll loop
 costs no I/O.
@@ -35,11 +37,11 @@ from pathlib import Path
 from typing import Iterable
 
 from . import faults
-from .log import LogRecord, PartitionedLog
+from .logstore import LogRecord, LogStore
 
 
 class Producer:
-    """Size/time-bounded batching producer over ``PartitionedLog``.
+    """Size/time-bounded batching producer over any ``LogStore``.
 
     Records accumulate in memory and drain through ``append_batch`` when any
     bound trips: ``max_batch_records`` records, ``max_batch_bytes`` payload
@@ -48,7 +50,7 @@ class Producer:
     thread). Thread-safe; record order is preserved per partition.
     """
 
-    def __init__(self, log: PartitionedLog, topic: str, *,
+    def __init__(self, log: LogStore, topic: str, *,
                  max_batch_records: int = 512,
                  max_batch_bytes: int = 1 << 20,
                  linger_sec: float = 0.05) -> None:
@@ -287,7 +289,7 @@ class StaleGeneration(Exception):
 class ConsumerGroup:
     """Tracks membership and rebalances partition assignment on change."""
 
-    def __init__(self, log: PartitionedLog, topic: str, group_id: str,
+    def __init__(self, log: LogStore, topic: str, group_id: str,
                  offset_store: OffsetStore | None = None) -> None:
         self.log = log
         self.topic = topic

@@ -13,6 +13,12 @@ Built-in sites (fired by the library itself):
                                buf, records`` (before the ``write(2)``)
   ``delivery.producer.drain``  per ``Producer`` drain into the log
   ``delivery.consumer.poll``   per ``Consumer.poll``
+  ``replica.leader``           before each leader-store append of a
+                               ``ReplicatedLog`` partition, ``ctx: topic,
+                               partition, replica, epoch`` — arm to kill a
+                               leader mid-ingest and exercise failover
+  ``replica.ship``             before each follower range-ship, ``ctx:
+                               topic, partition, replica, offset``
 
 Schedules: ``arm(site, action, nth=N)`` fires on the Nth call only;
 ``arm(site, action, nth=N, every=M)`` fires on call N, N+M, N+2M, ...

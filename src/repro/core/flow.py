@@ -14,10 +14,13 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Callable
+from typing import Callable, Optional, TYPE_CHECKING
 
 from .connection import Connection, DurableConnection
 from .flowfile import FlowFile
+
+if TYPE_CHECKING:
+    from .logstore import LogStore
 from .processor import FlowNode, Processor, RestartPolicy, Source, _Worker
 from .provenance import ProvenanceRepository
 
@@ -55,12 +58,13 @@ class FlowGraph:
                 prioritizer: Callable[[FlowFile], float] | None = None,
                 max_retries: int | None = None,
                 retry_penalty_sec: float | None = None,
-                durable=None
+                durable: "Optional[LogStore]" = None
                 ) -> Connection:
         """Wire ``src.relationship -> dst``. ``max_retries`` arms record
-        retry on the destination's input; ``durable`` (a ``PartitionedLog``)
-        makes that input a WAL-backed :class:`DurableConnection`. On fan-in
-        the first ``connect`` to a destination fixes its queue settings."""
+        retry on the destination's input; ``durable`` (any ``LogStore`` —
+        single-host or replicated) makes that input a WAL-backed
+        :class:`DurableConnection`. On fan-in the first ``connect`` to a
+        destination fixes its queue settings."""
         src_name = src if isinstance(src, str) else src.name
         dst_name = dst if isinstance(dst, str) else dst.name
         if src_name not in self.nodes or dst_name not in self.nodes:

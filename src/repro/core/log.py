@@ -44,11 +44,14 @@ import os
 import struct
 import threading
 import zlib
-from dataclasses import dataclass
 from pathlib import Path
 from typing import Sequence
 
 from . import faults
+from .logstore import LogRecord, LogStore
+
+__all__ = ["CorruptRecord", "LogRecord", "PartitionedLog",
+           "DEFAULT_SEGMENT_BYTES", "route_partition"]
 
 _HEADER = struct.Struct("<III")  # crc, key_len, val_len
 DEFAULT_SEGMENT_BYTES = 8 << 20  # 8 MiB segments
@@ -58,17 +61,10 @@ class CorruptRecord(Exception):
     pass
 
 
-@dataclass(frozen=True, slots=True)
-class LogRecord:
-    topic: str
-    partition: int
-    offset: int
-    key: bytes
-    value: bytes
-
-    @property
-    def size(self) -> int:
-        return len(self.key) + len(self.value)
+def route_partition(key: bytes, num_partitions: int) -> int:
+    """The key→partition routing rule shared by every LogStore
+    implementation (keyless records land on partition 0)."""
+    return zlib.crc32(key) % num_partitions if key else 0
 
 
 def _crc(key: bytes, value: bytes) -> int:
@@ -403,14 +399,29 @@ class _Partition:
                 deleted += 1
         return deleted
 
+    def reset(self, base_offset: int = 0) -> None:
+        """Discard every record and restart the partition empty at
+        ``base_offset`` — the follower-resync primitive: a replica rejoining
+        a replicated set is rebuilt by reset-to-the-leader's-begin_offset
+        followed by contiguous range shipping, so its offsets stay aligned
+        with the leader's even after leader-side retention."""
+        with self.lock:
+            for s in self.segments:
+                s.close()
+                s.path.unlink(missing_ok=True)
+            self.segments = [
+                _Segment(self.path / f"{base_offset:020d}.seg", base_offset)]
+            self._appended_since_sync = 0
+            self._flushed_end = base_offset
+
     def close(self) -> None:
         with self.lock:
             for s in self.segments:
                 s.close()
 
 
-class PartitionedLog:
-    """Multi-topic durable log.
+class PartitionedLog(LogStore):
+    """Multi-topic durable log — the single-host :class:`LogStore`.
 
     Thread-safe. ``append`` is at-least-once from the producer's view (the
     producer retries on timeout; dedup upstream or idempotent consumers
@@ -472,7 +483,7 @@ class PartitionedLog:
                partition: int | None = None) -> tuple[int, int]:
         parts = self._part_list(topic)
         if partition is None:
-            partition = zlib.crc32(key) % len(parts) if key else 0
+            partition = route_partition(key, len(parts))
         off = parts[partition].append(key, value)
         return partition, off
 
@@ -497,8 +508,7 @@ class PartitionedLog:
         indices: dict[int, list[int]] = {}
         nparts = len(parts)
         for i, rec in enumerate(records):
-            k = rec[0]
-            p = zlib.crc32(k) % nparts if k else 0
+            p = route_partition(rec[0], nparts)
             groups.setdefault(p, []).append(rec)
             indices.setdefault(p, []).append(i)
         out: list[tuple[int, int] | None] = [None] * len(records)
@@ -531,31 +541,13 @@ class PartitionedLog:
         return [LogRecord(topic, partition, off, k, v)
                 for off, k, v in part.read(offset, max_records)]
 
-    def iter_records(self, topic: str, partition: int | None = None,
-                     batch_records: int = 512):
-        """Scan every retained record of a topic (one partition, or all in
-        partition order), yielding ``LogRecord``s from each partition's
-        ``begin_offset`` to its end. The canonical full-scan loop — tests,
-        benches, and DLQ replay share it instead of hand-rolling offsets."""
-        parts = (range(self.num_partitions(topic))
-                 if partition is None else (partition,))
-        for p in parts:
-            off = self.begin_offset(topic, p)
-            while True:
-                recs = self.read(topic, p, off, max_records=batch_records)
-                if not recs:
-                    break
-                yield from recs
-                off = recs[-1].offset + 1
+    # iter_records / end_offsets come from the LogStore base class.
 
     def begin_offset(self, topic: str, partition: int) -> int:
         return self._part_list(topic)[partition].begin_offset
 
     def end_offset(self, topic: str, partition: int) -> int:
         return self._part_list(topic)[partition].end_offset
-
-    def end_offsets(self, topic: str) -> list[int]:
-        return [p.end_offset for p in self._part_list(topic)]
 
     def enforce_retention(self, topic: str, retention_bytes: int) -> int:
         return sum(p.enforce_retention(retention_bytes)
@@ -564,6 +556,12 @@ class PartitionedLog:
     def drop_segments_below(self, topic: str, partition: int,
                             offset: int) -> int:
         return self._part_list(topic)[partition].drop_segments_below(offset)
+
+    def reset_partition(self, topic: str, partition: int,
+                        base_offset: int = 0) -> None:
+        """Wipe one partition and restart it empty at ``base_offset`` (the
+        replica-resync primitive — see ``_Partition.reset``)."""
+        self._part_list(topic)[partition].reset(base_offset)
 
     def close(self) -> None:
         with self._lock:

@@ -1,0 +1,136 @@
+"""LogStore — the storage contract of the distribution layer (paper §III.C).
+
+Every component that moves records through the durable log — the batching
+``delivery.Producer``, consumer groups, WAL-backed ``DurableConnection``,
+``PublishToLog``/``DeadLetterQueue``, and the streaming training loader —
+programs against this interface, not against a concrete store. Two
+implementations ship today:
+
+  * :class:`~repro.core.log.PartitionedLog` — the single-host segment store
+    (the seed implementation; still the hot-path default), and
+  * :class:`~repro.core.replicated.ReplicatedLog` — N coordinated replica
+    sets per partition with a deterministic leader, follower segment
+    shipping, configurable durability (``acks``), and epoch-fenced failover.
+
+The contract (all methods thread-safe):
+
+  * topics are created explicitly with a fixed partition count;
+  * ``append``/``append_batch`` assign dense consecutive offsets per
+    partition and are at-least-once from the producer's view;
+  * ``read`` returns committed records ``[offset, offset+n)`` of one
+    partition in offset order — readers may trail arbitrarily and replay;
+  * ``begin_offset``/``end_offset`` bound the retained range (retention and
+    WAL GC may advance ``begin_offset``);
+  * ``flush``/``flush_topic`` make appended records durable
+    (``fsync=True`` upgrades process-crash to machine-crash durability);
+  * ``enforce_retention``/``drop_segments_below`` discard old whole
+    segments, never the active tail.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterator, Sequence
+
+
+@dataclass(frozen=True, slots=True)
+class LogRecord:
+    """One committed record, as handed to consumers."""
+
+    topic: str
+    partition: int
+    offset: int
+    key: bytes
+    value: bytes
+
+    @property
+    def size(self) -> int:
+        return len(self.key) + len(self.value)
+
+
+class LogStore(abc.ABC):
+    """Abstract durable partitioned pub-sub log.
+
+    Concrete stores expose ``root`` (a directory that namespaces the store's
+    on-disk state — consumer-group offset stores default to living inside
+    it).
+    """
+
+    root: Path
+
+    # -- topic admin ----------------------------------------------------------
+    @abc.abstractmethod
+    def create_topic(self, topic: str, partitions: int = 1) -> None:
+        """Idempotent; raises if the topic exists with a different count."""
+
+    @abc.abstractmethod
+    def topics(self) -> list[str]: ...
+
+    @abc.abstractmethod
+    def num_partitions(self, topic: str) -> int: ...
+
+    # -- producer --------------------------------------------------------------
+    @abc.abstractmethod
+    def append(self, topic: str, key: bytes, value: bytes,
+               partition: int | None = None) -> tuple[int, int]:
+        """Append one record; returns ``(partition, offset)``. With
+        ``partition=None`` the record is routed by key hash."""
+
+    @abc.abstractmethod
+    def append_batch(self, topic: str,
+                     records: Sequence[tuple[bytes, bytes]],
+                     partition: int | None = None
+                     ) -> list[tuple[int, int]]:
+        """Append many records (the high-throughput entry point); returns
+        ``(partition, offset)`` per record in input order."""
+
+    @abc.abstractmethod
+    def flush(self, fsync: bool = True) -> None: ...
+
+    @abc.abstractmethod
+    def flush_topic(self, topic: str, fsync: bool = True) -> None: ...
+
+    # -- consumer --------------------------------------------------------------
+    @abc.abstractmethod
+    def read(self, topic: str, partition: int, offset: int,
+             max_records: int = 512) -> list[LogRecord]: ...
+
+    @abc.abstractmethod
+    def begin_offset(self, topic: str, partition: int) -> int: ...
+
+    @abc.abstractmethod
+    def end_offset(self, topic: str, partition: int) -> int: ...
+
+    # -- retention -------------------------------------------------------------
+    @abc.abstractmethod
+    def enforce_retention(self, topic: str, retention_bytes: int) -> int: ...
+
+    @abc.abstractmethod
+    def drop_segments_below(self, topic: str, partition: int,
+                            offset: int) -> int: ...
+
+    @abc.abstractmethod
+    def close(self) -> None: ...
+
+    # -- derived helpers (shared by every implementation) ----------------------
+    def end_offsets(self, topic: str) -> list[int]:
+        return [self.end_offset(topic, p)
+                for p in range(self.num_partitions(topic))]
+
+    def iter_records(self, topic: str, partition: int | None = None,
+                     batch_records: int = 512) -> Iterator[LogRecord]:
+        """Scan every retained record of a topic (one partition, or all in
+        partition order), yielding ``LogRecord``s from each partition's
+        ``begin_offset`` to its end. The canonical full-scan loop — tests,
+        benches, and DLQ replay share it instead of hand-rolling offsets."""
+        parts = (range(self.num_partitions(topic))
+                 if partition is None else (partition,))
+        for p in parts:
+            off = self.begin_offset(topic, p)
+            while True:
+                recs = self.read(topic, p, off, max_records=batch_records)
+                if not recs:
+                    break
+                yield from recs
+                off = recs[-1].offset + 1

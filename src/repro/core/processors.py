@@ -27,8 +27,11 @@ from typing import Callable, Iterable, Iterator, Mapping
 from .connection import RateThrottle
 from .delivery import Producer
 from .flowfile import FlowFile
-from .log import PartitionedLog
-from .processor import Processor, REL_DROP, REL_FAILURE, REL_SUCCESS
+from .logstore import LogStore
+from .processor import (ATTR_DEAD_LETTER_REASON, ATTR_DEAD_LETTER_SOURCE,
+                        ATTR_LAST_ERROR, ATTR_RETRY_COUNT,
+                        ATTR_RETRY_NOT_BEFORE, Processor, REL_DROP,
+                        REL_FAILURE, REL_SUCCESS)
 
 
 # ---------------------------------------------------------------------------
@@ -267,7 +270,8 @@ class Throttle(Processor):
 # Distribution sinks (paper §III.C)
 # ---------------------------------------------------------------------------
 class PublishToLog(Processor):
-    """NiFi→Kafka edge: append each FlowFile to a topic of the durable log.
+    """NiFi→Kafka edge: append each FlowFile to a topic of any ``LogStore``
+    (single-host ``PartitionedLog`` or replicated ``ReplicatedLog``).
 
     Uses ``partition.key`` attribute when present, else the lineage id, so
     records of one logical stream stay ordered within a partition.
@@ -277,7 +281,7 @@ class PublishToLog(Processor):
     partition), instead of one ``struct.pack`` + CRC + ``write`` per record.
     """
 
-    def __init__(self, name: str, log: PartitionedLog, topic: str,
+    def __init__(self, name: str, log: LogStore, topic: str,
                  flush_every: int = 2048,
                  batch_records: int = 512,
                  batch_bytes: int = 1 << 20) -> None:
@@ -323,18 +327,28 @@ class PublishToLog(Processor):
 
 class DeadLetterQueue(Processor):
     """Quarantine sink for poison / retry-exhausted records (the robustness
-    half of the paper's claim). Persists each record to a ``PartitionedLog``
+    half of the paper's claim). Persists each record to a ``LogStore``
     topic **keyed by its provenance lineage id**, so a quarantined record can
     be joined back to its full lineage (paper Fig. 4) and replayed after the
     bug that poisoned it is fixed.
 
     Wire it with ``graph.route_dead_letters_to(dlq)``; it also accepts
     explicit connections (e.g. a processor's ``failure`` relationship).
+
+    Re-ingestion is automatic via :meth:`redrive`: quarantined records are
+    offered back into a flow (each to the processor that dead-lettered it,
+    or an explicit ``dest``), with **content-hash poison fingerprinting** —
+    a record that comes back to quarantine after a redrive is recognized by
+    its fingerprint on every later redrive and skipped, so true poison
+    cannot re-poison the flow in a redrive loop. Redrive progress (per-
+    partition frontier + the fingerprint set) is persisted to
+    ``<topic>.__redrive__`` through the same log, so redrives are
+    crash-safe and incremental.
     """
 
     _VLEN = struct.Struct("<I")
 
-    def __init__(self, name: str, log: PartitionedLog, *,
+    def __init__(self, name: str, log: LogStore, *,
                  topic: str = "dead-letters", partitions: int = 1) -> None:
         super().__init__(name)
         self.log = log
@@ -374,11 +388,136 @@ class DeadLetterQueue(Processor):
         self.log.flush_topic(self.topic, fsync=True)
 
     @classmethod
-    def replay(cls, log: PartitionedLog, topic: str = "dead-letters"
+    def replay(cls, log: LogStore, topic: str = "dead-letters"
                ) -> Iterator[FlowFile]:
         """Yield every quarantined FlowFile (for re-ingestion once fixed)."""
         for r in log.iter_records(topic):
             yield cls.decode(r.value)
+
+    # -- automatic re-drive --------------------------------------------------
+    #: attributes stripped on redrive so re-ingested records get a fresh
+    #: retry budget (and aren't mistaken for already-failed ones)
+    _REDRIVE_STRIP = (ATTR_RETRY_COUNT, ATTR_RETRY_NOT_BEFORE,
+                      ATTR_LAST_ERROR, ATTR_DEAD_LETTER_SOURCE,
+                      ATTR_DEAD_LETTER_REASON)
+
+    @staticmethod
+    def fingerprint(ff: FlowFile) -> str:
+        """Stable content-hash identity of a quarantined record (survives
+        uuid/attribute churn across redrive attempts)."""
+        return hashlib.blake2b(ff.content, digest_size=16).hexdigest()
+
+    def _redrive_state_topic(self) -> str:
+        return self.topic + ".__redrive__"
+
+    def _load_redrive_state(self) -> tuple[dict[int, int], set[str]]:
+        st = self._redrive_state_topic()
+        self.log.create_topic(st, partitions=1)
+        end = self.log.end_offset(st, 0)
+        if end:
+            recs = self.log.read(st, 0, end - 1, 1)
+            if recs:
+                state = json.loads(recs[0].value)
+                return ({int(k): int(v)
+                         for k, v in state["frontier"].items()},
+                        set(state["fingerprints"]))
+        return {}, set()
+
+    def _save_redrive_state(self, frontier: dict[int, int],
+                            fingerprints: set[str]) -> None:
+        st = self._redrive_state_topic()
+        prev_end = self.log.end_offset(st, 0)
+        state = {"frontier": {str(k): v for k, v in frontier.items()},
+                 "fingerprints": sorted(fingerprints)}
+        self.log.append(st, b"", json.dumps(state).encode(), partition=0)
+        self.log.flush_topic(st, fsync=False)
+        # every state record but the newest is dead — GC sealed segments
+        self.log.drop_segments_below(st, 0, prev_end)
+
+    def redrive(self, flow, *, dest: "Processor | str | None" = None,
+                batch_records: int = 512) -> dict:
+        """Offer quarantined records back into ``flow`` (closing the manual
+        ``replay()`` loop): each record goes to the input connection of the
+        processor that dead-lettered it (``dead.letter.source``), or to
+        ``dest`` when given. Records whose content fingerprint was already
+        redriven once — i.e. they came *back* to quarantine — are skipped
+        as confirmed poison. Returns
+        ``{"redriven": n, "skipped_poison": m, "unroutable": u}``.
+
+        Memory stays bounded by ``batch_records``: each scanned batch is
+        offered downstream before the next is read, with backpressure felt
+        immediately. At-least-once: a failure mid-redrive leaves the state
+        unsaved, so everything scanned this pass stays redrivable (records
+        already offered may be duplicated on the retry)."""
+        dest_name = dest if isinstance(dest, (str, type(None))) else dest.name
+        if dest_name is not None and (
+                dest_name not in flow.nodes
+                or flow.nodes[dest_name].input is None):
+            # an explicit-but-wrong dest is a caller error: raising BEFORE
+            # the scan keeps the frontier untouched, so nothing is silently
+            # forfeited to a typo (default per-record routing still counts
+            # unknown sources as unroutable and moves on)
+            raise ValueError(
+                f"redrive dest {dest_name!r} is not a connected processor "
+                "of this flow")
+        frontier, seen_fps = self._load_redrive_state()
+        redriven = skipped = unroutable = 0
+        for p in range(self.log.num_partitions(self.topic)):
+            off = max(frontier.get(p, 0),
+                      self.log.begin_offset(self.topic, p))
+            end_p = self.log.end_offset(self.topic, p)
+            while off < end_p:
+                recs = self.log.read(self.topic, p, off, batch_records)
+                if not recs:
+                    break
+                by_target: dict[str, list[FlowFile]] = {}
+                for r in recs:
+                    ff = self.decode(r.value)
+                    fp = self.fingerprint(ff)
+                    if fp in seen_fps:
+                        skipped += 1    # came back after a redrive: poison
+                        continue
+                    target = dest_name or ff.attributes.get(
+                        ATTR_DEAD_LETTER_SOURCE)
+                    if target is None or target not in flow.nodes \
+                            or flow.nodes[target].input is None:
+                        unroutable += 1  # left quarantined; frontier moves on
+                        continue
+                    attrs = {k: v for k, v in ff.attributes.items()
+                             if k not in self._REDRIVE_STRIP}
+                    by_target.setdefault(target, []).append(FlowFile(
+                        content=ff.content, attributes=attrs,
+                        lineage_id=ff.lineage_id, parent_uuid=ff.uuid,
+                        entry_ts=ff.entry_ts))
+                    seen_fps.add(fp)
+                    redriven += 1
+                for target, ffs in by_target.items():
+                    self._offer_redriven(flow, target, ffs)
+                off = recs[-1].offset + 1
+            frontier[p] = off
+        self._save_redrive_state(frontier, seen_fps)
+        return {"redriven": redriven, "skipped_poison": skipped,
+                "unroutable": unroutable}
+
+    def _offer_redriven(self, flow, target: str,
+                        ffs: "list[FlowFile]") -> None:
+        conn = flow.nodes[target].input
+        flow.provenance.record_batch("REPLAY", ffs, self.name,
+                                     details=f"redrive->{target}")
+        offered = 0
+        stalled = 0
+        while offered < len(ffs):
+            n = conn.offer_batch(ffs[offered:], block=True, timeout=1.0)
+            offered += n
+            # a full connection that nothing drains (flow not running,
+            # threshold too small) must not hang the redrive forever —
+            # bail out WITHOUT saving state (see redrive docstring)
+            stalled = 0 if n else stalled + 1
+            if stalled >= 30:
+                raise RuntimeError(
+                    f"redrive stalled: connection {conn.name!r} stayed "
+                    f"full for 30s ({len(ffs) - offered} records "
+                    "unoffered); is the flow running?")
 
 
 class FileSink(Processor):

@@ -1,0 +1,718 @@
+"""ReplicatedLog — N-replica durable log with leader-coordinated ingestion.
+
+The Kafka half of the paper's case study (§III.C) finally gets its
+replication story: a :class:`~repro.core.logstore.LogStore` built from N
+in-process :class:`~repro.core.log.PartitionedLog` replica stores
+(``root/replica-<i>``), coordinated per ``(topic, partition)`` by a replica
+set with a **deterministic leader** and an **epoch** that fences zombies —
+the same generation-fencing scheme consumer groups use against stale
+members (:class:`~repro.core.delivery.StaleGeneration`).
+
+Data path
+---------
+Appends go to the partition's leader replica (assigning the authoritative
+offsets) and are *shipped* to followers as contiguous offset ranges read
+back from the leader with the existing batched machinery — one
+``pread``-range read, one ``append_batch`` per ship — so a follower's
+segment files are byte-identical to the leader's. Reads are served by the
+leader.
+
+Durability levels
+-----------------
+``acks="all"``     every in-sync follower is shipped synchronously before an
+                   append returns: the record set survives the loss of any
+                   replica's data directory (the acceptance scenario).
+``acks="leader"``  followers are shipped lazily, once they trail by
+                   ``ship_batch_records`` (and fully on ``flush``/``close``):
+                   one store write per append on the hot path, bounded
+                   follower lag — a machine loss may drop the unshipped
+                   suffix (at-most-``ship_batch_records`` records per
+                   partition).
+
+Per-replica ``fsync_every`` (an int per replica, or one int for all) sets
+each store's group-fsync cadence, so e.g. the leader can run memory-speed
+while one follower fsyncs every batch.
+
+Failover
+--------
+Any replica-store failure observed on the append/read path (or injected via
+the fault sites below, or declared by :meth:`ReplicatedLog.kill_replica`)
+removes the replica from the partition's in-sync set and bumps the epoch;
+the next replica in preference order (``(partition + k) % N``) is promoted.
+A writer that captured the old leadership re-validates the epoch after its
+store write and, when fenced, retries against the new leader — the write
+that landed on the demoted replica is abandoned there (duplicates allowed,
+loss is not: at-least-once). ``restore_replica`` rebuilds a returning
+replica by full per-partition resync (reset to the leader's
+``begin_offset``, then range shipping) before it rejoins the in-sync set.
+
+On re-open over existing directories, replicas are reconciled per
+partition against persisted metadata (``replication-meta.json``: the last
+recorded (leader, epoch) per partition, rewritten on every leadership
+change, plus a clean-shutdown marker): the last leader is authoritative —
+under ``acks="all"`` its log holds every acked record, so a zombie's
+equal-or-longer log must not outvote it — and the others are resynced from
+it. A recorded leader whose directory was lost (the topic is gone from its
+store) yields to the longest surviving replica, which is exactly why
+``acks="all"`` survives deleting the leader's directory. After an unclean
+shutdown every non-authority replica is rebuilt unconditionally, since
+equal-length divergence at the same offsets is possible after a fenced
+failover. (Residual window, documented not solved: a crash between an
+in-memory demotion and the metadata write can still crown the old leader
+at reopen — closing it needs per-record epochs, Kafka's leader-epoch
+checkpoint protocol.)
+
+Deterministic fault sites (:mod:`repro.core.faults`):
+
+  ``replica.leader``  before each leader-store append
+                      (ctx: ``topic, partition, replica, epoch``)
+  ``replica.ship``    before each follower range-ship
+                      (ctx: ``topic, partition, replica, offset``)
+
+A single-replica ``ReplicatedLog`` bypasses coordination entirely and
+delegates straight to its one store — the PR-2 hot path, unchanged.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Sequence
+
+from . import faults
+from .log import DEFAULT_SEGMENT_BYTES, PartitionedLog, route_partition
+from .logstore import LogRecord, LogStore
+
+__all__ = ["ReplicatedLog", "ReplicationError", "StaleEpoch"]
+
+
+class ReplicationError(RuntimeError):
+    """No in-sync replica can serve the request (all replicas failed)."""
+
+
+class StaleEpoch(ReplicationError):
+    """A write raced a leadership change: the captured epoch is no longer
+    current, so the store write may sit on a demoted (zombie) leader and
+    must be retried against the new one."""
+
+
+class _LeaderReadFailed(ReplicationError):
+    """A ship's *source-side* read failed: the leader store is the broken
+    party, not the follower being shipped to — demote the leader, never the
+    follower (raised and handled inside this module only)."""
+
+
+class _ReplicaSet:
+    """Per-(topic, partition) coordination state.
+
+    ``epoch`` is the **leader epoch** (Kafka's fencing token): it advances
+    exactly when leadership changes, so a writer that captured ``(leader,
+    epoch)`` knows after its store write whether that write landed on the
+    authoritative replica. Removing a *follower* from the in-sync set does
+    not bump it — concurrent appends to the surviving leader stay valid.
+
+    Leadership is sticky: the preference order ``(partition + k) % n``
+    seeds the initial leader (spreading leadership across replicas), and on
+    failure the next alive replica in that order is promoted; a restored
+    replica rejoins as a follower only (no fail-back), which kills the
+    ABA hazard of a wiped-and-resynced replica regaining leadership inside
+    a racing writer's capture window.
+
+    ``lock`` guards membership/epoch only — store I/O happens outside it so
+    a slow disk cannot convoy leadership changes. ``ship_lock`` serializes
+    all follower writes of the partition (shipping and resync), keeping
+    each follower single-writer and its offsets aligned with the leader's.
+    """
+
+    __slots__ = ("preference", "alive", "leader", "epoch", "lock",
+                 "ship_lock")
+
+    def __init__(self, partition: int, n: int, dead: set[int]) -> None:
+        self.preference = tuple((partition + k) % n for k in range(n))
+        self.alive: set[int] = set(range(n)) - dead
+        self.leader: int | None = next(
+            (r for r in self.preference if r in self.alive), None)
+        self.epoch = 0
+        self.lock = threading.Lock()
+        self.ship_lock = threading.Lock()
+
+    def snapshot(self) -> tuple[int, int]:
+        """(leader, epoch) under the lock — the unit a writer captures."""
+        with self.lock:
+            if self.leader is None:
+                raise ReplicationError("no in-sync replica")
+            return self.leader, self.epoch
+
+    def remove(self, replica: int, epoch: int | None = None) -> bool:
+        """Drop ``replica`` from the in-sync set, promoting the next
+        preferred follower (and bumping the epoch) when it led. With
+        ``epoch`` given, the removal is itself fenced: two writers
+        observing the same dead leader demote it once — the loser's view
+        is stale and it simply re-snapshots. Returns True when leadership
+        changed (the caller persists the new epoch)."""
+        with self.lock:
+            if epoch is not None and epoch != self.epoch:
+                return False
+            if replica not in self.alive:
+                return False
+            self.alive.discard(replica)
+            if self.leader == replica:
+                self.leader = next(
+                    (r for r in self.preference if r in self.alive), None)
+                self.epoch += 1
+                return True
+            return False
+
+    def add(self, replica: int) -> bool:
+        """Rejoin as a follower (leadership never fails back); revives a
+        fully-dead set by making the restored replica its leader. Returns
+        True when leadership changed."""
+        with self.lock:
+            self.alive.add(replica)
+            if self.leader is None:
+                self.leader = replica
+                self.epoch += 1
+                return True
+            return False
+
+
+class ReplicatedLog(LogStore):
+    """Replicated :class:`LogStore` over N ``PartitionedLog`` replica stores.
+
+    See the module docstring for the coordination model. Thread-safe; the
+    producer-visible contract (dense offsets per partition, at-least-once
+    appends, replayable reads) is identical to ``PartitionedLog``.
+    """
+
+    def __init__(self, root: str | Path, *, replicas: int = 2,
+                 acks: str = "all",
+                 segment_bytes: int = DEFAULT_SEGMENT_BYTES,
+                 fsync_every: int | Sequence[int] = 0,
+                 ship_batch_records: int = 512) -> None:
+        if replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        if acks not in ("leader", "all"):
+            raise ValueError(f"unknown acks level {acks!r}")
+        if ship_batch_records < 1:
+            raise ValueError("ship_batch_records must be >= 1")
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.acks = acks
+        self.ship_batch_records = ship_batch_records
+        if isinstance(fsync_every, int):
+            fsync_every = [fsync_every] * replicas
+        if len(fsync_every) != replicas:
+            raise ValueError("need one fsync_every per replica")
+        self._stores: list[PartitionedLog] = [
+            PartitionedLog(self.root / f"replica-{i}", segment_bytes,
+                           fsync_every[i])
+            for i in range(replicas)]
+        self.n_replicas = replicas
+        #: replicas whose store is closed/unusable for every partition
+        self._dead: set[int] = set()
+        self._sets: dict[tuple[str, int], _ReplicaSet] = {}
+        self._admin_lock = threading.Lock()
+        # single-replica fast path: no coordination, no shipping — every
+        # call delegates to the one store (the non-replicated hot path)
+        self._single = self._stores[0] if replicas == 1 else None
+        #: persisted replica-set metadata: per-partition (leader, epoch)
+        #: rewritten on every leadership change, plus a clean-shutdown
+        #: marker — reopen trusts the last recorded leader as the
+        #: authority (its log holds every acked record even when a zombie
+        #: replica's is as long or longer) and resyncs unconditionally
+        #: after an unclean shutdown (equal-length divergence detection)
+        self._meta_path = self.root / "replication-meta.json"
+        self._meta_partitions: dict[str, dict] = {}
+        if self._single is None:
+            self._reconcile_open()
+            self._write_meta(clean=False)   # crash from here on is unclean
+
+    # -- replica-set plumbing -------------------------------------------------
+    def _rset(self, topic: str, partition: int) -> _ReplicaSet:
+        key = (topic, partition)
+        rs = self._sets.get(key)
+        if rs is None:
+            with self._admin_lock:
+                rs = self._sets.get(key)
+                if rs is None:
+                    rs = _ReplicaSet(partition, self.n_replicas, self._dead)
+                    self._sets[key] = rs
+        return rs
+
+    # -- persisted replica-set metadata ---------------------------------------
+    def _load_meta(self) -> dict:
+        if self._meta_path.exists():
+            try:
+                return json.loads(self._meta_path.read_text())
+            except (ValueError, OSError):
+                pass                     # torn initial write: treat unclean
+        return {"clean": True, "partitions": {}}
+
+    def _write_meta(self, clean: bool) -> None:
+        """Atomically persist per-partition (leader, epoch) + the clean
+        marker. Called on every leadership change (rare) and at close.
+        Never call while holding a replica-set lock."""
+        with self._admin_lock:
+            parts = dict(self._meta_partitions)
+            for (t, p), rset in self._sets.items():
+                with rset.lock:
+                    if rset.leader is not None:
+                        parts[f"{t}/{p}"] = {"leader": rset.leader,
+                                             "epoch": rset.epoch}
+            self._meta_partitions = parts
+            tmp = self._meta_path.with_suffix(".tmp")
+            tmp.write_text(json.dumps({"clean": clean, "partitions": parts}))
+            os.replace(tmp, self._meta_path)
+
+    def _demote(self, rset: _ReplicaSet, replica: int,
+                epoch: int | None = None) -> None:
+        if rset.remove(replica, epoch):
+            self._write_meta(clean=False)
+
+    # -- open-time reconciliation --------------------------------------------
+    def _reconcile_open(self) -> None:
+        """Union the replicas' topics, then make every replica a verbatim
+        copy of the per-partition authority.
+
+        The authority is the **last recorded leader** (from the persisted
+        metadata): under ``acks="all"`` its log contains every acked
+        record, while a longer log elsewhere can only carry an unacked
+        zombie suffix — so length must not outvote leadership. Fallbacks:
+        a recorded leader whose directory was lost (it no longer has the
+        topic on disk) — or no record at all — yields to the longest
+        replica in preference order. After an unclean shutdown every
+        non-authority replica is resynced unconditionally: equal-length
+        divergence at the same offsets is real after a fenced failover,
+        and rebuilds are the only sound answer."""
+        meta = self._load_meta()
+        self._meta_partitions = dict(meta.get("partitions", {}))
+        unclean = not meta.get("clean", True)
+        topic_parts: dict[str, int] = {}
+        had_topic: dict[str, set[int]] = {}
+        for i, store in enumerate(self._stores):
+            for t in store.topics():
+                n = store.num_partitions(t)
+                if topic_parts.setdefault(t, n) != n:
+                    raise ReplicationError(
+                        f"replicas disagree on partition count of {t!r}")
+                had_topic.setdefault(t, set()).add(i)
+        for t, nparts in topic_parts.items():
+            for store in self._stores:
+                store.create_topic(t, nparts)
+            for p in range(nparts):
+                ends = [s.end_offset(t, p) for s in self._stores]
+                rset = self._rset(t, p)
+                rec = self._meta_partitions.get(f"{t}/{p}")
+                auth = None
+                if rec is not None:
+                    rl = int(rec["leader"])
+                    rset.epoch = int(rec["epoch"])
+                    if 0 <= rl < self.n_replicas and rl in had_topic[t]:
+                        auth = rl
+                if auth is None:
+                    auth = max(rset.preference, key=lambda r: ends[r])
+                    if rec is not None:     # leadership moved off the record
+                        rset.epoch += 1
+                with rset.lock:
+                    rset.leader = auth
+                for r in range(self.n_replicas):
+                    if r != auth and (unclean or ends[r] != ends[auth]):
+                        self._resync_partition(rset, t, p, auth, r)
+
+    def _resync_partition(self, rset: _ReplicaSet, topic: str, p: int,
+                          source: int, target: int) -> None:
+        """Full per-partition rebuild of ``target`` from ``source``: reset
+        to the source's begin_offset, then contiguous range shipping. Used
+        at re-open and by ``restore_replica`` — after an unclean leadership
+        history the target's suffix may diverge at the same offsets, so
+        incremental catch-up would be unsound; a rebuild never is."""
+        with rset.ship_lock:
+            src = self._stores[source]
+            dst = self._stores[target]
+            dst.reset_partition(topic, p, src.begin_offset(topic, p))
+            self._ship_range_locked(topic, p, source, target)
+
+    def _ship_range_locked(self, topic: str, p: int, source: int,
+                           target: int) -> None:
+        """Ship ``[target_end, source_end)`` as batched range reads — the
+        one replication data path (lazy catch-up, synchronous acks=all
+        shipping, and resync all funnel through here). Caller holds the
+        partition's ``ship_lock`` (followers are single-writer)."""
+        src, dst = self._stores[source], self._stores[target]
+        try:
+            end = src.end_offset(topic, p)
+        except Exception as e:
+            raise _LeaderReadFailed(f"{topic}/{p}: replica {source}") from e
+        pos = dst.end_offset(topic, p)
+        while pos < end:
+            faults.fire("replica.ship", topic=topic, partition=p,
+                        replica=target, offset=pos)
+            try:
+                recs = src.read(topic, p, pos, self.ship_batch_records)
+            except Exception as e:
+                raise _LeaderReadFailed(
+                    f"{topic}/{p}: replica {source}") from e
+            if not recs:
+                break
+            if recs[0].offset != pos:
+                raise ReplicationError(
+                    f"{topic}/{p}: follower {target} at {pos} trails the "
+                    f"leader's retained range (begins {recs[0].offset}); "
+                    "restore_replica() to rebuild it")
+            dst.append_batch(topic, [(r.key, r.value) for r in recs],
+                             partition=p)
+            pos = recs[-1].offset + 1
+
+    def _replicate(self, rset: _ReplicaSet, topic: str, p: int, leader: int,
+                   epoch: int, lazy: bool) -> None:
+        """Fence, then ship followers up to the leader's end. ``lazy``
+        (acks=leader) only ships a follower once it trails by
+        >= ship_batch_records. A ship failure demotes the follower (the
+        in-sync set shrinks, Kafka-style) — the append itself still
+        succeeds on the survivors."""
+        with rset.lock:
+            if rset.epoch != epoch:
+                # leadership changed while the caller wrote: its records
+                # may sit on a demoted zombie — it must re-append
+                raise StaleEpoch(f"{topic}/{p}: epoch moved past {epoch}")
+            followers = [r for r in rset.preference
+                         if r in rset.alive and r != leader]
+        if not followers:
+            return
+        try:
+            lend = self._stores[leader].end_offset(topic, p)
+        except Exception:
+            # the leader died between the append and replication (e.g. a
+            # racing kill_replica closed its store): fail over, caller
+            # re-appends on the promoted replica
+            self._demote(rset, leader, epoch)
+            raise StaleEpoch(f"{topic}/{p}: leader {leader} lost "
+                             "before ship") from None
+        for f in followers:
+            if lazy:
+                try:
+                    if lend - self._stores[f].end_offset(topic, p) \
+                            < self.ship_batch_records:
+                        continue
+                except Exception:
+                    self._demote(rset, f)   # follower died: ISR shrink
+                    continue
+            try:
+                with rset.ship_lock:
+                    self._ship_range_locked(topic, p, leader, f)
+            except _LeaderReadFailed:
+                # the leader died under the ship — fail over and make the
+                # caller re-append on the promoted replica
+                self._demote(rset, leader, epoch)
+                raise StaleEpoch(f"{topic}/{p}: leader {leader} lost "
+                                 "mid-ship") from None
+            except Exception:
+                self._demote(rset, f)   # follower-side failure: ISR shrink
+
+    # -- leader-routed operations ---------------------------------------------
+    def _append_partition(self, topic: str, p: int,
+                          records: Sequence[tuple[bytes, bytes]]) -> int:
+        """Append one partition's batch through its leader, fence, ship.
+        Returns the first assigned offset."""
+        rset = self._rset(topic, p)
+        while True:
+            leader, epoch = rset.snapshot()
+            try:
+                faults.fire("replica.leader", topic=topic, partition=p,
+                            replica=leader, epoch=epoch)
+                first = self._stores[leader].append_batch(
+                    topic, records, partition=p)[0][1]
+            except (KeyError, TypeError, ValueError):
+                # a killed store raises these too (cleared topic table /
+                # closed file handles) — but from a LIVE store they are the
+                # caller's bug (unknown topic, non-bytes records) and must
+                # not demote healthy replicas one by one
+                if leader not in self._dead:
+                    raise
+                self._demote(rset, leader, epoch)
+                continue
+            except Exception:
+                # the leader store failed (disk death / injected fault):
+                # demote it and retry on the promoted follower
+                self._demote(rset, leader, epoch)
+                continue
+            try:
+                self._replicate(rset, topic, p, leader, epoch,
+                                lazy=self.acks == "leader")
+            except StaleEpoch:
+                # fenced: leadership changed while we wrote — the write may
+                # sit on a demoted zombie; re-append on the current leader
+                # (a duplicate on the zombie's disk is the at-least-once
+                # price; it is discarded when that replica resyncs)
+                continue
+            return first
+
+    def _leader_call(self, topic: str, p: int, fn):
+        """Run a read-side store call against the current leader, demoting
+        and retrying on store failure (epoch-fenced like the write path). A
+        ``KeyError`` from a *live* store means the topic genuinely doesn't
+        exist and propagates; from a killed store (its topic table is
+        cleared on close) it is a replica failure like any other."""
+        rset = self._rset(topic, p)
+        while True:
+            leader, epoch = rset.snapshot()
+            try:
+                return fn(self._stores[leader])
+            except (KeyError, TypeError, ValueError):
+                # same guard as the write path: a killed store raises these
+                # (cleared topic table / closed fds), but from a LIVE store
+                # they are the caller's bug and must not demote healthy
+                # replicas one by one until the set is empty
+                if leader not in self._dead:
+                    raise
+                self._demote(rset, leader, epoch)
+            except Exception:
+                self._demote(rset, leader, epoch)
+
+    def _alive_stores(self) -> list[PartitionedLog]:
+        with self._admin_lock:
+            return [s for i, s in enumerate(self._stores)
+                    if i not in self._dead]
+
+    # -- LogStore: topic admin ------------------------------------------------
+    def create_topic(self, topic: str, partitions: int = 1) -> None:
+        if self._single is not None:
+            return self._single.create_topic(topic, partitions)
+        for store in self._alive_stores():
+            store.create_topic(topic, partitions)
+
+    def topics(self) -> list[str]:
+        if self._single is not None:
+            return self._single.topics()
+        out: set[str] = set()
+        for store in self._alive_stores():
+            out.update(store.topics())
+        return sorted(out)
+
+    def num_partitions(self, topic: str) -> int:
+        if self._single is not None:
+            return self._single.num_partitions(topic)
+        for store in self._alive_stores():
+            try:
+                return store.num_partitions(topic)
+            except KeyError:
+                continue
+        raise KeyError(f"unknown topic {topic!r}")
+
+    # -- LogStore: producer ---------------------------------------------------
+    def append(self, topic: str, key: bytes, value: bytes,
+               partition: int | None = None) -> tuple[int, int]:
+        if self._single is not None:
+            return self._single.append(topic, key, value, partition)
+        if partition is None:
+            partition = route_partition(key, self.num_partitions(topic))
+        off = self._append_partition(topic, partition, [(key, value)])
+        return partition, off
+
+    def append_batch(self, topic: str,
+                     records: Sequence[tuple[bytes, bytes]],
+                     partition: int | None = None
+                     ) -> list[tuple[int, int]]:
+        if self._single is not None:
+            return self._single.append_batch(topic, records, partition)
+        if not records:
+            return []
+        if partition is not None:
+            first = self._append_partition(topic, partition, records)
+            return [(partition, first + i) for i in range(len(records))]
+        nparts = self.num_partitions(topic)
+        groups: dict[int, list[tuple[bytes, bytes]]] = {}
+        indices: dict[int, list[int]] = {}
+        for i, rec in enumerate(records):
+            p = route_partition(rec[0], nparts)
+            groups.setdefault(p, []).append(rec)
+            indices.setdefault(p, []).append(i)
+        out: list[tuple[int, int] | None] = [None] * len(records)
+        for p, recs in groups.items():
+            first = self._append_partition(topic, p, recs)
+            for j, i in enumerate(indices[p]):
+                out[i] = (p, first + j)
+        return out  # type: ignore[return-value]
+
+    def flush(self, fsync: bool = True) -> None:
+        if self._single is not None:
+            return self._single.flush(fsync)
+        for topic in self.topics():
+            self._catch_up_topic(topic)
+        for store in self._alive_stores():
+            store.flush(fsync)
+
+    def flush_topic(self, topic: str, fsync: bool = True) -> None:
+        if self._single is not None:
+            return self._single.flush_topic(topic, fsync)
+        self._catch_up_topic(topic)
+        for store in self._alive_stores():
+            try:
+                store.flush_topic(topic, fsync)
+            except KeyError:
+                continue
+
+    def _catch_up_topic(self, topic: str) -> None:
+        """Ship every follower fully (quiesce point: flush/close/rejoin —
+        the lazy acks=leader lag is paid down here)."""
+        for p in range(self.num_partitions(topic)):
+            rset = self._rset(topic, p)
+            # each StaleEpoch implies a leadership change, which at most
+            # n_replicas failures can cause — the retry loop terminates
+            for _ in range(self.n_replicas + 1):
+                try:
+                    leader, epoch = rset.snapshot()
+                    self._replicate(rset, topic, p, leader, epoch,
+                                    lazy=False)
+                    break
+                except StaleEpoch:
+                    continue
+                except ReplicationError:
+                    break       # no in-sync replica left: nothing to ship
+
+    # -- LogStore: consumer ---------------------------------------------------
+    def read(self, topic: str, partition: int, offset: int,
+             max_records: int = 512) -> list[LogRecord]:
+        if self._single is not None:
+            return self._single.read(topic, partition, offset, max_records)
+        return self._leader_call(
+            topic, partition,
+            lambda s: s.read(topic, partition, offset, max_records))
+
+    def begin_offset(self, topic: str, partition: int) -> int:
+        if self._single is not None:
+            return self._single.begin_offset(topic, partition)
+        return self._leader_call(topic, partition,
+                                 lambda s: s.begin_offset(topic, partition))
+
+    def end_offset(self, topic: str, partition: int) -> int:
+        if self._single is not None:
+            return self._single.end_offset(topic, partition)
+        return self._leader_call(topic, partition,
+                                 lambda s: s.end_offset(topic, partition))
+
+    # -- LogStore: retention --------------------------------------------------
+    def enforce_retention(self, topic: str, retention_bytes: int) -> int:
+        if self._single is not None:
+            return self._single.enforce_retention(topic, retention_bytes)
+        dropped = 0
+        for store in self._alive_stores():
+            dropped = max(dropped,
+                          store.enforce_retention(topic, retention_bytes))
+        return dropped
+
+    def drop_segments_below(self, topic: str, partition: int,
+                            offset: int) -> int:
+        if self._single is not None:
+            return self._single.drop_segments_below(topic, partition, offset)
+        dropped = 0
+        for store in self._alive_stores():
+            dropped = max(dropped,
+                          store.drop_segments_below(topic, partition, offset))
+        return dropped
+
+    def close(self) -> None:
+        if self._single is not None:
+            return self._single.close()
+        try:
+            for topic in self.topics():
+                self._catch_up_topic(topic)
+            self._write_meta(clean=True)    # replicas converged: clean mark
+        finally:
+            for store in self._alive_stores():
+                store.close()
+
+    # -- replica administration (failure detector / operator API) -------------
+    def kill_replica(self, replica: int) -> None:
+        """Declare a replica lost: drop it from every partition's in-sync
+        set (bumping epochs — promoting followers where it led) and close
+        its store. In-flight writers fence on their next epoch check."""
+        if not 0 <= replica < self.n_replicas:
+            raise ValueError(f"no replica {replica}")
+        with self._admin_lock:
+            if replica in self._dead:
+                return
+            if len(self._dead) + 1 >= self.n_replicas:
+                raise ReplicationError("cannot kill the last alive replica")
+            self._dead.add(replica)
+            rsets = list(self._sets.values())
+        changed = False
+        for rset in rsets:
+            changed |= rset.remove(replica)
+        if changed:
+            self._write_meta(clean=False)
+        self._stores[replica].close()
+
+    def restore_replica(self, replica: int) -> None:
+        """Bring a killed replica back: wipe its directory, rebuild every
+        partition from the current leaders (full resync — after an unclean
+        history its old content may diverge), then rejoin the in-sync
+        sets."""
+        if replica not in self._dead:
+            raise ReplicationError(f"replica {replica} is not dead")
+        path = self.root / f"replica-{replica}"
+        shutil.rmtree(path, ignore_errors=True)
+        store = PartitionedLog(path, self._stores[replica].segment_bytes,
+                               self._stores[replica].fsync_every)
+        self._stores[replica] = store
+        for topic in self.topics():
+            nparts = self.num_partitions(topic)
+            store.create_topic(topic, nparts)
+            for p in range(nparts):
+                rset = self._rset(topic, p)
+                leader, _ = rset.snapshot()
+                self._resync_partition(rset, topic, p, leader, replica)
+        with self._admin_lock:
+            self._dead.discard(replica)
+        changed = False
+        for rset in self._sets.values():
+            changed |= rset.add(replica)
+        if changed:
+            self._write_meta(clean=False)
+        # close the resync→rejoin gap: appends that raced the resync saw the
+        # replica outside the in-sync set and skipped it; one more catch-up
+        # ship restores the acks=all invariant (now that it IS in-sync, new
+        # appends ship to it synchronously)
+        for topic in self.topics():
+            self._catch_up_topic(topic)
+
+    # -- observability --------------------------------------------------------
+    def describe(self, topic: str) -> list[dict]:
+        """Per-partition replica-set status (leader, epoch, in-sync set,
+        per-replica end offsets) — the status-history view for replication."""
+        out = []
+        for p in range(self.num_partitions(topic)):
+            if self._single is not None:
+                out.append({"partition": p, "leader": 0, "epoch": 0,
+                            "in_sync": [0],
+                            "ends": [self._single.end_offset(topic, p)]})
+                continue
+            rset = self._rset(topic, p)
+            with rset.lock:
+                leader = rset.leader
+                epoch = rset.epoch
+                alive = sorted(rset.alive)
+            ends = []
+            for i, s in enumerate(self._stores):
+                try:
+                    ends.append(s.end_offset(topic, p)
+                                if i not in self._dead else None)
+                except KeyError:
+                    ends.append(None)
+            out.append({"partition": p, "leader": leader, "epoch": epoch,
+                        "in_sync": alive, "ends": ends})
+        return out
+
+    def leader(self, topic: str, partition: int) -> int:
+        if self._single is not None:
+            return 0
+        leader, _ = self._rset(topic, partition).snapshot()
+        return leader
+
+    def epoch(self, topic: str, partition: int) -> int:
+        if self._single is not None:
+            return 0
+        _, epoch = self._rset(topic, partition).snapshot()
+        return epoch

@@ -10,8 +10,9 @@ import json
 from pathlib import Path
 
 from ..core import (ConsumerGroup, DeadLetterQueue, DetectDuplicate,
-                    ExecuteScript, FlowGraph, LookupEnrich, PartitionedLog,
-                    PublishToLog, RestartPolicy, RouteOnAttribute,
+                    ExecuteScript, FlowGraph, LogStore, LookupEnrich,
+                    PartitionedLog, PublishToLog, ReplicatedLog,
+                    RestartPolicy, RouteOnAttribute,
                     RssAggregatorSource, FirehoseSource, Source,
                     WebSocketSource)
 from ..core.delivery import Consumer
@@ -34,8 +35,10 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
                         max_retries: int = 0,
                         dead_letter_topic: str | None = None,
                         durable: bool = False,
-                        poison_rate: float = 0.0
-                        ) -> tuple[FlowGraph, PartitionedLog]:
+                        poison_rate: float = 0.0,
+                        replicas: int = 1,
+                        acks: str = "all"
+                        ) -> tuple[FlowGraph, LogStore]:
     """The paper §IV case study: returns (flow, log) with topic ``articles``
     (clean, deduped, enriched news) and topic ``events`` (websocket feed).
 
@@ -45,9 +48,17 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
     ``dead_letter_topic`` wires a ``DeadLetterQueue`` quarantine;
     ``durable`` makes the interior connections WAL-backed through ``log``;
     ``poison_rate`` makes the RSS source emit records the enrich stage can be
-    made to choke on (see ``faults.raise_on``)."""
+    made to choke on (see ``faults.raise_on``);
+    ``replicas``/``acks`` land everything (topics, WAL, quarantine) in an
+    N-replica ``ReplicatedLog`` instead of the single-host store, so the
+    landed stream survives replica loss (``replicas=1`` keeps the
+    single-store hot path)."""
     root = Path(root)
-    log = PartitionedLog(root / "log")
+    log: LogStore
+    if replicas > 1:
+        log = ReplicatedLog(root / "log", replicas=replicas, acks=acks)
+    else:
+        log = PartitionedLog(root / "log")
     log.create_topic("articles", partitions=partitions)
     log.create_topic("events", partitions=max(1, partitions // 4))
 
@@ -142,7 +153,7 @@ def expected_clean_doc_ids(n_rss: int, seed: int,
     return out
 
 
-def attach_training_loader(log: PartitionedLog, *, topic: str = "articles",
+def attach_training_loader(log: LogStore, *, topic: str = "articles",
                            group: str = "trainer", member: str = "host0",
                            batch_size: int = 8, seq_len: int = 256,
                            **kw) -> tuple[ConsumerGroup, StreamingDataLoader]:

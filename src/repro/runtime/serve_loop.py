@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import PartitionedLog
+from ..core import LogStore
 from ..core.delivery import Consumer
 from ..core.flowfile import FlowFile
 from ..data.tokenizer import ByteTokenizer
@@ -43,7 +43,7 @@ def make_prefill_fn(model: Model, max_len: int):
 
 class Server:
     def __init__(self, model: Model, params, consumer: Consumer,
-                 out_log: PartitionedLog, scfg: ServeConfig) -> None:
+                 out_log: LogStore, scfg: ServeConfig) -> None:
         self.model = model
         self.params = params
         self.consumer = consumer

@@ -179,3 +179,51 @@ def test_fan_in_merges_sources(tmp_path):
     g.run_to_completion(timeout=30)
     assert len(sink.items) == 20
     assert {f.attributes["src"] for f in sink.items} == {"1", "2"}
+
+
+def test_lineage_index_survives_ring_eviction(tmp_path):
+    """With a spill configured, lineage() is an indexed file lookup: it
+    returns the FULL history of a record even after the bounded in-memory
+    ring evicted its events (ROADMAP: provenance at scale)."""
+    from repro.core import ProvenanceRepository, make_flowfile
+    repo = ProvenanceRepository(capacity=8, spill_path=tmp_path / "prov.jsonl")
+    ffs = [make_flowfile(f"rec-{i}") for i in range(20)]
+    for ff in ffs:
+        repo.record("CREATE", ff, "src")
+    repo.record_batch("ROUTE", ffs, "src", details="success")
+    for ff in ffs:
+        repo.record("SEND", ff, "sink")
+    target = ffs[0].lineage_id               # its events left the ring long ago
+    assert all(e.lineage_id != target for e in repo.events())
+    evs = repo.lineage(target)
+    assert [e.event_type for e in evs] == ["CREATE", "ROUTE", "SEND"]
+    assert [e.component for e in evs] == ["src", "src", "sink"]
+    assert repo.lineage_chain(target) == ["src", "sink"]
+    repo.close()
+
+
+def test_lineage_index_reopens_existing_spill(tmp_path):
+    from repro.core import ProvenanceRepository, make_flowfile
+    path = tmp_path / "prov.jsonl"
+    repo = ProvenanceRepository(capacity=4, spill_path=path)
+    ff = make_flowfile("persistent record")
+    repo.record("CREATE", ff, "src")
+    repo.close()
+    # torn tail from a crash mid-write must be truncated away at reopen
+    with open(path, "ab") as f:
+        f.write(b'{"event_type": "SEND", "torn')
+
+    repo2 = ProvenanceRepository(capacity=4, spill_path=path)
+    repo2.record("SEND", ff, "sink")
+    evs = repo2.lineage(ff.lineage_id)
+    assert [e.event_type for e in evs] == ["CREATE", "SEND"]
+    repo2.close()
+
+
+def test_lineage_without_spill_still_scans_ring(tmp_path):
+    from repro.core import ProvenanceRepository, make_flowfile
+    repo = ProvenanceRepository(capacity=100)
+    ff = make_flowfile("in-memory only")
+    repo.record("CREATE", ff, "src")
+    assert [e.event_type for e in repo.lineage(ff.lineage_id)] == ["CREATE"]
+    repo.close()

@@ -266,3 +266,67 @@ def test_retention_drops_oldest_segments(tmp_path):
     recs = log.read("t", 0, log.begin_offset("t", 0), max_records=10)
     assert recs and recs[0].offset == log.begin_offset("t", 0)
     log.close()
+
+
+# ---------------------------------------------------------------------------
+# drop_segments_below / iter_records boundary cases
+# ---------------------------------------------------------------------------
+def test_drop_segments_below_and_iter_on_empty_log(tmp_log):
+    tmp_log.create_topic("t", partitions=2)
+    assert list(tmp_log.iter_records("t")) == []
+    assert tmp_log.drop_segments_below("t", 0, 0) == 0
+    assert tmp_log.drop_segments_below("t", 0, 10_000) == 0   # active survives
+    assert tmp_log.begin_offset("t", 0) == 0
+    assert tmp_log.end_offset("t", 0) == 0
+
+
+def test_drop_segments_below_frontier_exactly_on_segment_roll(tmp_path):
+    from repro.core import PartitionedLog
+    log = PartitionedLog(tmp_path, segment_bytes=256)
+    log.create_topic("t", partitions=1)
+    log.append_batch("t", [(b"k", b"x" * 40) for _ in range(30)], partition=0)
+    part_dir = tmp_path / "t" / "0"
+    bases = sorted(int(p.stem) for p in part_dir.glob("*.seg"))
+    assert len(bases) >= 3
+    roll = bases[2]                    # frontier == base of the third segment
+    dropped = log.drop_segments_below("t", 0, roll)
+    assert dropped == 2                # exactly the two whole segments below
+    assert log.begin_offset("t", 0) == roll
+    # one record below the frontier (inside a dropped segment's range) would
+    # NOT have been droppable: re-check the off-by-one on the previous base
+    log2_dropped = log.drop_segments_below("t", 0, roll - 1)
+    assert log2_dropped == 0
+    recs = list(log.iter_records("t", 0))
+    assert [r.offset for r in recs] == list(range(roll, 30))
+    log.close()
+
+
+def test_drop_segments_below_never_drops_unflushed_active_tail(tmp_path):
+    from repro.core import PartitionedLog
+    log = PartitionedLog(tmp_path, segment_bytes=1 << 20)
+    log.create_topic("t", partitions=1)
+    # appended but never flushed: still buffered in the active segment
+    log.append_batch("t", [(b"", f"v{i}".encode()) for i in range(10)],
+                     partition=0)
+    assert log.drop_segments_below("t", 0, 10) == 0
+    assert log.drop_segments_below("t", 0, 1_000_000) == 0
+    # records remain readable (reader-triggered flush still works)
+    assert [r.value for r in log.iter_records("t", 0)] == \
+           [f"v{i}".encode() for i in range(10)]
+    log.close()
+
+
+def test_iter_records_starts_at_begin_offset_after_gc(tmp_path):
+    from repro.core import PartitionedLog
+    log = PartitionedLog(tmp_path, segment_bytes=256)
+    log.create_topic("t", partitions=2)
+    log.append_batch("t", [(b"k", b"y" * 40) for _ in range(30)], partition=0)
+    log.flush()
+    bases = sorted(int(p.stem) for p in (tmp_path / "t" / "0").glob("*.seg"))
+    log.drop_segments_below("t", 0, bases[1])
+    recs = list(log.iter_records("t"))           # all partitions: 0 then 1
+    assert [r.offset for r in recs] == list(range(bases[1], 30))
+    assert all(r.partition == 0 for r in recs)   # partition 1 empty, no stall
+    # iter over just the empty partition
+    assert list(log.iter_records("t", 1)) == []
+    log.close()

@@ -387,3 +387,93 @@ def test_news_topology_zero_record_loss_under_periodic_faults(tmp_path):
     assert st["processors"]["big-rss"]["restarts"] > 0
     assert st["processors"]["enrich"]["retries"] > 0
     log.close()
+
+
+# ---------------------------------------------------------------------------
+# automatic dead-letter re-drive (poison fingerprinting)
+# ---------------------------------------------------------------------------
+def test_redrive_reingests_quarantined_records_once_fixed(tmp_path):
+    log = PartitionedLog(tmp_path / "log")
+    g, sink, dlq = _linear_flow(n=100, max_retries=1, dlq_log=log)
+    INJECTOR.arm("proc.work",
+                 raise_on(lambda ff: ff.attributes.get("poison") == "1"),
+                 every=1)
+    g.run_to_completion(timeout=60)
+    assert len(sink.items) == 90 and dlq.quarantined == 10
+    INJECTOR.reset()                              # "the bug is fixed"
+
+    # a fresh graph over the same log: redrive routes each record back to
+    # the processor that dead-lettered it (dead.letter.source == "work")
+    g2, sink2, dlq2 = _linear_flow(n=0, max_retries=1, dlq_log=log)
+    report = dlq2.redrive(g2)
+    assert report == {"redriven": 10, "skipped_poison": 0, "unroutable": 0}
+    g2.run_to_completion(timeout=60)
+    assert sorted(int(f.attributes["i"]) for f in sink2.items) == \
+           [i for i in range(100) if i % 10 == 3]
+    # redriven records re-enter with a fresh retry budget / audit trail
+    assert all("retry.count" not in f.attributes for f in sink2.items)
+    assert all("dead.letter.source" not in f.attributes
+               for f in sink2.items)
+    log.close()
+
+
+def test_redrive_skips_confirmed_poison_on_second_pass(tmp_path):
+    """A record that comes BACK to quarantine after a redrive is poison by
+    fingerprint: later redrives skip it instead of re-poisoning the flow."""
+    log = PartitionedLog(tmp_path / "log")
+    g, sink, dlq = _linear_flow(n=50, max_retries=1, dlq_log=log)
+    poison_pred = raise_on(lambda ff: ff.attributes.get("poison") == "1")
+    INJECTOR.arm("proc.work", poison_pred, every=1)
+    g.run_to_completion(timeout=60)
+    assert dlq.quarantined == 5
+
+    # bug NOT fixed: redrive 1 re-ingests, records get re-quarantined
+    g2, sink2, dlq2 = _linear_flow(n=0, max_retries=1, dlq_log=log)
+    INJECTOR.arm("proc.work", poison_pred, every=1)
+    assert dlq2.redrive(g2)["redriven"] == 5
+    g2.run_to_completion(timeout=60)
+    assert len(sink2.items) == 0 and dlq2.quarantined == 5
+    INJECTOR.reset()
+
+    # redrive 2 recognizes the returned fingerprints and leaves them alone
+    g3, sink3, dlq3 = _linear_flow(n=0, max_retries=1, dlq_log=log)
+    report = dlq3.redrive(g3)
+    assert report == {"redriven": 0, "skipped_poison": 5, "unroutable": 0}
+    g3.run_to_completion(timeout=60)
+    assert len(sink3.items) == 0
+    log.close()
+
+
+def test_redrive_explicit_dest_and_unroutable(tmp_path):
+    log = PartitionedLog(tmp_path / "log")
+    g, sink, dlq = _linear_flow(n=30, max_retries=1, dlq_log=log)
+    INJECTOR.arm("proc.work",
+                 raise_on(lambda ff: ff.attributes.get("poison") == "1"),
+                 every=1)
+    g.run_to_completion(timeout=60)
+    assert dlq.quarantined == 3
+    INJECTOR.reset()
+
+    # a graph that lacks the original "work" processor: explicit dest
+    # overrides the per-record dead.letter.source routing
+    g2 = FlowGraph("other")
+    other = g2.add(ExecuteScript("other", lambda ff: ff))
+    osink = g2.add(CollectSink("osink"))
+    g2.connect(g2.add(Source("noop", lambda: iter(()))), "success", "other")
+    g2.connect(other, "success", osink)
+    dlq2 = DeadLetterQueue("dlq", log, topic="dead")
+    # a typo'd explicit dest raises up front, leaving the frontier (and
+    # therefore redrivability) untouched
+    with pytest.raises(ValueError):
+        dlq2.redrive(g2, dest="othre")
+    assert dlq2.redrive(g2, dest=other)["redriven"] == 3
+    g2.run_to_completion(timeout=60)
+    assert sorted(int(f.attributes["i"]) for f in osink.items) == [3, 13, 23]
+
+    # a quarantined record whose dead.letter.source is absent from the
+    # graph (and no dest given) is unroutable: left in place, not lost
+    orphan = make_flowfile("orphan record")
+    log.append("dead", *DeadLetterQueue.encode(orphan), partition=0)
+    assert dlq2.redrive(g2)["unroutable"] == 1
+    assert len(list(DeadLetterQueue.replay(log, "dead"))) == 4
+    log.close()

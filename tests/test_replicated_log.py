@@ -1,0 +1,381 @@
+"""ReplicatedLog: LogStore contract, leader failover with epoch fencing,
+durability levels, replica loss/restore, and the delivery layers running
+unchanged over the replicated store."""
+import shutil
+import threading
+
+import pytest
+
+from repro.core import (ConsumerGroup, LogStore, PartitionedLog, Producer,
+                        ReplicatedLog, ReplicationError)
+from repro.core.connection import DurableConnection
+from repro.core.faults import INJECTOR, InjectedFault
+from repro.core.flowfile import make_flowfile
+
+
+def _fill(log, topic="t", n=100, partition=0):
+    log.create_topic(topic, partitions=max(1, partition + 1))
+    log.append_batch(topic, [(f"k{i}".encode(), f"v{i}".encode())
+                             for i in range(n)], partition=partition)
+
+
+def _values(log, topic="t", partition=0):
+    return [r.value for r in log.iter_records(topic, partition)]
+
+
+# ---------------------------------------------------------------------------
+# contract / degeneration
+# ---------------------------------------------------------------------------
+def test_both_stores_implement_logstore(tmp_path):
+    assert issubclass(PartitionedLog, LogStore)
+    assert issubclass(ReplicatedLog, LogStore)
+
+
+def test_single_replica_matches_partitioned_log_bytes(tmp_path):
+    """replicas=1 must degenerate to the exact PartitionedLog hot path —
+    byte-identical segment files for the same appends."""
+    plain = PartitionedLog(tmp_path / "plain")
+    repl = ReplicatedLog(tmp_path / "repl", replicas=1)
+    recs = [(f"key-{i}".encode(), f"val-{i}".encode() * (i % 3 + 1))
+            for i in range(200)]
+    for log in (plain, repl):
+        log.create_topic("t", partitions=4)
+        assert log.append_batch("t", recs) is not None
+        log.flush()
+    for p in range(4):
+        a = b"".join(f.read_bytes() for f in sorted(
+            (tmp_path / "plain" / "t" / str(p)).glob("*.seg")))
+        b = b"".join(f.read_bytes() for f in sorted(
+            (tmp_path / "repl" / "replica-0" / "t" / str(p)).glob("*.seg")))
+        assert a == b
+    plain.close()
+    repl.close()
+
+
+def test_acks_all_ships_every_append_to_every_replica(tmp_path):
+    log = ReplicatedLog(tmp_path, replicas=3, acks="all")
+    _fill(log, n=50)
+    for d in log.describe("t"):
+        assert d["ends"] == [50] * 3 if d["partition"] == 0 else True
+    log.close()
+    # each replica directory is independently a complete PartitionedLog
+    for i in range(3):
+        store = PartitionedLog(tmp_path / f"replica-{i}")
+        assert [r.value for r in store.iter_records("t", 0)] == \
+            [f"v{i}".encode() for i in range(50)]
+        store.close()
+
+
+def test_key_routing_matches_partitioned_log(tmp_path):
+    plain = PartitionedLog(tmp_path / "plain")
+    repl = ReplicatedLog(tmp_path / "repl", replicas=2)
+    recs = [(f"key-{i}".encode(), f"val-{i}".encode()) for i in range(80)]
+    for log in (plain, repl):
+        log.create_topic("t", partitions=4)
+    assert plain.append_batch("t", recs) == repl.append_batch("t", recs)
+    plain.close()
+    repl.close()
+
+
+def test_acks_leader_lazy_shipping_catches_up_on_flush(tmp_path):
+    log = ReplicatedLog(tmp_path, replicas=2, acks="leader",
+                        ship_batch_records=64)
+    log.create_topic("t", partitions=1)
+    log.append_batch("t", [(b"", f"v{i}".encode()) for i in range(10)],
+                     partition=0)
+    d = log.describe("t")[0]
+    assert d["ends"][d["leader"]] == 10
+    follower_end = d["ends"][1 - d["leader"]]
+    assert follower_end < 10            # lazily trailing
+    log.flush_topic("t")
+    assert {e for e in log.describe("t")[0]["ends"]} == {10}
+    log.close()
+
+
+def test_invalid_config_rejected(tmp_path):
+    with pytest.raises(ValueError):
+        ReplicatedLog(tmp_path, replicas=0)
+    with pytest.raises(ValueError):
+        ReplicatedLog(tmp_path, replicas=2, acks="quorum")
+    with pytest.raises(ValueError):
+        ReplicatedLog(tmp_path, replicas=2, fsync_every=[1])
+
+
+# ---------------------------------------------------------------------------
+# failover
+# ---------------------------------------------------------------------------
+def test_leader_failover_mid_ingest_zero_record_loss(tmp_path):
+    """Acceptance: kill the leader mid-ingest via the FaultInjector; a
+    follower is promoted with an epoch bump and a consumer group replays
+    every record (duplicates allowed, loss is not)."""
+    log = ReplicatedLog(tmp_path, replicas=3, acks="all")
+    log.create_topic("t", partitions=1)
+    leader0 = log.leader("t", 0)
+    assert log.epoch("t", 0) == 0
+    # the 4th leader-store append dies (simulated disk death of the leader)
+    INJECTOR.arm("replica.leader", "raise", nth=4)
+    with Producer(log, "t", max_batch_records=16) as prod:
+        for i in range(200):
+            prod.send(b"", f"v{i}".encode(), partition=0)
+    assert INJECTOR.fired("replica.leader") == 1
+    assert log.leader("t", 0) != leader0
+    assert log.epoch("t", 0) >= 1
+    assert leader0 not in log.describe("t")[0]["in_sync"]
+    # consumer-side replay: zero loss (exact count — the failed append never
+    # assigned offsets, so the retry produces no duplicates here)
+    group = ConsumerGroup(log, "t", "g")
+    consumer = group.add_member("m0")
+    seen = []
+    while True:
+        recs = consumer.poll(64)
+        if not recs:
+            break
+        seen.extend(r.value for r in recs)
+    assert set(seen) >= {f"v{i}".encode() for i in range(200)}
+    log.close()
+
+
+def test_concurrent_kill_during_ingest_loses_nothing(tmp_path):
+    """A racing failure detector (kill_replica from another thread) fences
+    in-flight writers; every acked record survives on the promoted side."""
+    log = ReplicatedLog(tmp_path, replicas=2, acks="all")
+    log.create_topic("t", partitions=1)
+    leader0 = log.leader("t", 0)
+    acked = []
+    stop = threading.Event()
+
+    def ingest():
+        i = 0
+        while not stop.is_set() and i < 3000:
+            log.append("t", b"", f"v{i}".encode(), partition=0)
+            acked.append(i)
+            i += 1
+
+    t = threading.Thread(target=ingest)
+    t.start()
+    while len(acked) < 50:      # let the writer get going
+        pass
+    log.kill_replica(leader0)
+    stop.set()
+    t.join()
+    values = set(_values(log))
+    assert values >= {f"v{i}".encode() for i in acked}
+    assert log.leader("t", 0) != leader0
+    log.close()
+
+
+def test_follower_ship_failure_shrinks_isr_but_append_succeeds(tmp_path):
+    log = ReplicatedLog(tmp_path, replicas=3, acks="all")
+    log.create_topic("t", partitions=1)
+    epoch0 = log.epoch("t", 0)
+    INJECTOR.arm("replica.ship", "raise", nth=1)
+    log.append_batch("t", [(b"", b"v0")], partition=0)
+    d = log.describe("t")[0]
+    assert len(d["in_sync"]) == 2                 # one follower ejected
+    assert d["leader"] == log.leader("t", 0)
+    assert log.epoch("t", 0) == epoch0            # leadership unchanged
+    assert _values(log) == [b"v0"]
+    log.close()
+
+
+def test_all_replicas_dead_raises(tmp_path):
+    log = ReplicatedLog(tmp_path, replicas=2)
+    log.create_topic("t", partitions=1)
+    log.kill_replica(0)
+    with pytest.raises(ReplicationError):
+        log.kill_replica(1)                       # cannot kill the last one
+    # killing the only live replica via injected leader faults exhausts the set
+    INJECTOR.arm("replica.leader", "raise", every=1)
+    with pytest.raises(ReplicationError):
+        log.append("t", b"", b"v", partition=0)
+    INJECTOR.reset()
+    log.close()
+
+
+def test_restore_replica_full_resync_and_rejoin(tmp_path):
+    log = ReplicatedLog(tmp_path, replicas=2, acks="all")
+    _fill(log, n=30)
+    log.kill_replica(0)
+    log.append_batch("t", [(b"", f"post{i}".encode()) for i in range(10)],
+                     partition=0)
+    log.restore_replica(0)
+    d = log.describe("t")[0]
+    assert d["in_sync"] == [0, 1] and d["ends"] == [40, 40]
+    # restored replica follows; it does not reclaim leadership (no fail-back)
+    assert d["leader"] == 1
+    log.append("t", b"", b"after-restore", partition=0)
+    assert log.describe("t")[0]["ends"] == [41, 41]
+    log.close()
+
+
+# ---------------------------------------------------------------------------
+# durability / reopen
+# ---------------------------------------------------------------------------
+def test_acks_all_survives_leader_dir_deletion(tmp_path):
+    """Acceptance: with acks=all, rm -rf of the leader's data directory
+    loses nothing — reopen reconciles from the surviving replicas and a
+    consumer group replays every record."""
+    log = ReplicatedLog(tmp_path, replicas=3, acks="all")
+    log.create_topic("t", partitions=2)
+    expect = {f"v{i}".encode() for i in range(300)}
+    with Producer(log, "t") as prod:
+        for i in range(300):
+            prod.send(f"k{i}".encode(), f"v{i}".encode())
+    leader0 = log.leader("t", 0)
+    log.close()
+
+    shutil.rmtree(tmp_path / f"replica-{leader0}")
+    log2 = ReplicatedLog(tmp_path, replicas=3, acks="all")
+    group = ConsumerGroup(log2, "t", "g")
+    consumer = group.add_member("m0")
+    seen = set()
+    while True:
+        recs = consumer.poll(128)
+        if not recs:
+            break
+        seen.update(r.value for r in recs)
+    assert seen == expect
+    # the wiped replica was resynced back to a full copy
+    for d in log2.describe("t"):
+        ends = d["ends"]
+        assert len(set(ends)) == 1 and ends[0] > 0
+    log2.close()
+
+
+def test_reopen_after_clean_close_is_reconciled_noop(tmp_path):
+    log = ReplicatedLog(tmp_path, replicas=2, acks="leader")
+    _fill(log, n=40)
+    log.close()                                   # ships the lazy lag fully
+    log2 = ReplicatedLog(tmp_path, replicas=2, acks="leader")
+    assert _values(log2) == [f"v{i}".encode() for i in range(40)]
+    assert log2.describe("t")[0]["ends"] == [40, 40]
+    log2.close()
+
+
+def test_retention_applies_across_replicas_and_ship_respects_begin(tmp_path):
+    log = ReplicatedLog(tmp_path, replicas=2, acks="all", segment_bytes=256)
+    log.create_topic("t", partitions=1)
+    log.append_batch("t", [(b"", b"x" * 40) for _ in range(100)], partition=0)
+    dropped = log.enforce_retention("t", retention_bytes=1024)
+    assert dropped > 0
+    begin = log.begin_offset("t", 0)
+    assert begin > 0
+    recs = log.read("t", 0, begin, max_records=10)
+    assert recs and recs[0].offset == begin
+    # appends after retention keep both replicas aligned
+    log.append("t", b"", b"tail", partition=0)
+    assert log.describe("t")[0]["ends"][0] == log.describe("t")[0]["ends"][1]
+    log.close()
+
+
+# ---------------------------------------------------------------------------
+# the layers above run unchanged over the replicated store
+# ---------------------------------------------------------------------------
+def test_durable_connection_wal_over_replicated_log(tmp_path):
+    log = ReplicatedLog(tmp_path, replicas=2, acks="all")
+    conn = DurableConnection("c", log)
+    ffs = [make_flowfile(f"rec-{i}", idx=str(i)) for i in range(20)]
+    assert conn.offer_batch(ffs) == 20
+    for _ in range(5):
+        conn.poll(block=False)
+    conn.ack(5)
+    leader0 = log.leader(conn.topic, 0)
+    log.close()
+    # the WAL survives losing the journal leader's directory
+    shutil.rmtree(tmp_path / f"replica-{leader0}")
+    log2 = ReplicatedLog(tmp_path, replicas=2, acks="all")
+    conn2 = DurableConnection("c", log2)
+    assert conn2.acked == 5
+    assert conn2.replayed == 15
+    replayed = [conn2.poll(block=False).attributes["idx"] for _ in range(15)]
+    assert replayed == [str(i) for i in range(5, 20)]
+    log2.close()
+
+
+def test_consumer_group_failover_mid_consumption(tmp_path):
+    log = ReplicatedLog(tmp_path, replicas=2, acks="all")
+    log.create_topic("t", partitions=2)
+    log.append_batch("t", [(f"k{i}".encode(), f"v{i}".encode())
+                           for i in range(100)])
+    group = ConsumerGroup(log, "t", "g")
+    consumer = group.add_member("m0")
+    seen = {r.value for r in consumer.poll(30)}
+    log.kill_replica(log.leader("t", 0))          # reads fail over too
+    while True:
+        recs = consumer.poll(64)
+        if not recs:
+            break
+        seen.update(r.value for r in recs)
+    assert seen == {f"v{i}".encode() for i in range(100)}
+    log.close()
+
+
+# ---------------------------------------------------------------------------
+# review-hardening regressions
+# ---------------------------------------------------------------------------
+def test_reopen_prefers_last_recorded_leader_over_zombie(tmp_path):
+    """Equal-length divergence after a fenced failover: at reopen the
+    persisted (leader, epoch) metadata — not log length or preference
+    order — decides authority, so an acked record on the promoted leader
+    beats a zombie's divergent record at the same offset."""
+    log = ReplicatedLog(tmp_path, replicas=2, acks="all")
+    log.create_topic("t", partitions=1)
+    log.append_batch("t", [(b"", f"v{i}".encode()) for i in range(10)],
+                     partition=0)
+    log.kill_replica(0)                    # replica 0 led partition 0
+    log.append("t", b"", b"acked-on-1", partition=0)   # only replica 1 has it
+    log.flush(fsync=False)
+    # hard crash: no close() — the clean marker stays False. The dead
+    # zombie's disk then gains a divergent record at the SAME offset 10.
+    zombie = PartitionedLog(tmp_path / "replica-0")
+    zombie.append("t", b"", b"zombie-write", partition=0)
+    zombie.flush(fsync=False)
+    zombie.close()
+
+    log2 = ReplicatedLog(tmp_path, replicas=2, acks="all")
+    assert log2.leader("t", 0) == 1        # metadata, not preference order
+    recs = log2.read("t", 0, 10, max_records=1)
+    assert recs[0].value == b"acked-on-1"
+    # the zombie was rebuilt as a verbatim copy of the authority
+    assert log2.describe("t")[0]["ends"] == [11, 11]
+    log2.close()
+    z2 = PartitionedLog(tmp_path / "replica-0")
+    assert [r.value for r in z2.iter_records("t", 0)][-1] == b"acked-on-1"
+    z2.close()
+
+
+def test_caller_type_error_does_not_demote_replicas(tmp_path):
+    """A producer bug (non-bytes key/value) must surface to the caller,
+    not eat the in-sync set one healthy replica at a time."""
+    log = ReplicatedLog(tmp_path, replicas=2, acks="all")
+    log.create_topic("t", partitions=1)
+    with pytest.raises(TypeError):
+        log.append("t", "not-bytes", b"v", partition=0)
+    with pytest.raises(KeyError):
+        log.append("no-such-topic", b"k", b"v")
+    with pytest.raises(TypeError):
+        log.read("t", 0, None)                        # read path too
+    with pytest.raises(KeyError):
+        log.end_offset("no-such-topic", 0)
+    assert log.describe("t")[0]["in_sync"] == [0, 1]
+    log.append("t", b"k", b"v", partition=0)          # still fully healthy
+    assert log.describe("t")[0]["ends"] == [1, 1]
+    log.close()
+
+
+def test_leader_killed_between_append_and_ship_fails_over(tmp_path):
+    """A racing kill_replica landing after the leader write but before
+    replication must fail over (and re-append), not leak the store's
+    KeyError/ValueError to the producer."""
+    log = ReplicatedLog(tmp_path, replicas=2, acks="all")
+    log.create_topic("t", partitions=1)
+    leader0 = log.leader("t", 0)
+
+    INJECTOR.arm("replica.ship",
+                 lambda ctx: log.kill_replica(leader0), nth=1)
+    log.append_batch("t", [(b"", f"v{i}".encode()) for i in range(5)],
+                     partition=0)
+    assert log.leader("t", 0) != leader0
+    values = [r.value for r in log.iter_records("t", 0)]
+    assert set(values) >= {f"v{i}".encode() for i in range(5)}  # zero loss
+    log.close()

@@ -10,26 +10,56 @@ loader variant).
   bench_backpressure        paper Fig. 5 (sink outage, clamp at 10k, replay)
   bench_recovery            paper §II.B (crash recovery, delivery guarantees,
                             supervised flow under injected faults)
+  bench_acquisition         live acquisition: flapping connectors + mid-run
+                            crash/resume (zero loss, monotonic watermarks)
   bench_loader              host→device feed rate (ingestion fabric edge)
   roofline                  §Roofline table from artifacts/dryrun (if present)
 
-``--quick`` runs a CI-sized smoke pass (~10x smaller inputs) and leaves
-``BENCH_ingest.json`` untouched.
+``--quick`` runs a CI-sized smoke pass (~10x smaller inputs), leaves
+``BENCH_ingest.json`` untouched, and *guards* against ingest regressions
+at a 0.8x ratio. The baseline is measured A/B-style in the same host-load
+phase — a detached git worktree of the baseline commit (HEAD for a dirty
+tree, HEAD~1 for a clean CI checkout) runs the same quick ingest pass
+minutes apart from the working tree's; the only comparison that survives
+this shared host's 2-3x multi-minute load swings. When git is
+unavailable it falls back to the snapshot's quick-sized baseline,
+de-noised by a re-measured pure-Python calibration probe. Either way a
+variant is flagged only when BOTH its wall-clock rate AND its cpu-time
+rate (records per cpu-second, immune to cpu starvation) fall under the
+floor; one re-measure absorbs residual noise, then the run exits
+non-zero. The quick pass also fails on any acceptance-flag regression
+(record loss, watermark regression, unbounded duplicates) across the
+recovery/acquisition scenarios.
 """
 from __future__ import annotations
 
 import json
+import subprocess
 import sys
+import tempfile
+import time
+import zlib
 from pathlib import Path
 
 _REPO_ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(_REPO_ROOT / "src"))
 sys.path.insert(0, str(_REPO_ROOT))
 
-from benchmarks import (bench_backpressure, bench_ingest_throughput,
-                        bench_loader, bench_recovery, roofline)
+from benchmarks import (bench_acquisition, bench_backpressure,
+                        bench_ingest_throughput, bench_loader,
+                        bench_recovery, roofline)
 
 SNAPSHOT_PATH = _REPO_ROOT / "BENCH_ingest.json"
+
+#: a quick-run ingest variant must stay above this fraction of the
+#: snapshot's quick-sized baseline rate (one retry absorbs host noise)
+GUARD_RATIO = 0.8
+
+#: boolean acceptance flags that must hold in the smoke scenarios
+ACCEPTANCE_FLAGS = ("zero_record_loss", "watermark_monotonic",
+                    "watermark_resumed_from_checkpoint",
+                    "duplicates_bounded", "at_least_once_ok",
+                    "no_committed_loss")
 
 
 def emit(rows):
@@ -40,15 +70,27 @@ def emit(rows):
             print(f"{name},{k},{v}")
 
 
-def write_snapshot(ingest_rows, loader_rows,
-                   path: Path = SNAPSHOT_PATH) -> None:
-    """Persist the throughput numbers future PRs regress against."""
+def write_snapshot(ingest_rows, loader_rows, quick_ingest_rows,
+                   calibration: float, path: Path = SNAPSHOT_PATH) -> None:
+    """Persist the throughput numbers future PRs regress against. The
+    quick-sized ingest baseline is recorded alongside the full-size rows so
+    CI (`--quick`) can guard like-for-like — small-input rates differ
+    structurally from full-run rates (startup amortization) — and the
+    calibration rate lets the guard discount shared-host load."""
     snapshot = {
+        "calibration_ops_per_sec": round(calibration, 1),
         "bench_ingest_throughput": {
             r["name"]: {"records_per_sec": r["records_per_sec"],
+                        "records_per_cpu_sec": r["records_per_cpu_sec"],
                         "records": r["records"],
                         "wall_sec": r["wall_sec"]}
             for r in ingest_rows},
+        "bench_ingest_quick": {
+            r["name"]: {"records_per_sec": r["records_per_sec"],
+                        "records_per_cpu_sec": r["records_per_cpu_sec"],
+                        "records": r["records"],
+                        "wall_sec": r["wall_sec"]}
+            for r in quick_ingest_rows},
         "bench_loader": {
             r["name"]: {"tokens_per_sec": r["tokens_per_sec"],
                         "tokens": r["tokens"],
@@ -58,25 +100,190 @@ def write_snapshot(ingest_rows, loader_rows,
     path.write_text(json.dumps(snapshot, indent=2) + "\n")
 
 
+def calibrate(n: int = 150_000) -> float:
+    """ops/sec of a fixed pure-Python mini-workload with the ingest hot
+    path's profile (json serialization + crc + attribute-dict traffic).
+    Stored in the snapshot at full-run time and re-measured at guard time:
+    the ratio between the two is the shared host's current slowdown, which
+    the guard uses to scale its baseline — so a loaded box doesn't read as
+    a code regression (load slows calibration and bench alike; a real code
+    regression slows only the bench)."""
+    payload = {"id": "src-1234", "source": "reuters", "lang": "en",
+               "title": "t" * 48, "body": "b" * 160, "ts": 1_534_660_000}
+    h = 0
+    t0 = time.perf_counter()
+    for i in range(n):
+        s = json.dumps(payload, separators=(",", ":")).encode()
+        h ^= zlib.crc32(s)
+        attrs = {"doc_id": payload["id"], "lang": payload["lang"], "i": i}
+        h ^= len(json.loads(s)["body"]) + len(attrs)
+    dt = time.perf_counter() - t0
+    return n / dt
+
+
+def check_acceptance(rows) -> list[str]:
+    """Collect acceptance-flag violations (False booleans) from a scenario's
+    rows — loss/watermark/duplicate contracts, not throughput."""
+    fails = []
+    for r in rows:
+        for flag in ACCEPTANCE_FLAGS:
+            if flag in r and r[flag] is False:
+                fails.append(f"{r['name']}.{flag}")
+    return fails
+
+
+def measure_head_quick() -> dict | None:
+    """Quick ingest rates of a baseline commit, measured *now* (a detached
+    ``git worktree`` run in a subprocess) — an A/B baseline from the same
+    host-load phase as the current-tree measurement, which is the only
+    comparison that survives this host's 2-3x multi-minute load swings.
+    Baseline ref: HEAD when the working tree is dirty (uncommitted changes
+    vs the last commit), HEAD~1 when clean (CI on a fresh checkout: the
+    last commit vs its parent — comparing a clean tree to its own HEAD
+    would be vacuous). None when unavailable (no git, single-commit repo,
+    detached environments)."""
+    wt = tempfile.mkdtemp(prefix="bench_head_")
+    try:
+        # -uno: only TRACKED modifications make the tree "dirty" — a stray
+        # untracked artifact on a CI checkout must not flip the baseline to
+        # HEAD (comparing identical code to itself, a vacuous guard)
+        dirty = subprocess.run(["git", "status", "--porcelain", "-uno"],
+                               cwd=_REPO_ROOT, check=True,
+                               capture_output=True, text=True,
+                               timeout=60).stdout.strip()
+        ref = "HEAD" if dirty else "HEAD~1"
+        print(f"guard,ab_ref,{ref}")
+        subprocess.run(["git", "worktree", "add", "--detach", wt, ref],
+                       cwd=_REPO_ROOT, check=True, capture_output=True,
+                       timeout=120)
+        code = ("import sys, json; "
+                f"sys.path.insert(0, {wt!r}); "
+                f"sys.path.insert(0, {wt + '/src'!r}); "
+                "from benchmarks import bench_ingest_throughput as b; "
+                "print(json.dumps(b.main(n=2_000)))")
+        out = subprocess.run([sys.executable, "-c", code], check=True,
+                             capture_output=True, text=True, timeout=600)
+        rows = json.loads(out.stdout.strip().splitlines()[-1])
+        return {r["name"]: r for r in rows}
+    except Exception as e:   # noqa: BLE001 — guard falls back to snapshot
+        print(f"guard,ab_baseline_unavailable,{type(e).__name__}")
+        return None
+    finally:
+        subprocess.run(["git", "worktree", "remove", "--force", wt],
+                       cwd=_REPO_ROOT, capture_output=True)
+
+
+def guard_ingest(ingest_rows, baseline: dict,
+                 ratio: float = GUARD_RATIO,
+                 load_scale: float = 1.0) -> list[str]:
+    """Names of quick-run ingest variants regressed below ``ratio`` x
+    ``baseline`` (``{name: {records_per_sec, records_per_cpu_sec?}}``). A
+    variant counts as regressed only when BOTH rates are under the floor:
+    the wall-clock rate (scaled by ``load_scale`` <= 1 when the host is
+    measurably slower than at baseline time — see :func:`calibrate`) AND
+    the cpu-time rate (records per cpu-second, immune to cpu starvation;
+    skipped when the baseline predates it). A code regression does more
+    work per record and depresses both; host noise rarely depresses both
+    at once."""
+    wall_floor = ratio * min(1.0, load_scale)
+    out = []
+    for r in ingest_rows:
+        base = baseline.get(r["name"])
+        if not base:
+            continue
+        wall_bad = r["records_per_sec"] \
+            < wall_floor * base["records_per_sec"]
+        cpu_base = base.get("records_per_cpu_sec")
+        cpu_bad = (cpu_base is None
+                   or r["records_per_cpu_sec"] < ratio * cpu_base)
+        if wall_bad and cpu_bad:
+            out.append(r["name"])
+    return out
+
+
 def main(quick: bool = False) -> None:
     print("bench,metric,value")
+    failures: list[str] = []
     if quick:
         # CI-sized smoke pass: same scenarios, ~10x smaller inputs. Does NOT
         # rewrite BENCH_ingest.json — the perf trajectory is full-run only.
+        head_baseline = measure_head_quick()    # same-load-phase A/B side
         ingest_rows = bench_ingest_throughput.main(n=2_000)
         emit(ingest_rows)
+        scale = 1.0
+        if head_baseline is not None:
+            baseline = head_baseline
+            print("guard,baseline,head-worktree-A/B")
+        else:
+            # fallback: the snapshot's quick baseline, de-noised by the
+            # calibration probe (a cross-load-phase comparison — weaker)
+            snap = json.loads(SNAPSHOT_PATH.read_text()) \
+                if SNAPSHOT_PATH.exists() else {}
+            baseline = snap.get("bench_ingest_quick", {})
+            cal_then = snap.get("calibration_ops_per_sec")
+            if cal_then:
+                scale = calibrate() / cal_then
+                print(f"calibration,load_scale,{scale:.3f}")
+            print("guard,baseline,snapshot")
+        slow = guard_ingest(ingest_rows, baseline, load_scale=scale)
+        if slow:
+            # residual noise: re-measure only the laggards once and keep
+            # the best of each rate before declaring a regression
+            retry = {r["name"]: r
+                     for r in bench_ingest_throughput.main(n=2_000,
+                                                           only=slow)}
+            emit([dict(retry[n], name=f"{n}_retry") for n in slow])
+            best = [r if r["name"] not in retry
+                    else dict(r, **{k: max(r[k], retry[r["name"]][k])
+                                    for k in ("records_per_sec",
+                                              "records_per_cpu_sec")})
+                    for r in ingest_rows]
+            failures += [f"ingest_guard:{n}"
+                         for n in guard_ingest(best, baseline,
+                                               load_scale=scale)]
+        recovery_rows = bench_recovery.main(n_records=5_000, n_flow=1_500)
+        emit(recovery_rows)
+        acq_rows = bench_acquisition.main(n_rss=1_200, n_fire=800, n_ws=400)
+        emit(acq_rows)
         emit(bench_backpressure.main(produced=5_000))
-        emit(bench_recovery.main(n_records=5_000, n_flow=1_500))
         emit(bench_loader.main(n_docs=2_000))
+        failures += check_acceptance(recovery_rows + acq_rows)
         print("snapshot,skipped,--quick")
+        if failures:
+            print(f"guard,FAILED,{';'.join(failures)}")
+            sys.exit(1)
+        print(f"guard,ok,ratio={GUARD_RATIO}")
     else:
         ingest_rows = bench_ingest_throughput.main()
         emit(ingest_rows)
+        # quick-sized baseline for the CI guard: per-METRIC min of two
+        # passes — a conservative floor on each rate independently, so
+        # host-load swings at snapshot time don't arm a hair-trigger guard
+        # on either metric
+        qa = {r["name"]: r for r in bench_ingest_throughput.main(n=2_000)}
+        qb = {r["name"]: r for r in bench_ingest_throughput.main(n=2_000)}
+        quick_ingest_rows = [
+            dict(qa[n], **{k: min(qa[n][k], qb[n][k])
+                           for k in ("records_per_sec",
+                                     "records_per_cpu_sec")})
+            for n in qa]
+        calibration = calibrate()
         emit(bench_backpressure.main())
-        emit(bench_recovery.main())
+        recovery_rows = bench_recovery.main()
+        emit(recovery_rows)
+        acq_rows = bench_acquisition.main()
+        emit(acq_rows)
         loader_rows = bench_loader.main()
         emit(loader_rows)
-        write_snapshot(ingest_rows, loader_rows)
+        # acceptance flags gate the full run too: a loss/watermark break
+        # must not silently refresh the perf trajectory
+        failures += check_acceptance(recovery_rows + acq_rows)
+        if failures:
+            print(f"guard,FAILED,{';'.join(failures)}")
+            print("snapshot,skipped,acceptance-failure")
+            sys.exit(1)
+        write_snapshot(ingest_rows, loader_rows, quick_ingest_rows,
+                       calibration)
         print(f"snapshot,written,{SNAPSHOT_PATH}")
     art = roofline.ART_DIR
     if art.exists():

@@ -4,8 +4,16 @@
 #   scripts/ci.sh -m 'not slow'   ... forwarding extra pytest args
 #
 # The bench smoke (`benchmarks/run.py --quick`) runs the same ingest /
-# backpressure / recovery / loader scenarios as the full run at ~10x
-# smaller inputs and does NOT rewrite BENCH_ingest.json.
+# backpressure / recovery / acquisition / loader scenarios as the full run
+# at ~10x smaller inputs and does NOT rewrite BENCH_ingest.json. It FAILS
+# (non-zero exit) when a quick ingest variant regresses below 0.8x an
+# A/B baseline (the same quick pass run from a git worktree of HEAD — or
+# HEAD~1 on a clean checkout — in the same host-load phase; snapshot +
+# calibration fallback without git)
+# on BOTH wall-clock and cpu-time rates (one re-measure absorbs residual
+# noise), or when an acceptance flag breaks in the recovery /
+# flapping-connector acquisition scenarios (record loss, watermark
+# regression, unbounded duplicates).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,7 +22,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 pytest =="
 python -m pytest -q "$@"
 
-echo "== bench smoke (--quick) =="
+echo "== bench smoke + acquisition/ingest guards (--quick) =="
 python benchmarks/run.py --quick
 
 echo "== ci.sh: OK =="

@@ -3,7 +3,10 @@ management framework for data-stream ingestion (Isah & Zulkernine, 2018),
 re-implemented as a JAX-cluster-native library.
 
 Layers (paper Fig. 1):
-  acquisition   — Source processors over replayable generators (sources.py)
+  acquisition   — Source processors over replayable generators (sources.py),
+                  or live: SourceConnector poll loops with reconnect backoff,
+                  checkpointed cursors and event-time watermarks
+                  (acquisition.py + watermark.py)
   extract/enrich/integrate — processors.py (dedup, filter, route, enrich, merge)
   distribution  — LogStore (pluggable durable pub-sub: single-host
                   PartitionedLog or N-replica ReplicatedLog) + ConsumerGroup
@@ -48,9 +51,12 @@ Deterministic fault injection (faults.py) drives the tests and
 
 Sites built into the runtime: ``proc.<name>`` (every trigger, ctx carries the
 batch), ``log.segment.append_batch`` (before each chunk ``write``),
-``delivery.producer.drain``, ``delivery.consumer.poll``, and the replication
+``delivery.producer.drain``, ``delivery.consumer.poll``, the replication
 sites ``replica.leader`` / ``replica.ship`` (before each leader-store append
-/ follower range-ship — arm them to exercise deterministic failover).
+/ follower range-ship — arm them to exercise deterministic failover), and
+the acquisition sites ``acquire.connect`` / ``acquire.poll`` (before each
+connector session open / poll — arm them to flap live sources and exercise
+reconnect, redelivery, and checkpointed resume).
 Actions: ``"raise"`` / ``"delay"`` / ``"crash"`` (``os._exit``) or any
 callable, on an ``nth``/``every`` call schedule.
 
@@ -61,6 +67,10 @@ programs against the :class:`LogStore` interface (logstore.py).
 follower segment shipping, ``acks="leader"|"all"`` durability levels, and
 epoch-fenced failover.
 """
+from .acquisition import (AcquisitionError, AcquisitionRuntime,
+                          ConnectorError, ConnectorPolicy, EndOfStream,
+                          SimulatedEndpoint, SourceConnector,
+                          default_event_ts)
 from .connection import (BackpressureTimeout, Connection, DurableConnection,
                          RateThrottle,
                          DEFAULT_OBJECT_THRESHOLD, DEFAULT_SIZE_THRESHOLD)
@@ -82,24 +92,28 @@ from .processors import (BloomFilter, CollectSink, ContentFilter,
 from .provenance import ProvenanceEvent, ProvenanceRepository
 from .sources import (FirehoseSource, RssAggregatorSource, WebSocketSource,
                       corpus_documents, synth_article)
+from .watermark import LowWatermarkClock, WatermarkTracker
 
 __all__ = [
+    "AcquisitionError", "AcquisitionRuntime",
     "BackpressureTimeout", "BloomFilter", "CollectSink", "Connection",
+    "ConnectorError", "ConnectorPolicy",
     "ConsumerGroup", "Consumer", "ContentFilter", "CorruptRecord",
     "DEFAULT_OBJECT_THRESHOLD", "DEFAULT_SIZE_THRESHOLD", "DeadLetterQueue",
-    "DetectDuplicate", "DurableConnection",
+    "DetectDuplicate", "DurableConnection", "EndOfStream",
     "ExecuteScript", "FaultInjector", "FileSink", "FirehoseSource",
     "FlowError", "FlowFile",
     "FlowGraph", "INJECTOR", "InjectedFault", "LogRecord", "LogStore",
-    "LookupEnrich",
+    "LookupEnrich", "LowWatermarkClock",
     "MergeContent", "OffsetStore",
     "PartitionRecords", "PartitionedLog", "Processor", "Producer",
     "ProvenanceEvent",
     "ProvenanceRepository", "PublishToLog", "RateThrottle", "REL_DROP",
     "REL_FAILURE", "REL_SUCCESS", "ReplicatedLog", "ReplicationError",
     "RestartPolicy", "RouteOnAttribute",
-    "RssAggregatorSource",
-    "Source", "StaleEpoch", "StaleGeneration", "Throttle", "WebSocketSource",
-    "corpus_documents", "make_flowfile", "range_assign", "route_partition",
-    "synth_article",
+    "RssAggregatorSource", "SimulatedEndpoint", "Source", "SourceConnector",
+    "StaleEpoch", "StaleGeneration", "Throttle", "WatermarkTracker",
+    "WebSocketSource",
+    "corpus_documents", "default_event_ts", "make_flowfile", "range_assign",
+    "route_partition", "synth_article",
 ]

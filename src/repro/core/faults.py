@@ -19,6 +19,15 @@ Built-in sites (fired by the library itself):
                                leader mid-ingest and exercise failover
   ``replica.ship``             before each follower range-ship, ``ctx:
                                topic, partition, replica, offset``
+  ``acquire.connect``          before each connector session open in the
+                               acquisition runtime, ``ctx: connector,
+                               cursor`` — arm ``"raise"`` to keep an
+                               endpoint unreachable, ``"delay"`` to slow
+                               connects
+  ``acquire.poll``             before each connector poll, ``ctx:
+                               connector, cursor`` — ``"raise"`` drops the
+                               session mid-stream (reconnect + redelivery),
+                               ``"delay"`` stalls the feed
 
 Schedules: ``arm(site, action, nth=N)`` fires on the Nth call only;
 ``arm(site, action, nth=N, every=M)`` fires on call N, N+M, N+2M, ...

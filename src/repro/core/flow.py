@@ -20,6 +20,7 @@ from .connection import Connection, DurableConnection
 from .flowfile import FlowFile
 
 if TYPE_CHECKING:
+    from .acquisition import AcquisitionRuntime
     from .logstore import LogStore
 from .processor import FlowNode, Processor, RestartPolicy, Source, _Worker
 from .provenance import ProvenanceRepository
@@ -27,6 +28,38 @@ from .provenance import ProvenanceRepository
 
 class FlowError(RuntimeError):
     pass
+
+
+class _ExternalUpstream:
+    """Sentinel upstream for records admitted from outside the graph (a live
+    connector's poll loop). Quacks like a FlowNode for the one thing the
+    termination check reads — ``done`` — so the destination worker keeps
+    draining until the external producer declares end-of-stream."""
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.done = threading.Event()
+
+
+class IngressHandle:
+    """Write side of an external admission point (see
+    :meth:`FlowGraph.add_ingress`). The producer offers FlowFiles into
+    ``connection`` (``offer_batch`` — blocking there IS the backpressure)
+    and calls :meth:`complete` exactly once when its stream is finished, so
+    the destination worker can drain and terminate."""
+
+    def __init__(self, name: str, connection: Connection,
+                 upstream: _ExternalUpstream) -> None:
+        self.name = name
+        self.connection = connection
+        self._upstream = upstream
+
+    def complete(self) -> None:
+        self._upstream.done.set()
+
+    @property
+    def completed(self) -> bool:
+        return self._upstream.done.is_set()
 
 
 class FlowGraph:
@@ -42,6 +75,10 @@ class FlowGraph:
         self._lock = threading.Lock()
         self._dlq_conn: Connection | None = None
         self._dlq_node: FlowNode | None = None
+        self._ingresses: list[IngressHandle] = []
+        #: live-source runtime feeding this graph (set by AcquisitionRuntime;
+        #: surfaces per-connector stats through status())
+        self.acquisition: "AcquisitionRuntime | None" = None
 
     # -- assembly -------------------------------------------------------------
     def add(self, processor: Processor,
@@ -101,6 +138,52 @@ class FlowGraph:
         src_node.outputs.setdefault(relationship, []).append(conn)
         dst_node.upstreams.append(src_node)
         return conn
+
+    def add_ingress(self, dst: Processor | str, *,
+                    name: str | None = None,
+                    object_threshold: int | None = None,
+                    size_threshold: int | None = None,
+                    max_retries: int | None = None,
+                    retry_penalty_sec: float | None = None,
+                    durable: "Optional[LogStore]" = None) -> IngressHandle:
+        """Open an external admission point into ``dst``'s input connection —
+        how live acquisition (``core/acquisition.py``) feeds the graph
+        without being a thread-per-Source processor. Creates the connection
+        when ``dst`` has none yet (same queue knobs as :meth:`connect`,
+        including ``durable`` WAL backing); later calls — or a mix of
+        ingresses and ordinary upstream connections — fan into the same
+        queue. Each call returns its own handle: the destination terminates
+        only after *every* handle completed, every graph upstream finished,
+        and the queue drained."""
+        dst_name = dst if isinstance(dst, str) else dst.name
+        if dst_name not in self.nodes:
+            raise FlowError("add_ingress() before add()")
+        dst_node = self.nodes[dst_name]
+        if isinstance(dst_node.processor, Source):
+            raise FlowError(f"{dst_name} is a source; cannot be a destination")
+        if dst_node.input is None:
+            kwargs = {}
+            if object_threshold is not None:
+                kwargs["object_threshold"] = object_threshold
+            if size_threshold is not None:
+                kwargs["size_threshold"] = size_threshold
+            if max_retries is not None:
+                kwargs["max_retries"] = max_retries
+            if retry_penalty_sec is not None:
+                kwargs["retry_penalty_sec"] = retry_penalty_sec
+            conn_name = f"__ingress__->{dst_name}"
+            if durable is not None:
+                conn = DurableConnection(conn_name, durable, **kwargs)
+            else:
+                conn = Connection(conn_name, **kwargs)
+            dst_node.input = conn
+            self.connections.append(conn)
+        ingress_name = name or f"ingress-{len(self._ingresses)}->{dst_name}"
+        upstream = _ExternalUpstream(ingress_name)
+        dst_node.upstreams.append(upstream)
+        handle = IngressHandle(ingress_name, dst_node.input, upstream)
+        self._ingresses.append(handle)
+        return handle
 
     def route_dead_letters_to(self, dlq: Processor | str,
                               object_threshold: int | None = None) -> Connection:
@@ -172,12 +255,15 @@ class FlowGraph:
         """Start, wait for all sources to exhaust and queues to drain."""
         self.start()
         self.join(timeout=timeout)
-        alive = [w.name for w in self._workers if w.is_alive()]
+        alive = self.alive_workers()
         if alive:
             self.stopping.set()
             raise FlowError(f"flow did not complete; alive: {alive}")
 
     # -- observability ------------------------------------------------------------
+    def alive_workers(self) -> list[str]:
+        """Names of worker threads still running (empty once drained)."""
+        return [w.name for w in self._workers if w.is_alive()]
     def status(self) -> dict:
         procs = {}
         for n, fn in self.nodes.items():
@@ -185,10 +271,13 @@ class FlowGraph:
             snap["state"] = fn.state
             snap["pending_retries"] = len(fn.pending_retries)
             procs[n] = snap
-        return {
+        out = {
             "processors": procs,
             "connections": [c.snapshot() for c in self.connections],
             "provenance_counts": self.provenance.counts(),
             "failed": sorted(n for n, fn in self.nodes.items()
                              if fn.state == "FAILED"),
         }
+        if self.acquisition is not None:
+            out["acquisition"] = self.acquisition.status()
+        return out

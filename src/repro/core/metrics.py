@@ -20,6 +20,15 @@ class ComponentStats:
     restarts: int = 0
     retries: int = 0
     dead_lettered: int = 0
+    # acquisition gauges/counters (live connectors; see core/acquisition.py).
+    # ``lag`` is records the endpoint still holds beyond our cursor (None
+    # when the endpoint cannot say); ``watermark`` is the connector's current
+    # event-time watermark (None before the first record).
+    reconnects: int = 0
+    late_records: int = 0
+    duplicates: int = 0
+    lag: int | None = None
+    watermark: float | None = None
 
     def snapshot(self) -> dict:
         return {
@@ -29,6 +38,9 @@ class ComponentStats:
             "dropped": self.dropped,
             "restarts": self.restarts, "retries": self.retries,
             "dead_lettered": self.dead_lettered,
+            "reconnects": self.reconnects, "late_records": self.late_records,
+            "duplicates": self.duplicates,
+            "lag": self.lag, "watermark": self.watermark,
         }
 
 

@@ -435,7 +435,8 @@ class DeadLetterQueue(Processor):
         self.log.drop_segments_below(st, 0, prev_end)
 
     def redrive(self, flow, *, dest: "Processor | str | None" = None,
-                batch_records: int = 512) -> dict:
+                batch_records: int = 512,
+                stall_timeout: float = 30.0) -> dict:
         """Offer quarantined records back into ``flow`` (closing the manual
         ``replay()`` loop): each record goes to the input connection of the
         processor that dead-lettered it (``dead.letter.source``), or to
@@ -448,7 +449,10 @@ class DeadLetterQueue(Processor):
         offered downstream before the next is read, with backpressure felt
         immediately. At-least-once: a failure mid-redrive leaves the state
         unsaved, so everything scanned this pass stays redrivable (records
-        already offered may be duplicated on the retry)."""
+        already offered may be duplicated on the retry). A destination
+        connection that stays full for ``stall_timeout`` seconds without
+        accepting anything (flow not running, threshold too small) raises
+        instead of hanging the redrive forever."""
         dest_name = dest if isinstance(dest, (str, type(None))) else dest.name
         if dest_name is not None and (
                 dest_name not in flow.nodes
@@ -492,32 +496,33 @@ class DeadLetterQueue(Processor):
                     seen_fps.add(fp)
                     redriven += 1
                 for target, ffs in by_target.items():
-                    self._offer_redriven(flow, target, ffs)
+                    self._offer_redriven(flow, target, ffs, stall_timeout)
                 off = recs[-1].offset + 1
             frontier[p] = off
         self._save_redrive_state(frontier, seen_fps)
         return {"redriven": redriven, "skipped_poison": skipped,
                 "unroutable": unroutable}
 
-    def _offer_redriven(self, flow, target: str,
-                        ffs: "list[FlowFile]") -> None:
+    def _offer_redriven(self, flow, target: str, ffs: "list[FlowFile]",
+                        stall_timeout: float) -> None:
         conn = flow.nodes[target].input
         flow.provenance.record_batch("REPLAY", ffs, self.name,
                                      details=f"redrive->{target}")
         offered = 0
-        stalled = 0
+        stalled = 0.0
+        wait = min(1.0, max(stall_timeout, 0.01))
         while offered < len(ffs):
-            n = conn.offer_batch(ffs[offered:], block=True, timeout=1.0)
+            n = conn.offer_batch(ffs[offered:], block=True, timeout=wait)
             offered += n
             # a full connection that nothing drains (flow not running,
             # threshold too small) must not hang the redrive forever —
             # bail out WITHOUT saving state (see redrive docstring)
-            stalled = 0 if n else stalled + 1
-            if stalled >= 30:
+            stalled = 0.0 if n else stalled + wait
+            if offered < len(ffs) and stalled >= stall_timeout:
                 raise RuntimeError(
                     f"redrive stalled: connection {conn.name!r} stayed "
-                    f"full for 30s ({len(ffs) - offered} records "
-                    "unoffered); is the flow running?")
+                    f"full for {stall_timeout:g}s ({len(ffs) - offered} "
+                    "records unoffered); is the flow running?")
 
 
 class FileSink(Processor):

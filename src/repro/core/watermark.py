@@ -1,0 +1,123 @@
+"""Event-time watermarks for the acquisition runtime (paper §II/III: multi-
+source acquisition must absorb out-of-order, late-arriving data instead of
+silently merging it — the AlertMix observation).
+
+A :class:`WatermarkTracker` follows one connector's event-time stream under a
+*bounded out-of-orderness* assumption: after seeing a record with event time
+``t``, no record older than ``t - lateness`` is expected. The watermark is
+``max_event_ts - lateness`` and is **monotonic** — it never regresses, even
+when an at-least-once endpoint redelivers an old suffix after a reconnect.
+Records that arrive behind the watermark are *late*; the acquisition runtime
+routes them to a dedicated late destination (NiFi would route to a ``late``
+relationship) rather than merging them into the on-time stream.
+
+A :class:`LowWatermarkClock` aggregates several trackers into the fabric-wide
+event-time clock: the minimum watermark across all *active* connectors. The
+aggregate is conservative — it stays unknown (``None``) until every active
+connector has reported at least one record, and a finished connector leaves
+the minimum (its stream can produce nothing older). Both properties keep the
+aggregate monotonic, which is what downstream consumers (window closes,
+trigger firings) rely on.
+
+Both classes are thread-safe: each tracker is written by one poll loop but
+read by status/aggregation calls on other threads.
+"""
+from __future__ import annotations
+
+import threading
+
+__all__ = ["WatermarkTracker", "LowWatermarkClock"]
+
+
+class WatermarkTracker:
+    """Monotonic bounded-out-of-orderness watermark for one event-time
+    stream. ``observe(ts)`` returns ``True`` when the record is *late*
+    (behind the watermark as of before the observation)."""
+
+    def __init__(self, lateness: float = 0.0,
+                 initial: float | None = None) -> None:
+        if lateness < 0:
+            raise ValueError("lateness must be non-negative")
+        self.lateness = lateness
+        self._lock = threading.Lock()
+        self._max_ts: float | None = None
+        # seeding (from a checkpoint) keeps the watermark monotonic across a
+        # crash/restart: redelivered records are judged against the pre-crash
+        # clock instead of resetting it
+        self._watermark: float | None = initial
+        self.observed = 0
+        self.late = 0
+
+    def observe(self, ts: float) -> bool:
+        with self._lock:
+            self.observed += 1
+            late = self._watermark is not None and ts < self._watermark
+            if late:
+                self.late += 1
+            else:
+                if self._max_ts is None or ts > self._max_ts:
+                    self._max_ts = ts
+                    wm = ts - self.lateness
+                    if self._watermark is None or wm > self._watermark:
+                        self._watermark = wm
+            return late
+
+    @property
+    def watermark(self) -> float | None:
+        with self._lock:
+            return self._watermark
+
+    @property
+    def max_event_ts(self) -> float | None:
+        with self._lock:
+            return self._max_ts
+
+
+class LowWatermarkClock:
+    """Fabric-wide event-time clock: the minimum watermark over all active
+    (registered, unfinished) trackers. ``None`` until every active tracker
+    has a watermark — a conservative unknown, never a regression."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._trackers: dict[str, WatermarkTracker] = {}
+        self._finished: set[str] = set()
+
+    def register(self, name: str, lateness: float = 0.0,
+                 initial: float | None = None) -> WatermarkTracker:
+        with self._lock:
+            if name in self._trackers:
+                raise ValueError(f"tracker {name!r} already registered")
+            t = WatermarkTracker(lateness, initial=initial)
+            self._trackers[name] = t
+            return t
+
+    def mark_finished(self, name: str) -> None:
+        """A finished stream can emit nothing more: it leaves the minimum
+        (equivalently, its watermark jumps to +inf)."""
+        with self._lock:
+            self._finished.add(name)
+
+    def current(self) -> float | None:
+        with self._lock:
+            active = [t for n, t in self._trackers.items()
+                      if n not in self._finished]
+            if not active:
+                # every stream finished: the clock is the largest final
+                # watermark (nothing older can ever arrive)
+                finals = [t.watermark for t in self._trackers.values()
+                          if t.watermark is not None]
+                return max(finals) if finals else None
+        wms = [t.watermark for t in active]
+        if any(w is None for w in wms):
+            return None
+        return min(wms)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            names = list(self._trackers)
+        return {
+            "low_watermark": self.current(),
+            "per_source": {n: self._trackers[n].watermark for n in names},
+            "finished": sorted(self._finished),
+        }

@@ -15,6 +15,8 @@ from ..core import (ConsumerGroup, DeadLetterQueue, DetectDuplicate,
                     RestartPolicy, RouteOnAttribute,
                     RssAggregatorSource, FirehoseSource, Source,
                     WebSocketSource)
+from ..core.acquisition import (AcquisitionRuntime, ConnectorPolicy,
+                                SimulatedEndpoint)
 from ..core.delivery import Consumer
 from .loader import StreamingDataLoader
 
@@ -37,7 +39,11 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
                         durable: bool = False,
                         poison_rate: float = 0.0,
                         replicas: int = 1,
-                        acks: str = "all"
+                        acks: str = "all",
+                        live: bool = False,
+                        live_policy: ConnectorPolicy | None = None,
+                        ooo_window: int = 4,
+                        redelivery: int = 4
                         ) -> tuple[FlowGraph, LogStore]:
     """The paper §IV case study: returns (flow, log) with topic ``articles``
     (clean, deduped, enriched news) and topic ``events`` (websocket feed).
@@ -52,7 +58,19 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
     ``replicas``/``acks`` land everything (topics, WAL, quarantine) in an
     N-replica ``ReplicatedLog`` instead of the single-host store, so the
     landed stream survives replica loss (``replicas=1`` keeps the
-    single-store hot path)."""
+    single-store hot path).
+
+    ``live=True`` replaces the synchronous in-process ``Source`` processors
+    with an :class:`AcquisitionRuntime` (``flow.acquisition``) driving three
+    :class:`SimulatedEndpoint` connectors — RSS and firehose into the
+    parser, websocket into the events sink — with reconnect-with-backoff,
+    cursor checkpoints in the log (topic ``__acq__.news``; rebuilding over
+    the same ``root`` resumes), bounded out-of-order delivery
+    (``ooo_window``), reconnect redelivery (``redelivery``), and per-
+    connector watermarks; late records land in topic ``late`` via a
+    dedicated sink. Run a live flow with
+    ``flow.acquisition.run_with_flow(timeout)`` instead of
+    ``flow.run_to_completion``."""
     root = Path(root)
     log: LogStore
     if replicas > 1:
@@ -69,12 +87,13 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
     if durable:
         conn_kw["durable"] = log
     add_kw = {"restart_policy": restart_policy} if restart_policy else {}
-    rss = g.add(Source("big-rss", RssAggregatorSource(
-        n_rss, seed=seed, poison_rate=poison_rate)), **add_kw)
-    fire = g.add(Source("twitter", FirehoseSource(n_firehose, seed=seed + 1)),
-                 **add_kw)
-    ws = g.add(Source("websocket", WebSocketSource(n_ws, seed=seed + 2)),
-               **add_kw)
+    rss_gen = RssAggregatorSource(n_rss, seed=seed, poison_rate=poison_rate)
+    fire_gen = FirehoseSource(n_firehose, seed=seed + 1)
+    ws_gen = WebSocketSource(n_ws, seed=seed + 2)
+    if not live:
+        rss = g.add(Source("big-rss", rss_gen), **add_kw)
+        fire = g.add(Source("twitter", fire_gen), **add_kw)
+        ws = g.add(Source("websocket", ws_gen), **add_kw)
 
     def parse(ff):
         try:
@@ -108,9 +127,38 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
                          **add_kw)
     pub_events = g.add(PublishToLog("pub-events", log, "events"), **add_kw)
 
-    g.connect(rss, "success", parser, **conn_kw)
-    g.connect(fire, "success", parser)
-    g.connect(ws, "success", pub_events, **conn_kw)
+    if not live:
+        g.connect(rss, "success", parser, **conn_kw)
+        g.connect(fire, "success", parser)
+        g.connect(ws, "success", pub_events, **conn_kw)
+    else:
+        # live acquisition: endpoints behind reconnecting poll loops feed
+        # the same interior topology through ingress queues; late records
+        # get their own landing topic instead of merging silently
+        log.create_topic("late", partitions=1)
+        pub_late = g.add(PublishToLog("pub-late", log, "late"), **add_kw)
+        rt = AcquisitionRuntime(g, log, name="news")
+        pol = live_policy or ConnectorPolicy(
+            restart=RestartPolicy(max_restarts=1_000,
+                                  backoff_base_sec=0.002,
+                                  backoff_cap_sec=0.05),
+            checkpoint_every_records=256,
+            lateness_sec=4.0 * max(ooo_window, redelivery, 1))
+        ingress_kw = {"durable": log} if durable else {}
+        if max_retries:
+            ingress_kw["max_retries"] = max_retries
+        for ep, dest in (
+                (SimulatedEndpoint("big-rss", rss_gen, total=n_rss,
+                                   ooo_window=ooo_window,
+                                   redelivery=redelivery), parser),
+                (SimulatedEndpoint("twitter", fire_gen, total=n_firehose,
+                                   ooo_window=ooo_window,
+                                   redelivery=redelivery), parser),
+                (SimulatedEndpoint("websocket", ws_gen, total=n_ws,
+                                   ooo_window=ooo_window,
+                                   redelivery=redelivery), pub_events)):
+            rt.add_connector(ep, dest, policy=pol, late_dest=pub_late,
+                             **ingress_kw)
     g.connect(parser, "success", dedup, **conn_kw)
     g.connect(dedup, "unique", enrich, **conn_kw)
     g.connect(enrich, "success", route, **conn_kw)

@@ -1,0 +1,428 @@
+"""Live acquisition runtime: connector contract, reconnecting poll loops
+with fault-injected flapping, checkpointed resume over the durable log, and
+event-time watermarks (per-connector + fabric-wide low watermark)."""
+import itertools
+import json
+import time
+
+import pytest
+
+from repro.core import (AcquisitionError, AcquisitionRuntime, CollectSink,
+                        ConnectorError, ConnectorPolicy, EndOfStream,
+                        ExecuteScript, FlowError, FlowGraph, LowWatermarkClock,
+                        PartitionedLog, RestartPolicy, SimulatedEndpoint,
+                        Source, SourceConnector, WatermarkTracker,
+                        make_flowfile)
+from repro.core.faults import INJECTOR
+from repro.core.sources import WebSocketSource
+from repro.data.pipeline import build_news_pipeline, expected_clean_doc_ids
+
+FAST = ConnectorPolicy(
+    restart=RestartPolicy(max_restarts=100, backoff_base_sec=0.001,
+                          backoff_cap_sec=0.01),
+    max_poll_records=16, poll_interval_sec=0.001,
+    checkpoint_every_records=32, lateness_sec=8.0)
+
+
+# ---------------------------------------------------------------------------
+# watermarks
+# ---------------------------------------------------------------------------
+def test_watermark_monotonic_and_late_detection():
+    t = WatermarkTracker(lateness=5.0)
+    assert t.watermark is None
+    assert t.observe(100.0) is False
+    assert t.watermark == 95.0
+    # within the lateness bound: on-time, watermark holds
+    assert t.observe(96.0) is False
+    assert t.watermark == 95.0
+    # behind the watermark: late, and the watermark never regresses
+    assert t.observe(90.0) is True
+    assert t.watermark == 95.0 and t.late == 1
+    assert t.observe(200.0) is False
+    assert t.watermark == 195.0
+
+
+def test_watermark_seeded_from_checkpoint():
+    t = WatermarkTracker(lateness=5.0, initial=95.0)
+    assert t.watermark == 95.0
+    assert t.observe(90.0) is True          # judged against the seeded clock
+    assert t.observe(96.0) is False
+    assert t.watermark == 95.0              # 96-5 < 95: held, not regressed
+
+
+def test_low_watermark_clock_aggregation():
+    clock = LowWatermarkClock()
+    a = clock.register("a", lateness=0.0)
+    b = clock.register("b", lateness=0.0)
+    assert clock.current() is None          # unknown until every source reports
+    a.observe(100.0)
+    assert clock.current() is None
+    b.observe(50.0)
+    assert clock.current() == 50.0          # min across active
+    b.observe(120.0)
+    assert clock.current() == 100.0
+    clock.mark_finished("a")                # finished stream leaves the min
+    assert clock.current() == 120.0
+    clock.mark_finished("b")
+    assert clock.current() == 120.0         # all done: largest final
+    with pytest.raises(ValueError):
+        clock.register("a")
+
+
+# ---------------------------------------------------------------------------
+# simulated endpoint (network-like, deterministic)
+# ---------------------------------------------------------------------------
+def _drain(ep, n=64):
+    out = []
+    with pytest.raises(EndOfStream):
+        while True:
+            out.extend(ep.poll(n))
+    return out
+
+
+def test_endpoint_in_order_matches_canonical_stream():
+    ep = SimulatedEndpoint("ws", WebSocketSource(30), total=30)
+    ep.connect(None)
+    got = _drain(ep)
+    want = list(WebSocketSource(30)())
+    assert [f.content for f in got] == [f.content for f in want]
+    # deterministic event time from the canonical index
+    assert [float(f.attributes["event.ts"]) for f in got] == \
+           [1_534_660_000.0 + i for i in range(30)]
+    assert ep.cursor() == "30" and ep.lag() == 0
+
+
+def test_endpoint_ooo_bounded_and_resumable():
+    mk = lambda: SimulatedEndpoint("ws", WebSocketSource(41), total=41,
+                                   ooo_window=5)
+    ep = mk()
+    ep.connect(None)
+    full = _drain(ep, 7)
+    canon = [f.content for f in WebSocketSource(41)()]
+    # same multiset, displacement bounded by the window
+    assert sorted(f.content for f in full) == sorted(canon)
+    for emit_idx, ff in enumerate(full):
+        assert abs(canon.index(ff.content) - emit_idx) < 5
+    # resume mid-stream replays the identical emission suffix (incl. the
+    # ragged final block) — the property checkpointed resume builds on
+    ep2 = mk()
+    ep2.connect("13")
+    assert [f.content for f in _drain(ep2, 3)] == \
+           [f.content for f in full[13:]]
+
+
+def test_endpoint_redelivery_window_and_ack_trim():
+    ep = SimulatedEndpoint("ws", WebSocketSource(50), total=50, redelivery=6)
+    ep.connect(None)
+    ep.poll(20)
+    assert ep.cursor() == "20"
+    # reconnect without ack: rewinds the full redelivery window
+    ep.connect(ep.cursor())
+    assert ep.cursor() == "14" and ep.redelivered() == 6
+    _ = ep.poll(6)
+    ep.ack("20")
+    # acked records are never redelivered, even inside the window
+    ep.connect("20")
+    assert ep.cursor() == "20" and ep.redelivered() == 6
+
+
+def test_endpoint_errors_and_empty_stream():
+    ep = SimulatedEndpoint("ws", WebSocketSource(5), total=5)
+    with pytest.raises(ConnectorError):
+        ep.poll(1)                           # not connected
+    ep.connect(None)
+    ep.poll(5)
+    with pytest.raises(EndOfStream):
+        ep.poll(1)
+    empty = SimulatedEndpoint("none", WebSocketSource(0), total=0)
+    empty.connect(None)
+    with pytest.raises(EndOfStream):
+        empty.poll(1)
+
+
+# ---------------------------------------------------------------------------
+# graph ingress (external admission)
+# ---------------------------------------------------------------------------
+def test_add_ingress_feeds_graph_and_gates_termination():
+    g = FlowGraph("ing")
+    sink = g.add(CollectSink("sink"))
+    h = g.add_ingress(sink, object_threshold=64)
+    g.start()
+    assert h.connection.offer_batch([make_flowfile(f"r{i}")
+                                     for i in range(10)]) == 10
+    time.sleep(0.1)
+    assert not g.nodes["sink"].done.is_set()   # held open by the ingress
+    h.complete()
+    g.join(timeout=10)
+    assert len(sink.items) == 10
+    assert g.status()["processors"]["sink"]["state"] == "COMPLETED"
+
+
+def test_add_ingress_validation():
+    g = FlowGraph("bad")
+    src = g.add(Source("src", lambda: iter(())))
+    with pytest.raises(FlowError):
+        g.add_ingress(src)                     # a source has no input
+    with pytest.raises(FlowError):
+        g.add_ingress("nope")                  # add_ingress before add
+
+
+def test_ingress_fans_in_with_graph_upstream():
+    g = FlowGraph("fan")
+    src = g.add(Source("src", lambda: (make_flowfile(f"s{i}")
+                                       for i in range(5))))
+    sink = g.add(CollectSink("sink"))
+    g.connect(src, "success", sink)
+    h = g.add_ingress(sink)
+    g.start()
+    h.connection.offer_batch([make_flowfile(f"x{i}") for i in range(5)])
+    h.complete()
+    g.join(timeout=10)
+    assert len(sink.items) == 10
+
+
+# ---------------------------------------------------------------------------
+# the runtime
+# ---------------------------------------------------------------------------
+def _runtime_flow(tmp_path, *, count=200, policy=FAST, late=True,
+                  durable=False, segment_bytes=None, **ep_kw):
+    log = (PartitionedLog(tmp_path / "log", segment_bytes=segment_bytes)
+           if segment_bytes else PartitionedLog(tmp_path / "log"))
+    g = FlowGraph("acq")
+    sink = g.add(CollectSink("sink"))
+    late_sink = g.add(CollectSink("late-sink")) if late else None
+    rt = AcquisitionRuntime(g, log, name="t")
+    ep = SimulatedEndpoint("ws", WebSocketSource(count), total=count, **ep_kw)
+    rt.add_connector(ep, sink, policy=policy, late_dest=late_sink,
+                     durable=log if durable else None)
+    return g, log, rt, sink, late_sink
+
+
+def test_runtime_happy_path_status_and_checkpoints(tmp_path):
+    g, log, rt, sink, _ = _runtime_flow(tmp_path, ooo_window=4)
+    rt.run_with_flow(timeout=60)
+    assert len(sink.items) == 200
+    st = g.status()["acquisition"]
+    ws = st["connectors"]["ws"]
+    assert ws["state"] == "COMPLETED" and ws["cursor"] == "200"
+    assert ws["in_records"] == 200 and ws["lag"] == 0
+    assert ws["watermark"] == st["low_watermark"] == \
+        1_534_660_000.0 + 199 - FAST.lateness_sec
+    # the final cursor is checkpointed through the log
+    *_, last = log.iter_records("__acq__.t", 0)
+    assert last.key == b"ws" and json.loads(last.value)["cursor"] == "200"
+    log.close()
+
+
+def test_runtime_survives_flapping_endpoint_zero_loss(tmp_path):
+    g, log, rt, sink, late_sink = _runtime_flow(
+        tmp_path, ooo_window=4, redelivery=4)
+    INJECTOR.arm("acquire.poll", "raise", nth=3, every=4)
+    rt.run_with_flow(timeout=120)
+    INJECTOR.reset()
+    ws = g.status()["acquisition"]["connectors"]["ws"]
+    assert ws["reconnects"] > 0 and ws["state"] == "COMPLETED"
+    # at-least-once: every record delivered, duplicates only from the
+    # endpoint's bounded redelivery window
+    contents = [f.content for f in sink.items + late_sink.items]
+    assert len(set(contents)) == 200
+    dups = len(contents) - 200
+    assert dups == ws["duplicates"] <= ws["reconnects"] * 4
+    log.close()
+
+
+def test_runtime_exhausted_reconnect_budget_fails_connector(tmp_path):
+    pol = ConnectorPolicy(
+        restart=RestartPolicy(max_restarts=2, backoff_base_sec=0.001),
+        max_poll_records=16)
+    g, log, rt, sink, _ = _runtime_flow(tmp_path, policy=pol, late=False)
+    INJECTOR.arm("acquire.connect", "raise", nth=1, every=1)  # never connects
+    g.start()
+    rt.start()
+    with pytest.raises(AcquisitionError):
+        rt.join(timeout=60)
+    INJECTOR.reset()
+    # the failed connector still completed its ingress: the graph drains
+    g.join(timeout=10)
+    st = g.status()["acquisition"]["connectors"]["ws"]
+    assert st["state"] == "FAILED" and len(sink.items) == 0
+    log.close()
+
+
+def test_runtime_late_records_routed_not_merged(tmp_path):
+    class Erratic(SourceConnector):
+        """Emits a record far behind the watermark once the clock moved."""
+        name = "erratic"
+        _ts = (100.0, 200.0, 130.0, 201.0)    # 130 < 200-8: late
+
+        def __init__(self):
+            self._i = 0
+
+        def connect(self, cursor):
+            self._i = int(cursor) if cursor else 0
+
+        def poll(self, max_records):
+            if self._i >= len(self._ts):
+                raise EndOfStream(self.name)
+            ts = self._ts[self._i]
+            self._i += 1
+            return [make_flowfile(f"r{self._i}", **{"event.ts": str(ts)})]
+
+        def cursor(self):
+            return str(self._i)
+
+        def ack(self, cursor):
+            pass
+
+        def close(self):
+            pass
+
+    log = PartitionedLog(tmp_path / "log")
+    g = FlowGraph("late")
+    sink = g.add(CollectSink("sink"))
+    late_sink = g.add(CollectSink("late-sink"))
+    rt = AcquisitionRuntime(g, log, name="t")
+    rt.add_connector(Erratic(), sink, policy=FAST, late_dest=late_sink)
+    rt.run_with_flow(timeout=60)
+    assert [f.content for f in late_sink.items] == [b"r3"]
+    assert late_sink.items[0].attributes["wm.late"] == "1"
+    assert float(late_sink.items[0].attributes["wm.watermark"]) == 192.0
+    assert len(sink.items) == 3
+    ws = g.status()["acquisition"]["connectors"]["erratic"]
+    assert ws["late_records"] == 1
+    log.close()
+
+
+def test_runtime_crash_resume_from_checkpointed_cursor(tmp_path):
+    """Abort mid-run (no final checkpoint, WAL-backed admission), rebuild
+    over the same store: the connector resumes from the last checkpointed
+    cursor, the WAL replays the un-acked suffix, nothing is lost and the
+    watermark never regresses below its checkpointed value."""
+    g, log, rt, sink, _ = _runtime_flow(tmp_path, count=400, late=False,
+                                        durable=True, ooo_window=4,
+                                        redelivery=4)
+    g.start()
+    rt.start()
+    while len(sink.items) < 150:
+        time.sleep(0.002)
+    rt.stop(abort=True)
+    g.stop()
+    seen_a = {f.content for f in sink.items}
+    log.close()
+
+    g2, log2, rt2, sink2, _ = _runtime_flow(tmp_path, count=400, late=False,
+                                            durable=True, ooo_window=4,
+                                            redelivery=4)
+    wm_seed = rt2.low_watermark()
+    assert wm_seed is not None               # seeded from the checkpoint
+    rt2.run_with_flow(timeout=120)
+    ws = g2.status()["acquisition"]["connectors"]["ws"]
+    assert ws["state"] == "COMPLETED" and ws["cursor"] == "400"
+    assert ws["watermark"] >= wm_seed        # monotone across the crash
+    canon = {f.content for f in WebSocketSource(400)()}
+    assert seen_a | {f.content for f in sink2.items} == canon
+    log2.close()
+
+
+def test_runtime_graceful_stop_checkpoints_cursor(tmp_path):
+    g, log, rt, sink, _ = _runtime_flow(tmp_path, count=100_000, late=False)
+    g.start()
+    rt.start()
+    while len(sink.items) < 500:
+        time.sleep(0.002)
+    rt.stop()                                 # graceful: checkpoint + drain
+    g.join(timeout=30)
+    ws = g.status()["acquisition"]["connectors"]["ws"]
+    assert ws["state"] == "STOPPED"
+    *_, last = log.iter_records("__acq__.t", 0)
+    assert json.loads(last.value)["cursor"] == ws["cursor"]
+    # everything the cursor covers was drained (a stop landing mid-batch
+    # may leave a partially-admitted suffix beyond the cursor — admitted
+    # records past it are the at-least-once overshoot, never a loss)
+    n = len(sink.items)
+    assert n >= int(ws["cursor"]) > 0
+    canon = itertools.islice(WebSocketSource(100_000)(), n)
+    assert [f.content for f in sink.items] == [f.content for f in canon]
+    log.close()
+
+
+def test_runtime_checkpoint_compaction_stays_bounded(tmp_path):
+    pol = ConnectorPolicy(
+        restart=FAST.restart, max_poll_records=8, poll_interval_sec=0.001,
+        checkpoint_every_records=8, lateness_sec=8.0)
+    g, log, rt, sink, _ = _runtime_flow(tmp_path, count=2_000, policy=pol,
+                                        late=False, segment_bytes=2_048)
+    rt.run_with_flow(timeout=120)
+    assert len(sink.items) == 2_000
+    # compaction rewrote the newest cursors and GC'd sealed segments below:
+    # the retained checkpoint range stays O(compact interval), not O(run)
+    begin = log.begin_offset("__acq__.t", 0)
+    end = log.end_offset("__acq__.t", 0)
+    assert begin > 0
+    assert end - begin < 2 * AcquisitionRuntime._COMPACT_EVERY
+    # the retained tail still holds the connector's newest cursor
+    *_, last = log.iter_records("__acq__.t", 0)
+    assert json.loads(last.value)["cursor"] == "2000"
+    log.close()
+
+
+def test_checkpoint_compaction_preserves_unregistered_connectors(tmp_path):
+    """Compaction must carry forward the saved cursor of a connector that is
+    NOT registered in the current incarnation (e.g. temporarily disabled) —
+    otherwise re-enabling it would restart its stream from record 0."""
+    def build(names_counts, ckpt_every=32):
+        log = PartitionedLog(tmp_path / "log", segment_bytes=2_048)
+        g = FlowGraph("c")
+        rt = AcquisitionRuntime(g, log, name="t")
+        pol = ConnectorPolicy(restart=FAST.restart, max_poll_records=8,
+                              poll_interval_sec=0.001,
+                              checkpoint_every_records=ckpt_every,
+                              lateness_sec=8.0)
+        for name, count in names_counts:
+            rt.add_connector(
+                SimulatedEndpoint(name, WebSocketSource(count), total=count),
+                g.add(CollectSink(f"sink-{name}")), policy=pol)
+        return g, log, rt
+
+    # incarnation A checkpoints both connectors
+    g, log, rt = build([("ws", 100), ("other", 60)])
+    rt.run_with_flow(timeout=60)
+    log.close()
+    # incarnation B runs only "ws", long enough to trigger compactions
+    # (>_COMPACT_EVERY checkpoint appends) that GC old sealed segments
+    g2, log2, rt2 = build([("ws", 3_000)], ckpt_every=8)
+    rt2.run_with_flow(timeout=120)
+    assert log2.begin_offset("__acq__.t", 0) > 0     # compaction GC'd
+    log2.close()
+    # incarnation C re-enables "other": its cursor survived the compactions
+    g3, log3, rt3 = build([("other", 60)])
+    rt3.run_with_flow(timeout=60)
+    st = g3.status()["acquisition"]["connectors"]["other"]
+    assert st["cursor"] == "60"
+    assert st["in_records"] == 0                     # nothing re-acquired
+    log3.close()
+
+
+# ---------------------------------------------------------------------------
+# the live case-study pipeline
+# ---------------------------------------------------------------------------
+def test_live_news_pipeline_matches_static_topology(tmp_path):
+    n_rss, n_fire, n_ws, seed = 600, 400, 150, 5
+    flow, log = build_news_pipeline(
+        tmp_path, n_rss=n_rss, n_firehose=n_fire, n_ws=n_ws, partitions=4,
+        seed=seed, live=True)
+    assert flow.acquisition is not None
+    flow.acquisition.run_with_flow(timeout=120)
+    st = flow.status()
+    acq = st["acquisition"]
+    assert sorted(acq["connectors"]) == ["big-rss", "twitter", "websocket"]
+    assert all(c["state"] == "COMPLETED"
+               for c in acq["connectors"].values())
+    assert acq["low_watermark"] is not None
+    # same zero-loss contract as the static topology
+    expected = expected_clean_doc_ids(n_rss, seed, 0.0)
+    landed = {json.loads(r.key)["attributes"].get("doc_id", "")
+              for r in log.iter_records("articles")}
+    assert expected <= landed
+    assert sum(log.end_offsets("events")) == n_ws
+    log.close()

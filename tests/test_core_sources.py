@@ -1,0 +1,54 @@
+"""Synthetic source generators at their rate-parameter edges — the default
+rates are exercised everywhere; these pin the boundary behaviours
+(``dup_rate=0``, ``junk_rate=1.0``, ``count=0``) the acquisition layer's
+determinism story depends on."""
+import json
+
+from repro.core import (FirehoseSource, RssAggregatorSource, WebSocketSource)
+
+
+def test_firehose_dup_rate_zero_yields_all_unique():
+    ffs = list(FirehoseSource(300, dup_rate=0.0)())
+    texts = [json.loads(ff.content)["text"] for ff in ffs]
+    assert len(ffs) == 300
+    assert len(set(texts)) == 300           # no retweets at all
+    assert all(ff.attributes["kind"] == "tweet" for ff in ffs)
+
+
+def test_firehose_dup_rate_one_repeats_after_first():
+    ffs = list(FirehoseSource(100, dup_rate=1.0)())
+    texts = {json.loads(ff.content)["text"] for ff in ffs}
+    assert len(ffs) == 100
+    assert len(texts) == 1                  # everything retweets record 0
+
+
+def test_rss_junk_rate_one_yields_only_malformed():
+    ffs = list(RssAggregatorSource(200, junk_rate=1.0)())
+    assert len(ffs) == 200
+    assert all(ff.attributes["kind"] == "junk" for ff in ffs)
+    for ff in ffs:                          # malformed by construction
+        try:
+            json.loads(ff.content)
+            raise AssertionError("junk record parsed as JSON")
+        except (ValueError, UnicodeDecodeError):
+            pass
+
+
+def test_rss_dup_rate_zero_yields_unique_articles():
+    ffs = list(RssAggregatorSource(300, dup_rate=0.0, junk_rate=0.0)())
+    ids = [json.loads(ff.content)["id"] for ff in ffs]
+    assert len(ids) == 300 and len(set(ids)) == 300
+    assert all(ff.attributes["kind"] == "article" for ff in ffs)
+
+
+def test_count_zero_sources_are_empty_and_replayable():
+    for src in (RssAggregatorSource(0), FirehoseSource(0),
+                WebSocketSource(0)):
+        assert list(src()) == []
+        assert list(src()) == []            # replay stays empty, no state
+
+
+def test_websocket_source_deterministic_replay():
+    a = [ff.content for ff in WebSocketSource(50)()]
+    b = [ff.content for ff in WebSocketSource(50)()]
+    assert a == b and len(a) == 50

@@ -444,6 +444,34 @@ def test_redrive_skips_confirmed_poison_on_second_pass(tmp_path):
     log.close()
 
 
+def test_redrive_stall_timeout_is_tunable(tmp_path):
+    """A redrive into a full connection nobody drains must bail out after
+    ``stall_timeout`` (previously a hard-coded 30 s) — and bail WITHOUT
+    saving state, so the records stay redrivable."""
+    log = PartitionedLog(tmp_path / "log")
+    g, sink, dlq = _linear_flow(n=20, max_retries=1, dlq_log=log)
+    INJECTOR.arm("proc.work",
+                 raise_on(lambda ff: ff.attributes.get("poison") == "1"),
+                 every=1)
+    g.run_to_completion(timeout=60)
+    assert dlq.quarantined == 2
+    INJECTOR.reset()
+
+    # the destination's queue holds 1 record and the flow is NOT running
+    g2, _, dlq2 = _linear_flow(n=0, max_retries=1, dlq_log=log)
+    g2.nodes["work"].input.object_threshold = 1
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="stalled"):
+        dlq2.redrive(g2, stall_timeout=0.2)
+    assert time.monotonic() - t0 < 5.0      # nowhere near the old 30 s
+    # frontier untouched: a later redrive (with room) re-offers everything
+    g3, sink3, dlq3 = _linear_flow(n=0, max_retries=1, dlq_log=log)
+    assert dlq3.redrive(g3)["redriven"] == 2
+    g3.run_to_completion(timeout=60)
+    assert len(sink3.items) == 2
+    log.close()
+
+
 def test_redrive_explicit_dest_and_unroutable(tmp_path):
     log = PartitionedLog(tmp_path / "log")
     g, sink, dlq = _linear_flow(n=30, max_retries=1, dlq_log=log)

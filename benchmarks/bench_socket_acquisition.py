@@ -1,0 +1,237 @@
+"""Wire-real acquisition acceptance scenario (ISSUE 5; paper §III.A over
+real sockets): the news topology fed by three *flapping localhost servers*
+— two HTTP cursor feeds (RSS + firehose) and one RFC 6455 WebSocket feed —
+through the first-class network connectors, with the acquiring process
+"crashed" mid-run (abort, no final checkpoints) and rebuilt over the same
+store while the servers stay up.
+
+The contract under test, all over genuine TCP:
+
+* **zero record loss** — every clean article id, unique tweet text and
+  websocket event lands despite torn HTTP bodies, half-sent WebSocket
+  frames, and the mid-run crash/rebuild;
+* **monotonic low watermark** — within each incarnation and across the
+  restart (phase B starts from the checkpoint-seeded floor);
+* **watermark-driven windows** — every ``WindowedAggregate`` close that
+  fired live carries ``window.close.wm >= window.end``: window closes fire
+  only at or behind the fabric-wide low watermark;
+* **bounded duplicates** — at-least-once, bounded by reconnects x the
+  endpoint redelivery window plus checkpoint intervals plus WAL replay.
+
+The socket path must not touch the ``live=False`` hot path: the quick-run
+ingest guard (same CI pass) holds the A/B throughput floor.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+for _p in (str(_REPO_ROOT / "src"), str(_REPO_ROOT / "tests")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from net_fixtures import FeedData, HttpFeedServer, WsFeedServer
+from repro.core import ConnectorPolicy, FirehoseSource, RestartPolicy
+from repro.core.sources import RssAggregatorSource, WebSocketSource
+from repro.data.pipeline import build_news_pipeline, expected_clean_doc_ids
+
+_OOO_WINDOW = 4
+_REDELIVERY = 4
+_CKPT_EVERY = 96
+_POLL = 48
+_WINDOW_SEC = 48.0
+
+
+def _policy() -> ConnectorPolicy:
+    return ConnectorPolicy(
+        restart=RestartPolicy(max_restarts=100_000, backoff_base_sec=0.001,
+                              backoff_cap_sec=0.01),
+        max_poll_records=_POLL, poll_interval_sec=0.001,
+        checkpoint_every_records=_CKPT_EVERY,
+        lateness_sec=4.0 * max(_OOO_WINDOW, _REDELIVERY))
+
+
+def _servers(n_rss: int, n_fire: int, n_ws: int, seed: int,
+             flap_every: int):
+    rss = FeedData(RssAggregatorSource(n_rss, seed=seed),
+                   ooo_window=_OOO_WINDOW, seed=seed)
+    fire = FeedData(FirehoseSource(n_fire, seed=seed + 1),
+                    ooo_window=_OOO_WINDOW, seed=seed + 1)
+    ws = FeedData(WebSocketSource(n_ws, seed=seed + 2),
+                  ooo_window=_OOO_WINDOW, seed=seed + 2)
+    return (HttpFeedServer(rss, flap_every=flap_every).start(),
+            HttpFeedServer(fire, flap_every=flap_every + 1).start(),
+            WsFeedServer(ws, redelivery=_REDELIVERY, flap_every=flap_every,
+                         fragment_frames=2).start())
+
+
+def _build(root: Path, eps: dict, *, n_rss: int, n_fire: int, n_ws: int,
+           seed: int):
+    return build_news_pipeline(
+        root, n_rss=n_rss, n_firehose=n_fire, n_ws=n_ws, partitions=4,
+        seed=seed, live="socket", durable=True, live_policy=_policy(),
+        ooo_window=_OOO_WINDOW, redelivery=_REDELIVERY,
+        socket_endpoints=eps, window_sec=_WINDOW_SEC)
+
+
+def _monotonic(samples: list[float]) -> bool:
+    return all(b >= a for a, b in zip(samples, samples[1:]))
+
+
+def socket_flapping_resume(n_rss: int = 2_000, n_fire: int = 1_400,
+                           n_ws: int = 600, seed: int = 17,
+                           flap_every: int = 6) -> dict:
+    tmp = Path(tempfile.mkdtemp(prefix="bench_socket_acq_"))
+    srv_rss = srv_fire = srv_ws = None
+    t0 = time.monotonic()
+    try:
+        srv_rss, srv_fire, srv_ws = _servers(n_rss, n_fire, n_ws, seed,
+                                             flap_every)
+        eps = {"big-rss": ("http", srv_rss.host, srv_rss.port),
+               "twitter": ("http", srv_fire.host, srv_fire.port),
+               "websocket": ("ws", srv_ws.host, srv_ws.port)}
+
+        # phase A: acquire over flapping sockets until ~a third of the
+        # articles landed AND every connector is past two checkpoint
+        # intervals, then crash (abort: no final checkpoints, no graceful
+        # handle completion) — the servers stay up, like real endpoints
+        flow, log = _build(tmp, eps, n_rss=n_rss, n_fire=n_fire, n_ws=n_ws,
+                           seed=seed)
+        rt = flow.acquisition
+        flow.start()
+        rt.start()
+        wm_a: list[float] = []
+        target = (n_rss + n_fire) // 3
+        deadline = time.monotonic() + 120
+        while time.monotonic() < deadline:
+            wm = rt.low_watermark()
+            if wm is not None:
+                wm_a.append(wm)
+            conns = rt.status()["connectors"]
+            if (sum(log.end_offsets("articles")) >= target
+                    and min(c["in_records"] for c in conns.values())
+                    >= 2 * _CKPT_EVERY):
+                break
+            time.sleep(0.01)
+        rt.stop(abort=True)
+        flow.stop()
+        reconnects_a = sum(c["reconnects"]
+                           for c in rt.status()["connectors"].values())
+        log.close()
+
+        # phase B: rebuild over the same store (the "process" restarts;
+        # the network endpoints kept running) — cursors resume from the
+        # checkpoint topic, the WAL replays un-acked admissions, and the
+        # run completes, still flapping
+        flow2, log2 = _build(tmp, eps, n_rss=n_rss, n_fire=n_fire,
+                             n_ws=n_ws, seed=seed)
+        rt2 = flow2.acquisition
+        wm_seed = rt2.low_watermark()     # the checkpoint-seeded floor
+        wal_replayed = sum(c.get("replayed", 0)
+                           for c in flow2.status()["connections"])
+        flow2.start()
+        rt2.start()
+        wm_b: list[float] = []
+        deadline = time.monotonic() + 240
+        while rt2.running() and time.monotonic() < deadline:
+            wm = rt2.low_watermark()
+            if wm is not None:
+                wm_b.append(wm)
+            time.sleep(0.01)
+        rt2.join(timeout=max(1.0, deadline - time.monotonic()))
+        if rt2.running():
+            rt2.stop(abort=True)
+            flow2.stop()
+            raise RuntimeError("phase B did not finish within 240s")
+        flow2.join(timeout=240)
+        dt = time.monotonic() - t0
+        st = rt2.status()
+        reconnects_b = sum(c["reconnects"]
+                           for c in st["connectors"].values())
+
+        # zero record loss, per source (same ground truth the simulated
+        # scenario uses — the wire changes, the contract doesn't)
+        expected = expected_clean_doc_ids(n_rss, seed, 0.0)
+        expected_tweets = {json.loads(ff.content)["text"]
+                           for ff in FirehoseSource(n_fire, seed=seed + 1)()}
+        landed: list[str] = []
+        landed_texts: set[str] = set()
+        for r in log2.iter_records("articles"):
+            attrs = json.loads(r.key)["attributes"]
+            landed.append(attrs.get("doc_id", ""))
+            landed_texts.add(attrs.get("text", ""))
+        missing = expected - set(landed)
+        missing_tweets = len(expected_tweets - landed_texts)
+        dup_articles = len(landed) - len(set(landed))
+        events = [r.value for r in log2.iter_records("events")]
+        missing_events = n_ws - len(set(events))
+
+        # watermark-driven windows: every close that fired live (not at
+        # final flush) must carry close.wm >= window.end — closes fire
+        # only at or behind the fabric-wide low watermark
+        live_closes = final_closes = close_violations = 0
+        for r in log2.iter_records("windows"):
+            attrs = json.loads(r.key)["attributes"]
+            wm_at_close = attrs["window.close.wm"]
+            if wm_at_close == "final":
+                final_closes += 1
+                continue
+            live_closes += 1
+            if float(attrs["window.end"]) > float(wm_at_close) + 1e-6:
+                close_violations += 1
+
+        reconnects = reconnects_a + reconnects_b
+        dup_bound = (reconnects + 3) * (_REDELIVERY + _CKPT_EVERY + _POLL) \
+            + wal_replayed
+        log2.close()
+        produced = n_rss + n_fire + n_ws
+        return {
+            "name": "socket_flapping_resume",
+            "records": produced,
+            "wall_sec": round(dt, 3),
+            "records_per_sec": round(produced / dt, 1),
+            "reconnects": reconnects,
+            "wal_replayed": wal_replayed,
+            "missing_records": len(missing),
+            "missing_tweets": missing_tweets,
+            "missing_events": missing_events,
+            "zero_record_loss": (not missing and missing_tweets == 0
+                                 and missing_events == 0),
+            "duplicates": dup_articles,
+            "duplicates_bounded": dup_articles <= dup_bound,
+            "watermark_monotonic": _monotonic(wm_a)
+                                   and wm_seed is not None
+                                   and _monotonic([wm_seed] + wm_b),
+            "watermark_resumed_from_checkpoint": wm_seed is not None,
+            "windows_live_closes": live_closes,
+            "windows_final_closes": final_closes,
+            "windows_close_violations": close_violations,
+            # at least one close must have fired off live clock
+            # advancement, and none may outrun the low watermark
+            "windows_closed_behind_watermark": (live_closes > 0
+                                                and close_violations == 0),
+            "connector_states": sorted(
+                c["state"] for c in st["connectors"].values()),
+        }
+    finally:
+        from repro.core.faults import INJECTOR
+        INJECTOR.reset()
+        for srv in (srv_rss, srv_fire, srv_ws):
+            if srv is not None:
+                srv.stop()
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def main(n_rss: int = 2_000, n_fire: int = 1_400, n_ws: int = 600
+         ) -> list[dict]:
+    return [socket_flapping_resume(n_rss=n_rss, n_fire=n_fire, n_ws=n_ws)]
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

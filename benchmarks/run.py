@@ -12,6 +12,10 @@ loader variant).
                             supervised flow under injected faults)
   bench_acquisition         live acquisition: flapping connectors + mid-run
                             crash/resume (zero loss, monotonic watermarks)
+  bench_socket_acquisition  wire-real acquisition: flapping localhost
+                            HTTP/WebSocket servers + crash/rebuild (zero
+                            loss, monotonic watermarks, window closes at or
+                            behind the low watermark)
   bench_loader              host→device feed rate (ingestion fabric edge)
   roofline                  §Roofline table from artifacts/dryrun (if present)
 
@@ -47,7 +51,7 @@ sys.path.insert(0, str(_REPO_ROOT))
 
 from benchmarks import (bench_acquisition, bench_backpressure,
                         bench_ingest_throughput, bench_loader,
-                        bench_recovery, roofline)
+                        bench_recovery, bench_socket_acquisition, roofline)
 
 SNAPSHOT_PATH = _REPO_ROOT / "BENCH_ingest.json"
 
@@ -59,7 +63,7 @@ GUARD_RATIO = 0.8
 ACCEPTANCE_FLAGS = ("zero_record_loss", "watermark_monotonic",
                     "watermark_resumed_from_checkpoint",
                     "duplicates_bounded", "at_least_once_ok",
-                    "no_committed_loss")
+                    "no_committed_loss", "windows_closed_behind_watermark")
 
 
 def emit(rows):
@@ -245,9 +249,12 @@ def main(quick: bool = False) -> None:
         emit(recovery_rows)
         acq_rows = bench_acquisition.main(n_rss=1_200, n_fire=800, n_ws=400)
         emit(acq_rows)
+        sock_rows = bench_socket_acquisition.main(n_rss=900, n_fire=600,
+                                                  n_ws=300)
+        emit(sock_rows)
         emit(bench_backpressure.main(produced=5_000))
         emit(bench_loader.main(n_docs=2_000))
-        failures += check_acceptance(recovery_rows + acq_rows)
+        failures += check_acceptance(recovery_rows + acq_rows + sock_rows)
         print("snapshot,skipped,--quick")
         if failures:
             print(f"guard,FAILED,{';'.join(failures)}")
@@ -273,11 +280,13 @@ def main(quick: bool = False) -> None:
         emit(recovery_rows)
         acq_rows = bench_acquisition.main()
         emit(acq_rows)
+        sock_rows = bench_socket_acquisition.main()
+        emit(sock_rows)
         loader_rows = bench_loader.main()
         emit(loader_rows)
         # acceptance flags gate the full run too: a loss/watermark break
         # must not silently refresh the perf trajectory
-        failures += check_acceptance(recovery_rows + acq_rows)
+        failures += check_acceptance(recovery_rows + acq_rows + sock_rows)
         if failures:
             print(f"guard,FAILED,{';'.join(failures)}")
             print("snapshot,skipped,acceptance-failure")

@@ -7,7 +7,11 @@ second, fault-injected run demonstrates the robustness half of the paper's
 claim — supervised restarts, poison-record quarantine, zero record loss;
 and a third run feeds the topology from *live* simulated endpoints through
 the acquisition runtime — reconnecting poll loops, checkpointed cursors,
-event-time watermarks — while the connectors flap.
+event-time watermarks, and watermark-driven window closes — while the
+connectors flap. (The same topology goes wire-real with
+``build_news_pipeline(live="socket")`` against the localhost HTTP/WebSocket
+feed servers in ``tests/net_fixtures.py`` — see
+``benchmarks/bench_socket_acquisition.py``.)
 
 Run:  PYTHONPATH=src python examples/news_ingestion.py
 """
@@ -61,10 +65,14 @@ def live_acquisition_demo() -> None:
     fault sites — records keep landing (duplicates bounded by the reconnect
     redelivery window, loss never), watermarks advance monotonically, and
     per-connector lag / reconnects / watermark gauges surface in
-    ``flow.status()["acquisition"]``."""
+    ``flow.status()["acquisition"]``. ``window_sec`` adds the
+    watermark-driven aggregation stage: tumbling event-time windows close
+    only when the fabric-wide low watermark passes them, landing in topic
+    ``windows``."""
     root = Path(tempfile.mkdtemp(prefix="news_live_"))
     flow, log = build_news_pipeline(root, n_rss=3000, n_firehose=2000,
-                                    n_ws=500, partitions=4, live=True)
+                                    n_ws=500, partitions=4, live=True,
+                                    window_sec=64.0)
     INJECTOR.arm("acquire.poll", "raise", nth=2, every=6)    # flap everyone
     t0 = time.monotonic()
     try:
@@ -75,8 +83,9 @@ def live_acquisition_demo() -> None:
     acq = flow.status()["acquisition"]
     landed = sum(log.end_offsets("articles"))
     late = sum(log.end_offsets("late"))
+    windows = sum(log.end_offsets("windows"))
     print(f"live run: {landed} articles landed in {dt:.2f}s from 3 flapping "
-          f"connectors (late-routed={late}, "
+          f"connectors (late-routed={late}, windowed bundles={windows}, "
           f"low watermark={acq['low_watermark']:.0f})")
     for name, c in sorted(acq["connectors"].items()):
         print(f"  {name:10s} state={c['state']} acquired={c['in_records']} "

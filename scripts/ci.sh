@@ -4,16 +4,18 @@
 #   scripts/ci.sh -m 'not slow'   ... forwarding extra pytest args
 #
 # The bench smoke (`benchmarks/run.py --quick`) runs the same ingest /
-# backpressure / recovery / acquisition / loader scenarios as the full run
-# at ~10x smaller inputs and does NOT rewrite BENCH_ingest.json. It FAILS
-# (non-zero exit) when a quick ingest variant regresses below 0.8x an
-# A/B baseline (the same quick pass run from a git worktree of HEAD — or
-# HEAD~1 on a clean checkout — in the same host-load phase; snapshot +
-# calibration fallback without git)
+# backpressure / recovery / acquisition / socket-acquisition / loader
+# scenarios as the full run at ~10x smaller inputs and does NOT rewrite
+# BENCH_ingest.json. It FAILS (non-zero exit) when a quick ingest variant
+# regresses below 0.8x an A/B baseline (the same quick pass run from a git
+# worktree of HEAD — or HEAD~1 on a clean checkout — in the same host-load
+# phase; snapshot + calibration fallback without git)
 # on BOTH wall-clock and cpu-time rates (one re-measure absorbs residual
 # noise), or when an acceptance flag breaks in the recovery /
-# flapping-connector acquisition scenarios (record loss, watermark
-# regression, unbounded duplicates).
+# flapping-connector acquisition scenarios — simulated AND wire-real
+# localhost HTTP/WebSocket (record loss, watermark regression, unbounded
+# duplicates, window closes outrunning the low watermark).
+# The tier-1 pass includes the `net` marker's localhost-socket tests.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

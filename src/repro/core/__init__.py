@@ -6,8 +6,11 @@ Layers (paper Fig. 1):
   acquisition   — Source processors over replayable generators (sources.py),
                   or live: SourceConnector poll loops with reconnect backoff,
                   checkpointed cursors and event-time watermarks
-                  (acquisition.py + watermark.py)
-  extract/enrich/integrate — processors.py (dedup, filter, route, enrich, merge)
+                  (acquisition.py + watermark.py); wire-real connectors —
+                  HTTP/RSS cursor-feed long-poller + RFC 6455 WebSocket
+                  client — in net_connectors.py
+  extract/enrich/integrate — processors.py (dedup, filter, route, enrich,
+                  merge) + watermark-driven event-time windows (windows.py)
   distribution  — LogStore (pluggable durable pub-sub: single-host
                   PartitionedLog or N-replica ReplicatedLog) + ConsumerGroup
 cross-cutting: Connection backpressure, ProvenanceRepository lineage, metrics.
@@ -70,7 +73,7 @@ epoch-fenced failover.
 from .acquisition import (AcquisitionError, AcquisitionRuntime,
                           ConnectorError, ConnectorPolicy, EndOfStream,
                           SimulatedEndpoint, SourceConnector,
-                          default_event_ts)
+                          default_event_ts, emission_order)
 from .connection import (BackpressureTimeout, Connection, DurableConnection,
                          RateThrottle,
                          DEFAULT_OBJECT_THRESHOLD, DEFAULT_SIZE_THRESHOLD)
@@ -89,10 +92,12 @@ from .processors import (BloomFilter, CollectSink, ContentFilter,
                          FileSink, LookupEnrich, MergeContent,
                          PartitionRecords, PublishToLog, RouteOnAttribute,
                          Throttle)
+from .net_connectors import HttpPollConnector, WebSocketConnector
 from .provenance import ProvenanceEvent, ProvenanceRepository
 from .sources import (FirehoseSource, RssAggregatorSource, WebSocketSource,
                       corpus_documents, synth_article)
 from .watermark import LowWatermarkClock, WatermarkTracker
+from .windows import WindowedAggregate
 
 __all__ = [
     "AcquisitionError", "AcquisitionRuntime",
@@ -103,7 +108,8 @@ __all__ = [
     "DetectDuplicate", "DurableConnection", "EndOfStream",
     "ExecuteScript", "FaultInjector", "FileSink", "FirehoseSource",
     "FlowError", "FlowFile",
-    "FlowGraph", "INJECTOR", "InjectedFault", "LogRecord", "LogStore",
+    "FlowGraph", "HttpPollConnector", "INJECTOR", "InjectedFault",
+    "LogRecord", "LogStore",
     "LookupEnrich", "LowWatermarkClock",
     "MergeContent", "OffsetStore",
     "PartitionRecords", "PartitionedLog", "Processor", "Producer",
@@ -113,7 +119,7 @@ __all__ = [
     "RestartPolicy", "RouteOnAttribute",
     "RssAggregatorSource", "SimulatedEndpoint", "Source", "SourceConnector",
     "StaleEpoch", "StaleGeneration", "Throttle", "WatermarkTracker",
-    "WebSocketSource",
-    "corpus_documents", "default_event_ts", "make_flowfile", "range_assign",
-    "route_partition", "synth_article",
+    "WebSocketConnector", "WebSocketSource", "WindowedAggregate",
+    "corpus_documents", "default_event_ts", "emission_order",
+    "make_flowfile", "range_assign", "route_partition", "synth_article",
 ]

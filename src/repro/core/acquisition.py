@@ -51,7 +51,11 @@ processors)
     disconnects and stalls are injected via the ``acquire.*`` fault sites,
     reconnects redeliver a bounded already-delivered suffix (at-least-once
     endpoints), and a seeded block permutation emits bounded out-of-order
-    bursts with deterministic per-record event times.
+    bursts with deterministic per-record event times. The *wire-real*
+    counterparts — an HTTP/RSS cursor-feed long-poller and an RFC 6455
+    WebSocket client speaking the same connector contract over real
+    sockets — live in ``net_connectors.py`` and are driven by this runtime
+    unchanged.
 
 Watermarks aggregate across connectors into the fabric-wide low watermark
 (``core/watermark.py``); per-connector lag, watermark, reconnects, late and
@@ -82,7 +86,7 @@ if TYPE_CHECKING:
 
 __all__ = ["AcquisitionError", "AcquisitionRuntime", "ConnectorError",
            "ConnectorPolicy", "EndOfStream", "SimulatedEndpoint",
-           "SourceConnector", "default_event_ts"]
+           "SourceConnector", "default_event_ts", "emission_order"]
 
 
 class ConnectorError(RuntimeError):
@@ -161,6 +165,40 @@ def default_event_ts(ff: FlowFile) -> float:
     return float(ts) if ts is not None else ff.entry_ts
 
 
+def emission_order(generator_fn: Callable[[], Iterator[FlowFile]],
+                   start: int = 0, *, ooo_window: int = 0,
+                   seed: int = 0) -> Iterator[tuple[int, FlowFile]]:
+    """The canonical endpoint emission order: yield ``(canonical_index,
+    record)`` pairs from a replayable generator, starting at *emission*
+    index ``start``, with blocks of ``ooo_window`` records deterministically
+    permuted (seeded per block) to model bounded out-of-order delivery.
+
+    This is the deterministic stream behind every test endpoint —
+    :class:`SimulatedEndpoint` stamps event times on it in-process, and the
+    localhost HTTP/WebSocket feed servers (``tests/net_fixtures.py``) serve
+    the very same order over real sockets, so wire-real connectors are
+    checked against byte-identical expectations."""
+    it = generator_fn()
+    w = max(1, ooo_window)
+    block_idx, skip = divmod(start, w)
+    if block_idx:            # fast-forward whole blocks (replayable gen)
+        n = block_idx * w
+        next(itertools.islice(it, n, n), None)
+    while True:
+        block = list(itertools.islice(it, w))
+        if not block:
+            return
+        order = list(range(len(block)))
+        if w > 1 and len(block) > 1:
+            # permutation depends only on (seed, block index, length):
+            # a resumed session re-derives the identical emission order
+            random.Random(seed * 1_000_003 + block_idx).shuffle(order)
+        for j in order[skip:]:
+            yield block_idx * w + j, block[j]
+        skip = 0
+        block_idx += 1
+
+
 # ---------------------------------------------------------------------------
 # Deterministic simulated endpoint
 # ---------------------------------------------------------------------------
@@ -210,28 +248,11 @@ class SimulatedEndpoint(SourceConnector):
 
     # -- emission order ------------------------------------------------------
     def _emission_iter(self, start: int) -> Iterator[FlowFile]:
-        it = self._generator_fn()
-        w = max(1, self.ooo_window)
-        block_idx, skip = divmod(start, w)
-        if block_idx:            # fast-forward whole blocks (replayable gen)
-            n = block_idx * w
-            next(itertools.islice(it, n, n), None)
-        while True:
-            block = list(itertools.islice(it, w))
-            if not block:
-                return
-            order = list(range(len(block)))
-            if w > 1 and len(block) > 1:
-                # permutation depends only on (seed, block index, length):
-                # a resumed session re-derives the identical emission order
-                random.Random(self.ooo_seed * 1_000_003 + block_idx
-                              ).shuffle(order)
-            for j in order[skip:]:
-                idx = block_idx * w + j
-                yield block[j].with_attributes(**{
-                    "event.ts": f"{self.base_ts + idx * self.ts_step:.6f}"})
-            skip = 0
-            block_idx += 1
+        for idx, ff in emission_order(self._generator_fn, start,
+                                      ooo_window=self.ooo_window,
+                                      seed=self.ooo_seed):
+            yield ff.with_attributes(**{
+                "event.ts": f"{self.base_ts + idx * self.ts_step:.6f}"})
 
     # -- SourceConnector -----------------------------------------------------
     def connect(self, cursor: str | None) -> None:
@@ -525,7 +546,13 @@ class AcquisitionRuntime:
                         pass
                     self._write_checkpoint(e)
                 self._close_quietly(c)
-                if e.state == "COMPLETED":
+                if e.state in ("COMPLETED", "FAILED"):
+                    # a FAILED connector will never deliver again either:
+                    # leaving it "active" would pin the fabric-wide low
+                    # watermark at its last value forever, stalling every
+                    # watermark-driven consumer (window closes) and growing
+                    # their buffers without bound — degrade the clock
+                    # instead; the failure itself is surfaced via join()
                     self.clock.mark_finished(c.name)
                 # completing the handles lets the destination drain and
                 # terminate — even for a FAILED connector, so the rest of
@@ -644,8 +671,12 @@ class AcquisitionRuntime:
                                      partition=0)
             if first is None:
                 first = off
-        self.log.flush_topic(self.checkpoint_topic,
-                             fsync=self.checkpoint_fsync)
+        # always fsync the rewrite before GC'ing the segments below it —
+        # even with checkpoint_fsync off: dropping the old segments while
+        # the rewrite sits in the page cache would let a machine crash
+        # delete every connector's only durable cursor (compaction is one
+        # fsync per _COMPACT_EVERY appends, off the per-checkpoint path)
+        self.log.flush_topic(self.checkpoint_topic, fsync=True)
         if first is not None:
             self.log.drop_segments_below(self.checkpoint_topic, 0, first)
         self._ckpt_appends = 0

@@ -30,14 +30,13 @@ costs no I/O.
 from __future__ import annotations
 
 import json
-import os
 import threading
 import time
 from pathlib import Path
 from typing import Iterable
 
 from . import faults
-from .logstore import LogRecord, LogStore
+from .logstore import LogRecord, LogStore, atomic_write_bytes
 
 
 class Producer:
@@ -143,10 +142,16 @@ class Producer:
 
 class OffsetStore:
     """Durable committed offsets: {group: {topic: {partition: offset}}}.
-    Writes are atomic (tmp + rename) so a crash never corrupts the store."""
+    Writes are atomic AND machine-crash-safe: tmp + fsync + rename + parent
+    dir fsync (see :func:`~repro.core.logstore.atomic_write_bytes` — a bare
+    ``write + rename`` can leave a torn rename target after a power loss,
+    losing every group's committed offsets at once). ``fsync=False`` keeps
+    the atomicity but downgrades to process-crash durability for callers
+    that commit on a hot path."""
 
-    def __init__(self, path: str | Path) -> None:
+    def __init__(self, path: str | Path, *, fsync: bool = True) -> None:
         self.path = Path(path)
+        self.fsync = fsync
         self._lock = threading.Lock()
         self._data: dict[str, dict[str, dict[str, int]]] = {}
         if self.path.exists():
@@ -168,9 +173,8 @@ class OffsetStore:
             g = self._data.setdefault(group, {}).setdefault(topic, {})
             for p, off in offsets.items():
                 g[str(p)] = int(off)
-            tmp = self.path.with_suffix(".tmp")
-            tmp.write_text(json.dumps(self._data))
-            os.replace(tmp, self.path)
+            atomic_write_bytes(self.path, json.dumps(self._data).encode(),
+                               fsync=self.fsync)
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -268,11 +272,43 @@ class Consumer:
     def positions(self) -> dict[int, int]:
         return dict(self._positions)
 
-    def restore(self, positions: dict[int, int]) -> None:
+    def restore(self, positions: dict[int, int],
+                on_unassigned: str = "raise") -> None:
+        """Exactly-once resume: make ``positions`` (captured by
+        :meth:`positions` inside the consumer's own atomic state commit) the
+        current read positions.
+
+        A checkpoint can name partitions this member no longer owns — a
+        rebalance happened between capture and restore. Silently dropping
+        them would quietly replay those partitions from the *committed*
+        store instead of the checkpoint, losing the loader's position
+        without any signal, so:
+
+        * ``on_unassigned="raise"`` (default) — refuse the restore loudly;
+          the caller re-captures after the rebalance settles.
+        * ``on_unassigned="commit"`` — route the orphaned offsets through
+          the group's offset store, so the member that now owns those
+          partitions resumes from the checkpoint (at-least-once: that
+          member may already have polled past the store read in its own
+          ``_on_assign``; it re-syncs on the next rebalance)."""
+        if on_unassigned not in ("raise", "commit"):
+            raise ValueError(f"unknown on_unassigned={on_unassigned!r}")
+        positions = {int(p): int(off) for p, off in positions.items()}
+        orphans = {p: off for p, off in positions.items()
+                   if p not in self._positions}
+        if orphans:
+            if on_unassigned == "raise":
+                raise ValueError(
+                    f"{self.member_id}: restore() positions cover "
+                    f"partitions {sorted(orphans)} not in this member's "
+                    f"assignment {sorted(self._positions)} (rebalanced?); "
+                    "pass on_unassigned='commit' to hand them to the "
+                    "offset store instead")
+            self._group.offsets.commit(self._group.group_id,
+                                       self._group.topic, orphans)
         for p, off in positions.items():
-            p = int(p)
             if p in self._positions:
-                self._positions[p] = int(off)
+                self._positions[p] = off
 
     def seek(self, partition: int, offset: int) -> None:
         self._positions[partition] = offset

@@ -29,9 +29,40 @@ The contract (all methods thread-safe):
 from __future__ import annotations
 
 import abc
+import os
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Iterator, Sequence
+
+
+def atomic_write_bytes(path: Path, data: bytes, *, fsync: bool = True) -> None:
+    """Crash-safe whole-file replace: write a tmp file, fsync its fd, rename
+    over ``path``, then fsync the parent directory. The plain
+    ``write + os.replace`` idiom is only atomic against a *process* crash —
+    after a machine crash the rename target can be torn (the rename may be
+    journaled before the tmp file's data blocks), which loses the previous
+    contents too. Every durable metadata file (committed offsets,
+    replication metadata) goes through here."""
+    tmp = path.with_name(path.name + ".tmp")
+    fd = os.open(tmp, os.O_WRONLY | os.O_CREAT | os.O_TRUNC, 0o644)
+    try:
+        view = memoryview(data)
+        while view:                # os.write may land short (signals, large
+            view = view[os.write(fd, view):]   # buffers) — never fsync+
+        if fsync:                  # rename a truncated payload over the
+            os.fsync(fd)           # previous good file
+    finally:
+        os.close(fd)
+    os.replace(tmp, path)
+    if fsync:
+        try:
+            dfd = os.open(path.parent, os.O_RDONLY)
+        except OSError:            # platforms without O_RDONLY dir opens
+            return
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
 
 
 @dataclass(frozen=True, slots=True)

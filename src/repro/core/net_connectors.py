@@ -1,0 +1,509 @@
+"""Wire-real source connectors (paper §III.A: GetHTTP / ListenWebSocket).
+
+PR 4's acquisition layer made the runtime live but every shipped connector
+was simulated; these are the first :class:`~repro.core.acquisition
+.SourceConnector`\\ s that speak real network protocols, driven *unchanged*
+by :class:`~repro.core.acquisition.AcquisitionRuntime` — reconnect backoff,
+cursor checkpoints, and watermarks work over real sockets exactly as they
+do over ``SimulatedEndpoint``.
+
+``HttpPollConnector`` (NiFi: GetHTTP; the paper's RSS pull path)
+    A long-poller over ``http.client`` against a paginated *cursor feed*:
+    ``GET <path>?cursor=K&max=N`` returns a JSON envelope of base64-framed
+    records plus the next cursor; ``POST <ack_path>?cursor=K`` tells the
+    server everything up to ``K`` is durably admitted. Conditional GETs are
+    first-class: the client replays the server's ``ETag`` /
+    ``Last-Modified`` via ``If-None-Match`` / ``If-Modified-Since`` and a
+    ``304 Not Modified`` costs no body (the polite idle-poll of a feed that
+    hasn't grown). A server response whose cursor is stale or malformed
+    (doesn't advance by exactly the number of items served) is a protocol
+    violation: the session is dropped and the runtime reconnects from the
+    client's own cursor — the client's count, not the server's claim, is
+    authoritative.
+
+``WebSocketConnector`` (NiFi: ListenWebSocket / ConnectWebSocket)
+    An RFC 6455 *client* over a plain ``socket``: real opening handshake
+    (``Sec-WebSocket-Key`` → ``Sec-WebSocket-Accept`` validation), real
+    frame codec (FIN/opcode bits, 7/16/64-bit lengths, mandatory
+    client-to-server masking, fragmented-message reassembly, ping→pong,
+    close frames). The subprotocol on top is pull-based so the connector
+    contract holds: each ``poll`` sends one request frame and reads one
+    (possibly fragmented) JSON envelope back; ``ack`` is fire-and-forget.
+    The server may redeliver a bounded unacked suffix on reconnect
+    (at-least-once endpoints) and announces the resume point in a hello
+    frame, which feeds the ``redelivered`` duplicate gauge.
+
+Wire format (shared with the in-repo test servers in
+``tests/net_fixtures.py``): each record travels as
+``{"i": canonical_index, "c": base64(content), "a": {attributes}}`` — the
+attributes carry ``event.ts`` stamped by the server from the canonical
+stream index, so event-time watermarks are exact end to end. Envelopes are
+``{"items": [...], "cursor": "<emission index>", "end": bool,
+"remaining": int}``.
+
+Both connectors translate every transport failure (refused connection,
+reset, short read mid-frame, torn chunked body, protocol violations) into
+:class:`~repro.core.acquisition.ConnectorError`, which is exactly the
+signal the runtime's reconnect-with-backoff machinery consumes.
+"""
+from __future__ import annotations
+
+import base64
+import hashlib
+import http.client
+import json
+import os
+import socket
+import struct
+
+from .acquisition import ConnectorError, EndOfStream, SourceConnector
+from .flowfile import FlowFile
+
+__all__ = ["HttpPollConnector", "WebSocketConnector",
+           "flowfile_to_wire_item", "wire_item_to_flowfile",
+           "WS_GUID", "ws_accept_key", "ws_encode_frame", "ws_read_frame",
+           "ws_read_message", "recv_exact",
+           "OP_CONT", "OP_TEXT", "OP_BINARY", "OP_CLOSE", "OP_PING",
+           "OP_PONG"]
+
+
+# ---------------------------------------------------------------------------
+# Wire record framing (shared by connectors and the test feed servers)
+# ---------------------------------------------------------------------------
+def flowfile_to_wire_item(index: int, ff: FlowFile) -> dict:
+    """One record as it travels in a feed envelope. Content is base64 —
+    payloads may be arbitrary bytes (the RSS source emits binary junk
+    records on purpose)."""
+    return {"i": index,
+            "c": base64.b64encode(ff.content).decode("ascii"),
+            "a": dict(ff.attributes)}
+
+
+def wire_item_to_flowfile(item: dict) -> FlowFile:
+    return FlowFile(content=base64.b64decode(item["c"]),
+                    attributes={str(k): str(v)
+                                for k, v in item.get("a", {}).items()})
+
+
+def _parse_envelope(raw: bytes, who: str) -> dict:
+    try:
+        env = json.loads(raw)
+    except (ValueError, UnicodeDecodeError) as e:
+        raise ConnectorError(f"{who}: malformed feed envelope: {e}") from e
+    if not isinstance(env, dict) or not isinstance(env.get("items", []), list):
+        raise ConnectorError(f"{who}: malformed feed envelope")
+    return env
+
+
+class _CursorFeedClient:
+    """Shared cursor/gauge state and envelope bookkeeping for both
+    connectors — the client-authoritative cursor protocol lives in exactly
+    one place."""
+
+    name: str
+
+    def __init__(self) -> None:
+        self._pos = 0
+        self._remaining: int | None = None
+        self._end_seen = False
+        self.redelivered_total = 0
+
+    def cursor(self) -> str | None:
+        return str(self._pos)
+
+    def lag(self) -> int | None:
+        return self._remaining
+
+    def redelivered(self) -> int:
+        return self.redelivered_total
+
+    def _consume_envelope(self, env: dict) -> list[FlowFile]:
+        """Validate and absorb one feed envelope: advance the cursor,
+        update the lag gauge, detect end-of-stream. The client's count is
+        authoritative — the server's next-cursor must advance by exactly
+        the records it served; anything else (stale, backwards,
+        non-decimal) is a protocol violation that drops the session rather
+        than silently skipping or re-reading records."""
+        items = env.get("items", [])
+        try:
+            new_pos = int(env["cursor"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise ConnectorError(
+                f"{self.name}: invalid feed cursor "
+                f"{env.get('cursor')!r}") from e
+        if new_pos != self._pos + len(items):
+            raise ConnectorError(
+                f"{self.name}: stale feed cursor {new_pos} "
+                f"(expected {self._pos + len(items)})")
+        rem = env.get("remaining")
+        self._remaining = int(rem) if rem is not None else None
+        if env.get("end") and not items:
+            self._end_seen = True
+            raise EndOfStream(self.name)
+        if not items:
+            return []
+        self._pos = new_pos
+        return [wire_item_to_flowfile(it) for it in items]
+
+
+# ---------------------------------------------------------------------------
+# HTTP/RSS long-poller
+# ---------------------------------------------------------------------------
+class HttpPollConnector(_CursorFeedClient, SourceConnector):
+    """Cursor-feed long-poller over ``http.client`` (see module docstring).
+
+    The cursor token is the decimal emission index, owned client-side: every
+    ``poll`` passes it explicitly, so a reconnect (or a rebuilt process
+    resuming from a checkpoint) just asks for the suffix again — the server
+    holds no per-client session state on the data path."""
+
+    def __init__(self, name: str, host: str, port: int, *,
+                 path: str = "/feed", ack_path: str = "/ack",
+                 timeout: float = 10.0) -> None:
+        super().__init__()
+        self.name = name
+        self.host = host
+        self.port = port
+        self.path = path
+        self.ack_path = ack_path
+        self.timeout = timeout
+        self._conn: http.client.HTTPConnection | None = None
+        self._high = 0            # highest emission index ever seen
+        self._etag: str | None = None
+        self._last_modified: str | None = None
+        self.polls_304 = 0        # conditional-GET hits (observability)
+
+    # -- SourceConnector -----------------------------------------------------
+    def connect(self, cursor: str | None) -> None:
+        self.close()                     # reconnect: drop any old session
+        try:
+            k = int(cursor) if cursor else 0
+        except ValueError as e:
+            raise ConnectorError(f"{self.name}: bad cursor {cursor!r}") from e
+        conn = http.client.HTTPConnection(self.host, self.port,
+                                          timeout=self.timeout)
+        try:
+            conn.connect()        # probe now: a refused TCP connect must
+        except OSError as e:      # surface as a reconnect, not a poll error
+            raise ConnectorError(f"{self.name}: connect: {e}") from e
+        self._conn = conn
+        if k < self._high:        # resuming behind what we already saw
+            self.redelivered_total += self._high - k
+        self._pos = k
+        self._etag = None         # stale validators must not 304 a resume
+        self._last_modified = None
+        self._end_seen = False
+
+    def _request(self, method: str, url: str,
+                 headers: dict[str, str]) -> http.client.HTTPResponse:
+        assert self._conn is not None
+        try:
+            self._conn.request(method, url, headers=headers)
+            return self._conn.getresponse()
+        except (http.client.HTTPException, OSError) as e:
+            raise ConnectorError(f"{self.name}: {method} {url}: "
+                                 f"{type(e).__name__}: {e}") from e
+
+    def poll(self, max_records: int) -> list[FlowFile]:
+        if self._conn is None:
+            raise ConnectorError(f"{self.name}: not connected")
+        if self._end_seen:
+            raise EndOfStream(self.name)
+        headers = {}
+        if self._etag is not None:
+            headers["If-None-Match"] = self._etag
+        if self._last_modified is not None:
+            headers["If-Modified-Since"] = self._last_modified
+        resp = self._request(
+            "GET", f"{self.path}?cursor={self._pos}&max={max_records}",
+            headers)
+        try:
+            if resp.status == 304:
+                resp.read()       # drain so the connection stays reusable
+                self.polls_304 += 1
+                return []
+            body = resp.read()
+        except (http.client.HTTPException, OSError) as e:
+            raise ConnectorError(f"{self.name}: read: {e}") from e
+        if resp.status != 200:
+            raise ConnectorError(
+                f"{self.name}: feed returned HTTP {resp.status}")
+        self._etag = resp.getheader("ETag") or self._etag
+        self._last_modified = (resp.getheader("Last-Modified")
+                               or self._last_modified)
+        ffs = self._consume_envelope(_parse_envelope(body, self.name))
+        self._high = max(self._high, self._pos)
+        return ffs
+
+    def ack(self, cursor: str) -> None:
+        if self._conn is None:
+            raise ConnectorError(f"{self.name}: not connected")
+        resp = self._request("POST", f"{self.ack_path}?cursor={int(cursor)}",
+                             {})
+        try:
+            resp.read()
+        except (http.client.HTTPException, OSError) as e:
+            raise ConnectorError(f"{self.name}: ack read: {e}") from e
+        if resp.status not in (200, 204):
+            raise ConnectorError(
+                f"{self.name}: ack returned HTTP {resp.status}")
+
+    def close(self) -> None:
+        if self._conn is not None:
+            try:
+                self._conn.close()
+            finally:
+                self._conn = None
+
+
+# ---------------------------------------------------------------------------
+# RFC 6455 frame codec (client side; the test server reuses it)
+# ---------------------------------------------------------------------------
+WS_GUID = "258EAFA5-E914-47DA-95CA-C5AB0DC85B11"
+
+OP_CONT, OP_TEXT, OP_BINARY, OP_CLOSE, OP_PING, OP_PONG = \
+    0x0, 0x1, 0x2, 0x8, 0x9, 0xA
+_CONTROL_OPS = (OP_CLOSE, OP_PING, OP_PONG)
+
+#: sanity cap on a declared frame length — a desynced peer (torn-frame
+#: recovery is a first-class fault mode here) must not make recv_exact
+#: buffer gigabytes off a bogus 64-bit length field
+_MAX_FRAME_BYTES = 1 << 24
+
+
+def ws_accept_key(key: str) -> str:
+    """Sec-WebSocket-Accept for a client key (RFC 6455 §4.2.2)."""
+    digest = hashlib.sha1((key + WS_GUID).encode("ascii")).digest()
+    return base64.b64encode(digest).decode("ascii")
+
+
+def ws_encode_frame(payload: bytes, opcode: int = OP_TEXT, *,
+                    mask: bool, fin: bool = True) -> bytes:
+    """Serialize one frame. Clients MUST mask (RFC 6455 §5.3); servers MUST
+    NOT."""
+    b0 = (0x80 if fin else 0) | opcode
+    n = len(payload)
+    if n < 126:
+        header = struct.pack("!BB", b0, (0x80 if mask else 0) | n)
+    elif n < 1 << 16:
+        header = struct.pack("!BBH", b0, (0x80 if mask else 0) | 126, n)
+    else:
+        header = struct.pack("!BBQ", b0, (0x80 if mask else 0) | 127, n)
+    if not mask:
+        return header + payload
+    key = os.urandom(4)
+    masked = bytes(b ^ key[i & 3] for i, b in enumerate(payload))
+    return header + key + masked
+
+
+def recv_exact(sock: socket.socket, n: int) -> bytes:
+    """Read exactly ``n`` bytes; a peer vanishing mid-message is a
+    :class:`ConnectorError` (the reconnect signal), never a short read."""
+    buf = bytearray()
+    while len(buf) < n:
+        try:
+            chunk = sock.recv(n - len(buf))
+        except OSError as e:
+            raise ConnectorError(f"socket error mid-frame: {e}") from e
+        if not chunk:
+            raise ConnectorError(
+                f"connection closed mid-frame ({len(buf)}/{n} bytes)")
+        buf += chunk
+    return bytes(buf)
+
+
+def ws_read_frame(sock: socket.socket) -> tuple[bool, int, bytes]:
+    """Read one frame → ``(fin, opcode, unmasked payload)``."""
+    b0, b1 = recv_exact(sock, 2)
+    fin = bool(b0 & 0x80)
+    opcode = b0 & 0x0F
+    masked = bool(b1 & 0x80)
+    n = b1 & 0x7F
+    if n == 126:
+        (n,) = struct.unpack("!H", recv_exact(sock, 2))
+    elif n == 127:
+        (n,) = struct.unpack("!Q", recv_exact(sock, 8))
+    if n > _MAX_FRAME_BYTES:
+        raise ConnectorError(f"frame length {n} exceeds "
+                             f"{_MAX_FRAME_BYTES} (desynced peer?)")
+    key = recv_exact(sock, 4) if masked else None
+    payload = recv_exact(sock, n) if n else b""
+    if key is not None:
+        payload = bytes(b ^ key[i & 3] for i, b in enumerate(payload))
+    return fin, opcode, payload
+
+
+def ws_read_message(sock: socket.socket, *,
+                    mask_replies: bool) -> tuple[int, bytes]:
+    """Read one complete message, reassembling continuation fragments and
+    transparently answering pings (control frames may interleave with the
+    fragments of a data message — RFC 6455 §5.4/§5.5). Returns
+    ``(data opcode, payload)``; a close frame returns ``(OP_CLOSE, code+reason)``.
+    ``mask_replies`` is True on the client side (pongs must be masked)."""
+    opcode: int | None = None
+    parts: list[bytes] = []
+    while True:
+        fin, op, payload = ws_read_frame(sock)
+        if op in _CONTROL_OPS:
+            if not fin:
+                raise ConnectorError("fragmented control frame")
+            if op == OP_PING:
+                sock.sendall(ws_encode_frame(payload, OP_PONG,
+                                             mask=mask_replies))
+                continue
+            if op == OP_PONG:
+                continue
+            return OP_CLOSE, payload
+        if opcode is None:
+            if op == OP_CONT:
+                raise ConnectorError("continuation frame with no message")
+            opcode = op
+        elif op != OP_CONT:
+            raise ConnectorError("interleaved data messages")
+        parts.append(payload)
+        if fin:
+            return opcode, b"".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# WebSocket client connector
+# ---------------------------------------------------------------------------
+class WebSocketConnector(_CursorFeedClient, SourceConnector):
+    """RFC 6455 client speaking the pull-based feed subprotocol (see module
+    docstring). The cursor token is the decimal emission index; the resume
+    point actually granted by the server (which may rewind by its
+    redelivery window — at-least-once endpoints re-send their unacked tail)
+    arrives in the post-handshake hello frame."""
+
+    def __init__(self, name: str, host: str, port: int, *,
+                 path: str = "/stream", timeout: float = 10.0) -> None:
+        super().__init__()
+        self.name = name
+        self.host = host
+        self.port = port
+        self.path = path
+        self.timeout = timeout
+        self._sock: socket.socket | None = None
+
+    # -- handshake -----------------------------------------------------------
+    def connect(self, cursor: str | None) -> None:
+        self.close()                     # reconnect: drop any old session
+        try:
+            k = int(cursor) if cursor else 0
+        except ValueError as e:
+            raise ConnectorError(f"{self.name}: bad cursor {cursor!r}") from e
+        key = base64.b64encode(os.urandom(16)).decode("ascii")
+        request = (
+            f"GET {self.path}?cursor={k} HTTP/1.1\r\n"
+            f"Host: {self.host}:{self.port}\r\n"
+            "Upgrade: websocket\r\n"
+            "Connection: Upgrade\r\n"
+            f"Sec-WebSocket-Key: {key}\r\n"
+            "Sec-WebSocket-Version: 13\r\n\r\n")
+        try:
+            sock = socket.create_connection((self.host, self.port),
+                                            timeout=self.timeout)
+        except OSError as e:
+            raise ConnectorError(f"{self.name}: connect: {e}") from e
+        try:
+            sock.sendall(request.encode("ascii"))
+            status, headers = self._read_http_response(sock)
+            if status != 101:
+                raise ConnectorError(
+                    f"{self.name}: handshake rejected: HTTP {status}")
+            if headers.get("sec-websocket-accept") != ws_accept_key(key):
+                raise ConnectorError(
+                    f"{self.name}: bad Sec-WebSocket-Accept (not a "
+                    "websocket endpoint?)")
+            # hello frame: the resume point the server actually granted
+            op, payload = ws_read_message(sock, mask_replies=True)
+            if op == OP_CLOSE:
+                raise ConnectorError(f"{self.name}: closed during hello")
+            hello = _parse_envelope(payload, self.name)
+            resumed = int(hello.get("resumed", k))
+            if resumed > k:
+                raise ConnectorError(
+                    f"{self.name}: server resumed at {resumed} "
+                    f"past requested cursor {k} (records would be lost)")
+            self.redelivered_total += k - resumed
+            self._pos = resumed
+            rem = hello.get("remaining")
+            self._remaining = int(rem) if rem is not None else None
+        except (ConnectorError, OSError, ValueError) as e:
+            sock.close()
+            if isinstance(e, ConnectorError):
+                raise
+            raise ConnectorError(f"{self.name}: handshake: {e}") from e
+        self._sock = sock
+        self._end_seen = False
+
+    @staticmethod
+    def _read_http_response(sock: socket.socket
+                            ) -> tuple[int, dict[str, str]]:
+        """Read status line + headers of the handshake response (no body —
+        a 101 never has one). Peek-then-consume in chunks: the server's
+        first frame (hello) may already sit behind the header terminator,
+        and it must stay in the socket for the frame reader."""
+        raw = bytearray()
+        while True:
+            try:
+                chunk = sock.recv(4096, socket.MSG_PEEK)
+            except OSError as e:
+                raise ConnectorError(f"handshake read: {e}") from e
+            if not chunk:
+                raise ConnectorError("connection closed during handshake")
+            i = (bytes(raw) + chunk).find(b"\r\n\r\n")
+            if i >= 0:
+                recv_exact(sock, i + 4 - len(raw))   # consume headers only
+                raw = (raw + chunk)[:i + 4]
+                break
+            recv_exact(sock, len(chunk))
+            raw += chunk
+            if len(raw) > 1 << 16:
+                raise ConnectorError("oversized handshake response")
+        head = bytes(raw).split(b"\r\n\r\n", 1)[0].decode("latin-1")
+        lines = head.split("\r\n")
+        parts = lines[0].split(None, 2)
+        if len(parts) < 2 or not parts[1].isdigit():
+            raise ConnectorError(f"malformed status line {lines[0]!r}")
+        headers = {}
+        for line in lines[1:]:
+            name, _, value = line.partition(":")
+            headers[name.strip().lower()] = value.strip()
+        return int(parts[1]), headers
+
+    # -- data path -----------------------------------------------------------
+    def _send(self, obj: dict) -> None:
+        assert self._sock is not None
+        try:
+            self._sock.sendall(ws_encode_frame(
+                json.dumps(obj, separators=(",", ":")).encode(),
+                OP_TEXT, mask=True))
+        except OSError as e:
+            raise ConnectorError(f"{self.name}: send: {e}") from e
+
+    def poll(self, max_records: int) -> list[FlowFile]:
+        if self._sock is None:
+            raise ConnectorError(f"{self.name}: not connected")
+        if self._end_seen:
+            raise EndOfStream(self.name)
+        self._send({"cmd": "poll", "max": max_records})
+        op, payload = ws_read_message(self._sock, mask_replies=True)
+        if op == OP_CLOSE:
+            raise ConnectorError(f"{self.name}: server closed the session")
+        return self._consume_envelope(_parse_envelope(payload, self.name))
+
+    def ack(self, cursor: str) -> None:
+        if self._sock is None:
+            raise ConnectorError(f"{self.name}: not connected")
+        self._send({"cmd": "ack", "cursor": int(cursor)})
+
+    def close(self) -> None:
+        sock, self._sock = self._sock, None
+        if sock is not None:
+            try:
+                sock.sendall(ws_encode_frame(struct.pack("!H", 1000),
+                                             OP_CLOSE, mask=True))
+            except OSError:
+                pass
+            sock.close()

@@ -106,6 +106,13 @@ class Processor:
     #: its acks to the final flush, so a crash replays the whole buffered
     #: window instead of losing it (at-least-once for buffering stages).
     buffers_across_triggers: bool = False
+    #: opt-in idle triggering: when set, the worker calls ``on_trigger([])``
+    #: at most every this-many seconds while the input queue is empty, so a
+    #: processor whose output depends on state *outside* its input stream
+    #: (e.g. WindowedAggregate closing windows off the fabric-wide low
+    #: watermark) can fire without waiting for the next record. ``None``
+    #: (default) keeps the engine's poll loop unchanged.
+    idle_trigger_sec: float | None = None
 
     def __init__(self, name: str) -> None:
         self.name = name
@@ -303,6 +310,8 @@ class _Worker(threading.Thread):
         # which a crash would then silently lose
         defer_acks = durable and proc.buffers_across_triggers
         deferred = 0
+        idle_every = proc.idle_trigger_sec
+        last_trigger = time.monotonic()
         while True:
             if node.pending_retries:
                 self._requeue_due_retries(conn)
@@ -322,9 +331,17 @@ class _Worker(threading.Thread):
                 upstream_done = all(u.done.is_set() for u in node.upstreams)
                 if upstream_done and len(conn) == 0:
                     break
+                if (idle_every is not None
+                        and time.monotonic() - last_trigger >= idle_every):
+                    # opt-in empty trigger: lets state-driven processors
+                    # (watermark window closes) fire while the queue is
+                    # quiet. Nothing to ack — the batch is empty.
+                    last_trigger = time.monotonic()
+                    self._process_batch(conn, [], site)
                 continue
             if durable and conn.max_retries > 0:
                 self._wait_for_penalties(batch)
+            last_trigger = time.monotonic()
             proc.stats.in_records += len(batch)
             proc.stats.in_bytes += sum(ff.size for ff in batch)
             settled = self._process_batch(conn, batch, site)
@@ -388,8 +405,11 @@ class _Worker(threading.Thread):
             # retry only when the connection opted in; a wired DLQ alone must
             # not turn every transient failure into an instant quarantine
             # (and the quarantine itself failing must escalate, not
-            # re-dead-letter into its own input forever)
-            retryable = (conn.max_retries > 0
+            # re-dead-letter into its own input forever). An EMPTY batch (an
+            # idle trigger) has no record to isolate — record-at-a-time
+            # reprocessing would run zero times and silently swallow the
+            # error, so it must escalate to the supervisor instead
+            retryable = (conn.max_retries > 0 and bool(batch)
                          and self.node is not graph._dlq_node)
             if not retryable:
                 # escalate to the supervisor — but first hand the in-flight

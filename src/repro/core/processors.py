@@ -430,7 +430,11 @@ class DeadLetterQueue(Processor):
         state = {"frontier": {str(k): v for k, v in frontier.items()},
                  "fingerprints": sorted(fingerprints)}
         self.log.append(st, b"", json.dumps(state).encode(), partition=0)
-        self.log.flush_topic(st, fsync=False)
+        # fsync before GC'ing the superseded state: dropping the old
+        # segments while the new record sits in the page cache would let a
+        # machine crash erase the redrive frontier entirely (cold path —
+        # one fsync per redrive pass)
+        self.log.flush_topic(st, fsync=True)
         # every state record but the newest is dead — GC sealed segments
         self.log.drop_segments_below(st, 0, prev_end)
 

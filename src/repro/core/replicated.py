@@ -75,7 +75,6 @@ delegates straight to its one store — the PR-2 hot path, unchanged.
 from __future__ import annotations
 
 import json
-import os
 import shutil
 import threading
 from pathlib import Path
@@ -83,7 +82,7 @@ from typing import Sequence
 
 from . import faults
 from .log import DEFAULT_SEGMENT_BYTES, PartitionedLog, route_partition
-from .logstore import LogRecord, LogStore
+from .logstore import LogRecord, LogStore, atomic_write_bytes
 
 __all__ = ["ReplicatedLog", "ReplicationError", "StaleEpoch"]
 
@@ -253,7 +252,10 @@ class ReplicatedLog(LogStore):
     def _write_meta(self, clean: bool) -> None:
         """Atomically persist per-partition (leader, epoch) + the clean
         marker. Called on every leadership change (rare) and at close.
-        Never call while holding a replica-set lock."""
+        Never call while holding a replica-set lock. Machine-crash-safe
+        (fsync'd tmp + rename + dir fsync): reopen-time authority decisions
+        hang off this file, so a torn rename target after a power loss
+        would let an equal-length zombie outvote acked data."""
         with self._admin_lock:
             parts = dict(self._meta_partitions)
             for (t, p), rset in self._sets.items():
@@ -262,9 +264,9 @@ class ReplicatedLog(LogStore):
                         parts[f"{t}/{p}"] = {"leader": rset.leader,
                                              "epoch": rset.epoch}
             self._meta_partitions = parts
-            tmp = self._meta_path.with_suffix(".tmp")
-            tmp.write_text(json.dumps({"clean": clean, "partitions": parts}))
-            os.replace(tmp, self._meta_path)
+            atomic_write_bytes(
+                self._meta_path,
+                json.dumps({"clean": clean, "partitions": parts}).encode())
 
     def _demote(self, rset: _ReplicaSet, replica: int,
                 epoch: int | None = None) -> None:

@@ -16,8 +16,9 @@ event-time clock: the minimum watermark across all *active* connectors. The
 aggregate is conservative — it stays unknown (``None``) until every active
 connector has reported at least one record, and a finished connector leaves
 the minimum (its stream can produce nothing older). Both properties keep the
-aggregate monotonic, which is what downstream consumers (window closes,
-trigger firings) rely on.
+aggregate monotonic, which is what downstream consumers rely on — the first
+one is :class:`~repro.core.windows.WindowedAggregate`, whose window closes
+fire off this clock's advancement.
 
 Both classes are thread-safe: each tracker is written by one poll loop but
 read by status/aggregation calls on other threads.
@@ -98,26 +99,35 @@ class LowWatermarkClock:
         with self._lock:
             self._finished.add(name)
 
+    def _aggregate_locked(self) -> tuple[float | None, dict[str, float | None]]:
+        """One consistent view, built under the clock lock: every tracker's
+        watermark is read exactly once and the aggregate is computed from
+        those same values. (Reading the tracker list after releasing the
+        lock could miss a concurrent ``register()`` mid-aggregation, and
+        re-reading live watermarks per field let ``snapshot()`` report a low
+        watermark inconsistent with its own ``per_source``.) Lock order is
+        clock → tracker; trackers never take the clock lock."""
+        per_source = {n: t.watermark for n, t in self._trackers.items()}
+        active = [per_source[n] for n in self._trackers
+                  if n not in self._finished]
+        if not active:
+            # every stream finished: the clock is the largest final
+            # watermark (nothing older can ever arrive)
+            finals = [w for w in per_source.values() if w is not None]
+            return (max(finals) if finals else None), per_source
+        if any(w is None for w in active):
+            return None, per_source
+        return min(active), per_source
+
     def current(self) -> float | None:
         with self._lock:
-            active = [t for n, t in self._trackers.items()
-                      if n not in self._finished]
-            if not active:
-                # every stream finished: the clock is the largest final
-                # watermark (nothing older can ever arrive)
-                finals = [t.watermark for t in self._trackers.values()
-                          if t.watermark is not None]
-                return max(finals) if finals else None
-        wms = [t.watermark for t in active]
-        if any(w is None for w in wms):
-            return None
-        return min(wms)
+            return self._aggregate_locked()[0]
 
     def snapshot(self) -> dict:
         with self._lock:
-            names = list(self._trackers)
-        return {
-            "low_watermark": self.current(),
-            "per_source": {n: self._trackers[n].watermark for n in names},
-            "finished": sorted(self._finished),
-        }
+            low, per_source = self._aggregate_locked()
+            return {
+                "low_watermark": low,
+                "per_source": per_source,
+                "finished": sorted(self._finished),
+            }

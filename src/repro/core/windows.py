@@ -1,0 +1,234 @@
+"""Watermark-driven event-time windows (paper §II/III: the AlertMix-style
+consumer of the fabric's event-time clock).
+
+PR 4 built the clock — per-connector :class:`~repro.core.watermark
+.WatermarkTracker`\\ s aggregated by :class:`~repro.core.watermark
+.LowWatermarkClock` — but nothing consumed it. :class:`WindowedAggregate`
+is the first consumer: a processor that buckets records into tumbling
+event-time windows and **closes a window only when the fabric-wide low
+watermark passes its end** — the point after which no on-time record for
+that window can still arrive from *any* active connector. Closes therefore
+fire off ``LowWatermarkClock`` advancement, not wall time and not record
+arrival: the flow engine's idle triggers (``Processor.idle_trigger_sec``)
+re-trigger the processor while its own input is quiet, so windows close as
+soon as the *other* connectors' progress advances the clock.
+
+Records that arrive for an already-closed window are emitted on the
+``late`` relationship (wire it to the late landing topic the acquisition
+layer already maintains) instead of silently reopening or corrupting the
+aggregate — same policy the runtime applies per-connector, now enforced at
+the aggregation stage.
+
+One subtlety: the clock is read *live* (trackers advance at admission
+time, and a finished connector leaves the aggregate immediately), so it
+can outrun records still in flight between admission and this stage —
+closing on the raw clock would mark whole queues late, worst of all the
+drained-but-undelivered tail of a connector that just finished. Closes
+are therefore additionally gated on **per-source stage frontiers**: the
+newest event time this stage has seen from each source (records carry
+their connector's name in the ``source`` attribute; interior queues are
+FIFO, so a source's frontier trails its in-flight suffix by at most the
+admission disorder bound). A source stops gating once the clock marks it
+finished *and* its frontier has reached its final watermark — i.e. its
+tail has drained through this stage. Sources the stage has not seen yet
+cannot gate by observation alone (the gate would fail open for a small
+feed that finishes before any of its records traverse to this stage), so
+``sources=(...)`` declares the connectors expected to feed the stage:
+a declared-but-unseen source holds every close until its first record
+arrives — while connectors that never route here (a separate event sink's
+feed) are simply left undeclared and only bound the clock while active.
+Declared names must be the clock's connector names (which the news
+pipeline also stamps as each record's ``source`` attribute); declaring a
+name the clock doesn't know raises at the first close attempt instead of
+silently wedging closes forever, and with a declaration in place ONLY the
+declared sources gate — records arriving under an unexpected source name
+route late (visible) rather than pinning the frontier (invisible).
+The gate only ever *delays* a close, so the invariant stands: a close's
+``window.close.wm`` is at or behind the fabric-wide low watermark.
+
+Crash safety composes with the WAL: ``buffers_across_triggers`` defers
+durable-connection acks to the final flush, so a crash replays every record
+still buffered in open windows (at-least-once — a window that already
+closed may be re-emitted after a crash; one that never closed cannot be
+lost).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable
+
+from .acquisition import default_event_ts
+from .flowfile import FlowFile
+from .processor import Processor, REL_SUCCESS
+from .watermark import LowWatermarkClock
+
+__all__ = ["WindowedAggregate"]
+
+#: attributes stamped on every closed-window FlowFile
+ATTR_WINDOW_START = "window.start"
+ATTR_WINDOW_END = "window.end"
+ATTR_WINDOW_COUNT = "window.count"
+#: the low watermark that authorized the close — or ``"final"`` when the
+#: window was flushed at end-of-stream (every source finished; the clock
+#: can no longer advance past it)
+ATTR_WINDOW_CLOSE_WM = "window.close.wm"
+
+
+class WindowedAggregate(Processor):
+    """Tumbling event-time windows closed by the low watermark.
+
+    Each record is bucketed by ``event_ts_fn`` (default: the ``event.ts``
+    attribute stamped by the acquisition layer) into
+    ``[k*window_sec, (k+1)*window_sec)``. On every trigger — including the
+    flow engine's idle triggers while the input is quiet — the processor
+    reads ``clock.current()`` and emits one merged FlowFile per window
+    whose end is at or behind it, stamped with
+    ``window.start/end/count/close.wm``. The merged content is the
+    records' contents joined by ``separator`` in event-time order
+    (``aggregate_fn`` overrides to produce any summary payload).
+
+    The invariant the acceptance scenario checks: a window close carries
+    ``window.close.wm`` ≥ ``window.end`` — closes fire *only at or behind*
+    the low watermark (or at final flush, once every stream finished).
+    """
+
+    relationships = (REL_SUCCESS, "late")
+    buffers_across_triggers = True     # durable inputs defer acks (see base)
+
+    def __init__(self, name: str, clock: LowWatermarkClock,
+                 window_sec: float, *,
+                 sources: "tuple[str, ...] | None" = None,
+                 event_ts_fn: Callable[[FlowFile], float] = default_event_ts,
+                 aggregate_fn: Callable[[list[tuple[float, FlowFile]]],
+                                        bytes] | None = None,
+                 separator: bytes = b"\n",
+                 idle_trigger_sec: float = 0.02) -> None:
+        super().__init__(name)
+        if window_sec <= 0:
+            raise ValueError("window_sec must be positive")
+        self.clock = clock
+        self.window_sec = float(window_sec)
+        #: connectors expected to feed this stage (``source`` attribute
+        #: values): declared-but-unseen sources hold closes — see module
+        #: docstring. None = gate only on sources already observed.
+        self.expected_sources = sources
+        self.event_ts_fn = event_ts_fn
+        self.aggregate_fn = aggregate_fn
+        self.separator = separator
+        #: re-trigger cadence while the input is idle, so closes fire off
+        #: clock advancement driven by other parts of the fabric
+        self.idle_trigger_sec = idle_trigger_sec
+        #: open windows: start -> [(event_ts, record), ...]
+        self._open: dict[float, list[tuple[float, FlowFile]]] = {}
+        #: strictly increasing close frontier: every window with
+        #: ``end <= _closed_through`` has been closed (or was never opened
+        #: and is late by definition)
+        self._closed_through = float("-inf")
+        #: newest event time that reached THIS stage, per source — the
+        #: close gate's second input (see module docstring)
+        self._stage_frontiers: dict[str, float] = {}
+        self.windows_closed = 0
+        self.late_records = 0
+
+    # -- bucketing -----------------------------------------------------------
+    def _window_start(self, ts: float) -> float:
+        return (ts // self.window_sec) * self.window_sec
+
+    def _bundle(self, start: float, wm: float | str) -> FlowFile:
+        entries = self._open.pop(start)
+        entries.sort(key=lambda e: e[0])        # event-time order
+        if self.aggregate_fn is not None:
+            content = self.aggregate_fn(entries)
+        else:
+            content = self.separator.join(ff.content for _, ff in entries)
+        first = entries[0][1]
+        self.windows_closed += 1
+        return first.derive(content=content, attributes={
+            ATTR_WINDOW_START: f"{start:.6f}",
+            ATTR_WINDOW_END: f"{start + self.window_sec:.6f}",
+            ATTR_WINDOW_COUNT: str(len(entries)),
+            ATTR_WINDOW_CLOSE_WM: (wm if isinstance(wm, str)
+                                   else f"{wm:.6f}"),
+        })
+
+    # -- trigger path --------------------------------------------------------
+    def on_trigger(self, batch: list[FlowFile]
+                   ) -> Iterable[tuple[str, FlowFile]]:
+        frontiers = self._stage_frontiers
+        for ff in batch:
+            ts = self.event_ts_fn(ff)
+            src = ff.attributes.get("source", "")
+            if ts > frontiers.get(src, float("-inf")):
+                frontiers[src] = ts
+            start = self._window_start(ts)
+            if start + self.window_sec <= self._closed_through:
+                # its window already closed: a straggler, never merged
+                self.late_records += 1
+                yield "late", ff.with_attributes(**{
+                    "window.late": "1",
+                    ATTR_WINDOW_START: f"{start:.6f}"})
+                continue
+            self._open.setdefault(start, []).append((ts, ff))
+        frontier = self._close_frontier()
+        if frontier is None or frontier <= self._closed_through:
+            return
+        # the frontier advanced: close every window it passed, oldest first
+        for start in sorted(self._open):
+            if start + self.window_sec <= frontier:
+                yield REL_SUCCESS, self._bundle(start, frontier)
+        # advance the frontier even past empty windows: a record for any
+        # window it passed is late from now on, buffered or not
+        self._closed_through = frontier
+
+    def _close_frontier(self) -> float | None:
+        """``min(low watermark, stage frontier of every source still
+        gating)`` — see the module docstring. A source releases its gate
+        once the clock marks it finished AND the stage has seen its final
+        watermark (the in-flight tail drained, up to the disorder bound);
+        a declared-but-unseen source gates at ``-inf`` (its whole stream
+        is still in flight)."""
+        snap = self.clock.snapshot()
+        wm = snap["low_watermark"]
+        if wm is None or not self._stage_frontiers:
+            return None
+        finished = snap["finished"]
+        per_source = snap["per_source"]
+        if self.expected_sources is not None:
+            unknown = [s for s in self.expected_sources
+                       if s not in per_source]
+            if unknown:
+                # a typo'd declaration would gate at -inf forever — a
+                # silent wedge; fail loudly at the first close attempt
+                raise ValueError(
+                    f"{self.name}: declared sources {unknown} are not "
+                    f"clock-registered connectors {sorted(per_source)}")
+            gates = {s: self._stage_frontiers.get(s, float("-inf"))
+                     for s in self.expected_sources}
+        else:
+            gates = dict(self._stage_frontiers)
+        frontier = wm
+        for src, seen in gates.items():
+            if src in finished:
+                final_wm = per_source.get(src)
+                # released once its tail drained — or immediately when it
+                # finished without ever producing a watermark (an empty
+                # stream has no tail to wait for; holding it would gate
+                # every close at -inf forever)
+                if final_wm is None or seen >= final_wm:
+                    continue
+            frontier = min(frontier, seen)
+        return frontier
+
+    def final_flush(self) -> Iterable[tuple[str, FlowFile]]:
+        """End of stream: every source finished, so the clock can never
+        advance past the remaining windows — flush them, marked final."""
+        for start in sorted(self._open):
+            yield REL_SUCCESS, self._bundle(start, "final")
+
+    # -- observability --------------------------------------------------------
+    def snapshot_windows(self) -> dict:
+        return {"open_windows": len(self._open),
+                "buffered_records": sum(len(v) for v in self._open.values()),
+                "closed_through": self._closed_through,
+                "stage_frontiers": dict(self._stage_frontiers),
+                "windows_closed": self.windows_closed,
+                "late_records": self.late_records}

@@ -14,9 +14,10 @@ from ..core import (ConsumerGroup, DeadLetterQueue, DetectDuplicate,
                     PartitionedLog, PublishToLog, ReplicatedLog,
                     RestartPolicy, RouteOnAttribute,
                     RssAggregatorSource, FirehoseSource, Source,
-                    WebSocketSource)
+                    WebSocketSource, WindowedAggregate)
 from ..core.acquisition import (AcquisitionRuntime, ConnectorPolicy,
-                                SimulatedEndpoint)
+                                SimulatedEndpoint, SourceConnector)
+from ..core.net_connectors import HttpPollConnector, WebSocketConnector
 from ..core.delivery import Consumer
 from .loader import StreamingDataLoader
 
@@ -40,10 +41,12 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
                         poison_rate: float = 0.0,
                         replicas: int = 1,
                         acks: str = "all",
-                        live: bool = False,
+                        live: bool | str = False,
                         live_policy: ConnectorPolicy | None = None,
                         ooo_window: int = 4,
-                        redelivery: int = 4
+                        redelivery: int = 4,
+                        socket_endpoints: dict[str, tuple] | None = None,
+                        window_sec: float | None = None
                         ) -> tuple[FlowGraph, LogStore]:
     """The paper §IV case study: returns (flow, log) with topic ``articles``
     (clean, deduped, enriched news) and topic ``events`` (websocket feed).
@@ -70,8 +73,36 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
     connector watermarks; late records land in topic ``late`` via a
     dedicated sink. Run a live flow with
     ``flow.acquisition.run_with_flow(timeout)`` instead of
-    ``flow.run_to_completion``."""
+    ``flow.run_to_completion``.
+
+    ``live="socket"`` goes wire-real: the same topology is fed by the
+    first-class network connectors (``core/net_connectors.py``) — an
+    HTTP/RSS cursor-feed long-poller for the article sources and an RFC
+    6455 WebSocket client for the event feed — against the endpoints named
+    in ``socket_endpoints`` (``{"big-rss": ("http", host, port),
+    "twitter": ("http", host, port), "websocket": ("ws", host, port)}``;
+    the in-repo servers live in ``tests/net_fixtures.py``). Everything
+    else — runtime, reconnect backoff, checkpoints, watermarks, WAL —
+    is byte-for-byte the machinery the simulated endpoints run on. Note
+    the stream *content* then comes from the remote servers: the size
+    knobs (``n_rss``/``n_firehose``/``n_ws``) and ``ooo_window``/
+    ``redelivery`` only shape the in-process generators and simulated
+    endpoints, so in socket mode they serve ground-truth bookkeeping
+    (``expected_clean_doc_ids``) and must match the parameters the feed
+    servers were built with (see ``bench_socket_acquisition._build``).
+
+    ``window_sec`` (any live mode; defaults to 64 event-time seconds when
+    ``live="socket"``) adds the watermark-driven aggregation stage: a
+    :class:`~repro.core.windows.WindowedAggregate` fans out from the
+    enrich stage, closes tumbling event-time windows only when the
+    fabric-wide low watermark passes them, lands them in topic
+    ``windows`` and routes stragglers to the existing ``late`` topic."""
     root = Path(root)
+    if window_sec and not live:
+        raise ValueError(
+            "window_sec requires a live acquisition mode (live=True or "
+            "live='socket'): the window stage closes off the event-time "
+            "clock the acquisition runtime maintains")
     log: LogStore
     if replicas > 1:
         log = ReplicatedLog(root / "log", replicas=replicas, acks=acks)
@@ -147,7 +178,15 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
         ingress_kw = {"durable": log} if durable else {}
         if max_retries:
             ingress_kw["max_retries"] = max_retries
-        for ep, dest in (
+        if live == "socket":
+            connectors = [(_socket_connector(n, socket_endpoints), d)
+                          for n, d in (("big-rss", parser),
+                                       ("twitter", parser),
+                                       ("websocket", pub_events))]
+            if window_sec is None:
+                window_sec = 64.0
+        else:
+            connectors = [
                 (SimulatedEndpoint("big-rss", rss_gen, total=n_rss,
                                    ooo_window=ooo_window,
                                    redelivery=redelivery), parser),
@@ -156,9 +195,29 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
                                    redelivery=redelivery), parser),
                 (SimulatedEndpoint("websocket", ws_gen, total=n_ws,
                                    ooo_window=ooo_window,
-                                   redelivery=redelivery), pub_events)):
+                                   redelivery=redelivery), pub_events)]
+        for ep, dest in connectors:
             rt.add_connector(ep, dest, policy=pol, late_dest=pub_late,
                              **ingress_kw)
+        if window_sec:
+            # watermark-driven aggregation stage: tumbling event-time
+            # windows over the enriched article stream, closed only when
+            # the fabric-wide low watermark passes them (idle-triggered,
+            # so closes fire off OTHER connectors' progress too)
+            log.create_topic("windows", partitions=1)
+            pub_windows = g.add(PublishToLog("pub-windows", log, "windows"),
+                                **add_kw)
+            # the two article feeds are declared so a feed that finishes
+            # before its records traverse to the window stage still gates
+            # closes; the websocket connector routes to pub-events and is
+            # deliberately NOT declared (it only bounds the clock while
+            # active)
+            windows = g.add(WindowedAggregate(
+                "windows", rt.clock, window_sec,
+                sources=("big-rss", "twitter")), **add_kw)
+            g.connect(enrich, "success", windows, **conn_kw)
+            g.connect(windows, "success", pub_windows, **conn_kw)
+            g.connect(windows, "late", pub_late)
     g.connect(parser, "success", dedup, **conn_kw)
     g.connect(dedup, "unique", enrich, **conn_kw)
     g.connect(enrich, "success", route, **conn_kw)
@@ -169,6 +228,23 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
                                     topic=dead_letter_topic))
         g.route_dead_letters_to(dlq)
     return g, log
+
+
+def _socket_connector(name: str,
+                      endpoints: dict[str, tuple] | None) -> SourceConnector:
+    """Build the wire-real connector for one named case-study source from a
+    ``{"<name>": ("http"|"ws", host, port)}`` endpoint map."""
+    if not endpoints or name not in endpoints:
+        raise ValueError(
+            f"live='socket' needs socket_endpoints[{name!r}] = "
+            "('http'|'ws', host, port); start the in-repo feed servers "
+            "(tests/net_fixtures.py) and pass their addresses")
+    kind, host, port = endpoints[name]
+    if kind == "http":
+        return HttpPollConnector(name, host, int(port))
+    if kind == "ws":
+        return WebSocketConnector(name, host, int(port))
+    raise ValueError(f"unknown socket endpoint kind {kind!r} for {name!r}")
 
 
 def arm_news_chaos(*, crash_every: int = 500, source_nth: int = 4,

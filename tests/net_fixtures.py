@@ -1,0 +1,376 @@
+"""In-repo localhost feed servers for the wire-real connector tests and the
+``bench_socket_acquisition`` acceptance scenario.
+
+Both serve the *canonical emission order* of a replayable generator
+(``repro.core.acquisition.emission_order`` — the same seeded block
+permutation ``SimulatedEndpoint`` uses), with ``event.ts`` stamped from the
+canonical stream index, so everything a socket connector delivers can be
+checked against byte-identical in-process expectations.
+
+``HttpFeedServer`` — ``http.server``-based paginated cursor feed:
+    ``GET /feed?cursor=K&max=N`` → JSON envelope (see
+    ``repro.core.net_connectors``), with ``ETag`` / ``Last-Modified``
+    validators and a genuine ``304 Not Modified`` path when the client's
+    conditional GET matches and the feed has nothing past its cursor.
+    ``POST /ack?cursor=K`` records the durably-admitted index.
+
+``WsFeedServer`` — threaded RFC 6455 server for the pull-based feed
+    subprotocol: real handshake, unmask-validating frame reads, optional
+    response fragmentation, ping injection, and reconnect redelivery (a
+    session opened at cursor K resumes from ``max(acked, K - redelivery)``
+    like an at-least-once endpoint re-sending its unacked tail).
+
+Fault knobs (all deterministic counters, no randomness):
+    ``flap_every=N``   — every Nth data request/poll drops the connection
+                         *mid-message* (half an HTTP body / half a frame),
+                         exercising torn-read reconnects.
+    ``available``      — serve only the first K records for now (a feed
+                         that hasn't grown yet → empty polls / 304s);
+                         ``release_all()`` opens the rest.
+    ``bad_cursor_responses`` — queue of bogus cursor values the next feed
+                         responses will carry (protocol-violation tests).
+"""
+from __future__ import annotations
+
+import json
+import socket
+import threading
+import time
+from email.utils import formatdate
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Callable, Iterator
+from urllib.parse import parse_qs, urlparse
+
+from repro.core.acquisition import emission_order
+from repro.core.flowfile import FlowFile
+from repro.core.net_connectors import (OP_CLOSE, OP_PING, OP_TEXT,
+                                       flowfile_to_wire_item, ws_accept_key,
+                                       ws_encode_frame, ws_read_message)
+
+DEFAULT_BASE_TS = 1_534_660_000.0
+
+
+class FeedData:
+    """A fully materialized emission stream: ``items[k]`` is the wire item
+    at emission index ``k`` (content base64-framed, attributes carrying the
+    canonical ``event.ts``). Mutable server-side state (``available``,
+    ``acked``) lives here so it survives client crashes — the servers stay
+    up while the acquiring process "dies" and rebuilds."""
+
+    def __init__(self, generator_fn: Callable[[], Iterator[FlowFile]], *,
+                 ooo_window: int = 0, seed: int = 0,
+                 base_ts: float = DEFAULT_BASE_TS,
+                 ts_step: float = 1.0) -> None:
+        self.items: list[dict] = []
+        for idx, ff in emission_order(generator_fn, 0,
+                                      ooo_window=ooo_window, seed=seed):
+            item = flowfile_to_wire_item(idx, ff)
+            item["a"]["event.ts"] = f"{base_ts + idx * ts_step:.6f}"
+            self.items.append(item)
+        self.total = len(self.items)
+        self.available = self.total      # shrink to model a not-yet-grown feed
+        self.acked = 0
+        self.version = 0                 # bumped when `available` changes
+        self.mtime = time.time()
+        self.lock = threading.Lock()
+
+    def release(self, n: int | None = None) -> None:
+        """Grow the visible feed (None = everything)."""
+        with self.lock:
+            self.available = self.total if n is None else min(self.total, n)
+            self.version += 1
+            self.mtime = time.time()
+
+    def slice(self, cursor: int, max_records: int) -> dict:
+        """The feed envelope for ``[cursor, cursor+max)`` of what's
+        available."""
+        with self.lock:
+            avail = self.available
+        items = self.items[cursor:min(cursor + max_records, avail)]
+        return {"items": items,
+                "cursor": str(cursor + len(items)),
+                "end": cursor + len(items) >= self.total
+                and avail >= self.total,
+                "remaining": max(0, avail - cursor - len(items))}
+
+    def etag(self) -> str:
+        with self.lock:
+            return f'"{self.available}.{self.version}"'
+
+
+# ---------------------------------------------------------------------------
+# HTTP cursor-feed server
+# ---------------------------------------------------------------------------
+class HttpFeedServer:
+    """``ThreadingHTTPServer`` wrapper; ``port`` is chosen by the OS."""
+
+    def __init__(self, feed: FeedData, *, flap_every: int = 0,
+                 host: str = "127.0.0.1") -> None:
+        self.feed = feed
+        self.flap_every = flap_every
+        self.requests = 0
+        self.bad_cursor_responses: list[object] = []
+        self._counter_lock = threading.Lock()
+        outer = self
+
+        class Handler(BaseHTTPRequestHandler):
+            protocol_version = "HTTP/1.1"
+
+            def log_message(self, *a):       # quiet
+                pass
+
+            def _flap_due(self) -> bool:
+                with outer._counter_lock:
+                    outer.requests += 1
+                    return (outer.flap_every
+                            and outer.requests % outer.flap_every == 0)
+
+            def do_GET(self):
+                url = urlparse(self.path)
+                if url.path != "/feed":
+                    self.send_error(404)
+                    return
+                q = parse_qs(url.query)
+                try:
+                    cursor = int(q.get("cursor", ["0"])[0])
+                    max_records = int(q.get("max", ["256"])[0])
+                except ValueError:
+                    self.send_error(400)
+                    return
+                if self._flap_due():
+                    self._drop_mid_response()
+                    return
+                feed = outer.feed
+                etag = feed.etag()
+                mtime = formatdate(feed.mtime, usegmt=True)
+                env = feed.slice(cursor, max_records)
+                if (not env["items"] and not env["end"]
+                        and (self.headers.get("If-None-Match") == etag
+                             or self.headers.get("If-Modified-Since")
+                             == mtime)):
+                    self.send_response(304)
+                    self.send_header("ETag", etag)
+                    self.send_header("Content-Length", "0")
+                    self.end_headers()
+                    return
+                with outer._counter_lock:
+                    if outer.bad_cursor_responses:
+                        env["cursor"] = outer.bad_cursor_responses.pop(0)
+                body = json.dumps(env).encode()
+                self.send_response(200)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("ETag", etag)
+                self.send_header("Last-Modified", mtime)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def _drop_mid_response(self):
+                """Start a plausible response, then kill the socket — the
+                client sees a torn body / short read, not a clean error."""
+                try:
+                    self.wfile.write(b"HTTP/1.1 200 OK\r\n"
+                                     b"Content-Length: 1000\r\n\r\n{\"it")
+                    self.wfile.flush()
+                except OSError:
+                    pass
+                self.close_connection = True
+                try:
+                    self.connection.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+
+            def do_POST(self):
+                url = urlparse(self.path)
+                if url.path != "/ack":
+                    self.send_error(404)
+                    return
+                try:
+                    cursor = int(parse_qs(url.query)["cursor"][0])
+                except (KeyError, ValueError):
+                    self.send_error(400)
+                    return
+                feed = outer.feed
+                with feed.lock:
+                    feed.acked = max(feed.acked, min(cursor, feed.total))
+                self.send_response(204)
+                self.send_header("Content-Length", "0")
+                self.end_headers()
+
+        self._server = ThreadingHTTPServer((host, 0), Handler)
+        self._server.daemon_threads = True
+        self._thread = threading.Thread(target=self._server.serve_forever,
+                                        name="http-feed", daemon=True)
+
+    @property
+    def host(self) -> str:
+        return self._server.server_address[0]
+
+    @property
+    def port(self) -> int:
+        return self._server.server_address[1]
+
+    def start(self) -> "HttpFeedServer":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        self._thread.join(timeout=5)
+
+
+# ---------------------------------------------------------------------------
+# WebSocket feed server
+# ---------------------------------------------------------------------------
+class WsFeedServer:
+    """Threaded RFC 6455 server for the pull-based feed subprotocol (one
+    thread per session; sessions are sequential request/response so no
+    per-session locking is needed beyond the shared ``FeedData``)."""
+
+    def __init__(self, feed: FeedData, *, redelivery: int = 0,
+                 flap_every: int = 0, fragment_frames: int = 1,
+                 ping_every: int = 0, host: str = "127.0.0.1") -> None:
+        self.feed = feed
+        self.redelivery = redelivery
+        self.flap_every = flap_every
+        self.fragment_frames = max(1, fragment_frames)
+        self.ping_every = ping_every
+        self.polls = 0
+        self.sessions = 0
+        self._counter_lock = threading.Lock()
+        self._listener = socket.create_server((host, 0))
+        self._listener.settimeout(0.2)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._accept_loop,
+                                        name="ws-feed", daemon=True)
+
+    @property
+    def host(self) -> str:
+        return self._listener.getsockname()[0]
+
+    @property
+    def port(self) -> int:
+        return self._listener.getsockname()[1]
+
+    def start(self) -> "WsFeedServer":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=5)
+        self._listener.close()
+
+    # -- internals -----------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            threading.Thread(target=self._serve_session, args=(conn,),
+                             daemon=True).start()
+
+    def _serve_session(self, conn: socket.socket) -> None:
+        conn.settimeout(30.0)
+        try:
+            cursor = self._handshake(conn)
+            if cursor is None:
+                return
+            with self._counter_lock:
+                self.sessions += 1
+            feed = self.feed
+            with feed.lock:
+                pos = max(feed.acked, cursor - self.redelivery)
+            pos = min(pos, cursor)
+            self._send_json(conn, {"resumed": pos,
+                                   "remaining": feed.total - pos})
+            while not self._stop.is_set():
+                op, payload = ws_read_message(conn, mask_replies=False)
+                if op == OP_CLOSE:
+                    return
+                req = json.loads(payload)
+                if req.get("cmd") == "ack":
+                    with feed.lock:
+                        feed.acked = max(feed.acked,
+                                         min(int(req["cursor"]), feed.total))
+                    continue
+                if req.get("cmd") != "poll":
+                    return
+                with self._counter_lock:
+                    self.polls += 1
+                    polls = self.polls
+                if self.ping_every and polls % self.ping_every == 0:
+                    conn.sendall(ws_encode_frame(b"hb", OP_PING, mask=False))
+                env = feed.slice(pos, int(req.get("max", 256)))
+                pos = int(env["cursor"])
+                if (self.flap_every and polls % self.flap_every == 0):
+                    self._drop_mid_frame(conn, env)
+                    return
+                self._send_json(conn, env)
+        except Exception:      # noqa: BLE001 — session dies, client reconnects
+            pass
+        finally:
+            conn.close()
+
+    def _handshake(self, conn: socket.socket) -> int | None:
+        raw = bytearray()
+        while b"\r\n\r\n" not in raw:
+            chunk = conn.recv(4096)
+            if not chunk or len(raw) > 1 << 16:
+                return None
+            raw += chunk
+        head = raw.split(b"\r\n\r\n", 1)[0].decode("latin-1")
+        lines = head.split("\r\n")
+        target = lines[0].split()[1] if len(lines[0].split()) > 1 else "/"
+        headers = {}
+        for line in lines[1:]:
+            name, _, value = line.partition(":")
+            headers[name.strip().lower()] = value.strip()
+        key = headers.get("sec-websocket-key")
+        if (headers.get("upgrade", "").lower() != "websocket"
+                or key is None):
+            conn.sendall(b"HTTP/1.1 400 Bad Request\r\n"
+                         b"Content-Length: 0\r\n\r\n")
+            return None
+        q = parse_qs(urlparse(target).query)
+        try:
+            cursor = int(q.get("cursor", ["0"])[0])
+        except ValueError:
+            cursor = 0
+        conn.sendall((
+            "HTTP/1.1 101 Switching Protocols\r\n"
+            "Upgrade: websocket\r\n"
+            "Connection: Upgrade\r\n"
+            f"Sec-WebSocket-Accept: {ws_accept_key(key)}\r\n\r\n"
+        ).encode("ascii"))
+        return cursor
+
+    def _send_json(self, conn: socket.socket, obj: dict) -> None:
+        payload = json.dumps(obj, separators=(",", ":")).encode()
+        nfrag = self.fragment_frames
+        if nfrag <= 1 or len(payload) < nfrag:
+            conn.sendall(ws_encode_frame(payload, OP_TEXT, mask=False))
+            return
+        # deliberate fragmentation: first frame TEXT/FIN=0, then
+        # continuations, last one FIN=1 (RFC 6455 §5.4)
+        step = (len(payload) + nfrag - 1) // nfrag
+        chunks = [payload[i:i + step] for i in range(0, len(payload), step)]
+        frames = [ws_encode_frame(c, OP_TEXT if i == 0 else 0x0, mask=False,
+                                  fin=(i == len(chunks) - 1))
+                  for i, c in enumerate(chunks)]
+        conn.sendall(b"".join(frames))
+
+    def _drop_mid_frame(self, conn: socket.socket, env: dict) -> None:
+        """Send half of an otherwise-valid response frame, then reset."""
+        frame = ws_encode_frame(json.dumps(env).encode(), OP_TEXT,
+                                mask=False)
+        try:
+            conn.sendall(frame[:max(2, len(frame) // 2)])
+            conn.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                            b"\x01\x00\x00\x00\x00\x00\x00\x00")
+        except OSError:
+            pass

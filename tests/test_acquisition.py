@@ -69,6 +69,55 @@ def test_low_watermark_clock_aggregation():
         clock.register("a")
 
 
+def test_low_watermark_clock_snapshot_internally_consistent():
+    """Regression: ``current()``/``snapshot()`` used to read the tracker
+    list after releasing the clock lock, so a concurrent ``register()``
+    could be missed mid-aggregation and a snapshot could pair a low
+    watermark with ``per_source`` values it wasn't computed from. Hammer
+    registrations + observations against a snapshot loop and recompute the
+    aggregate from each snapshot's own fields — they must always agree."""
+    import threading
+
+    clock = LowWatermarkClock()
+    stop = threading.Event()
+
+    def churn():
+        i = 0
+        while not stop.is_set():
+            t = clock.register(f"s{i}", lateness=0.0)
+            for k in range(5):
+                t.observe(1000.0 * i + k)
+            if i % 3 == 0:
+                clock.mark_finished(f"s{i}")
+            i += 1
+
+    th = threading.Thread(target=churn, daemon=True)
+    th.start()
+    try:
+        checks = 0
+        import time as _time
+        deadline = _time.monotonic() + 1.0
+        while _time.monotonic() < deadline:
+            snap = clock.snapshot()
+            per, fin = snap["per_source"], set(snap["finished"])
+            active = [w for n, w in per.items() if n not in fin]
+            if not per:
+                expect = None
+            elif not active:
+                finals = [w for w in per.values() if w is not None]
+                expect = max(finals) if finals else None
+            elif any(w is None for w in active):
+                expect = None
+            else:
+                expect = min(active)
+            assert snap["low_watermark"] == expect, snap
+            checks += 1
+        assert checks > 100
+    finally:
+        stop.set()
+        th.join(timeout=5)
+
+
 # ---------------------------------------------------------------------------
 # simulated endpoint (network-like, deterministic)
 # ---------------------------------------------------------------------------
@@ -246,6 +295,10 @@ def test_runtime_exhausted_reconnect_budget_fails_connector(tmp_path):
     g.join(timeout=10)
     st = g.status()["acquisition"]["connectors"]["ws"]
     assert st["state"] == "FAILED" and len(sink.items) == 0
+    # a FAILED connector must release the event-time clock like a finished
+    # one — leaving it "active" would pin the fabric-wide low watermark
+    # forever and stall every watermark-driven consumer
+    assert "ws" in rt.clock.snapshot()["finished"]
     log.close()
 
 

@@ -244,3 +244,74 @@ def test_offset_store_atomic_persistence(tmp_path):
     s2 = OffsetStore(tmp_path / "offsets.json")
     assert s2.get("g", "t", 0) == 5 and s2.get("g", "t", 1) == 7
     assert s2.get("g", "t", 9) == 0   # unknown partition defaults to 0
+
+
+def test_offset_store_commit_fsyncs_before_rename(tmp_path, monkeypatch):
+    """Machine-crash durability regression: commit must fsync the tmp fd
+    BEFORE the rename lands (and the parent dir after) — a bare
+    write+rename can leave a torn rename target after a power loss, losing
+    every group's committed offsets. The fsync ordering is the observable
+    contract, so assert on the call sequence."""
+    import os as _os
+    events = []
+    real_fsync, real_replace = _os.fsync, _os.replace
+    monkeypatch.setattr(_os, "fsync",
+                        lambda fd: (events.append("fsync"), real_fsync(fd))[1])
+    monkeypatch.setattr(
+        _os, "replace",
+        lambda a, b: (events.append("rename"), real_replace(a, b))[1])
+    s = OffsetStore(tmp_path / "offsets.json")
+    s.commit("g", "t", {0: 5})
+    # tmp-file fsync strictly before the rename, dir fsync after
+    assert events.index("fsync") < events.index("rename")
+    assert "fsync" in events[events.index("rename"):]
+    # fsync=False keeps atomicity but skips both syncs (hot-path opt-out)
+    events.clear()
+    s_fast = OffsetStore(tmp_path / "fast.json", fsync=False)
+    s_fast.commit("g", "t", {0: 5})
+    assert events == ["rename"]
+    assert OffsetStore(tmp_path / "fast.json").get("g", "t", 0) == 5
+
+
+def test_restore_after_rebalance_raises_instead_of_silent_drop(tmp_log):
+    """Regression: restore() used to silently drop offsets for partitions
+    not currently assigned — after a rebalance an exactly-once loader's
+    checkpoint quietly replayed from the committed store instead. Now the
+    mismatch is loud."""
+    fill(tmp_log, n=40, partitions=4)
+    g = ConsumerGroup(tmp_log, "t", "g1")
+    c = g.add_member("m0")
+    while c.poll(max_records=16):
+        pass
+    ckpt = c.positions()                  # covers all 4 partitions
+    g.add_member("m1")                    # rebalance: m0 keeps only 2
+    assert len(c.assignment) == 2
+    with pytest.raises(ValueError, match="not in this member's assignment"):
+        c.restore(ckpt)
+    # the still-assigned positions were NOT touched by the failed restore
+    # path before the raise happened (raise-first ordering)
+    assert set(c.positions()) == set(c.assignment)
+
+
+def test_restore_after_rebalance_routes_orphans_through_offset_store(tmp_log):
+    """on_unassigned='commit': orphaned checkpoint offsets land in the
+    group's offset store, so the next member to own those partitions
+    resumes from the checkpoint, not from zero."""
+    fill(tmp_log, n=40, partitions=4)
+    g = ConsumerGroup(tmp_log, "t", "g1")
+    c = g.add_member("m0")
+    while c.poll(max_records=16):
+        pass
+    ckpt = c.positions()                  # all partitions at offset 10
+    g.add_member("m1")                    # m0 keeps {0,1}; {2,3} orphaned
+    c.restore(ckpt, on_unassigned="commit")
+    assert c.positions() == {p: ckpt[p] for p in c.assignment}
+    for p in (2, 3):
+        assert g.offsets.get("g1", "t", p) == ckpt[p]
+    # a rebalance after the orphan hand-off resumes those partitions from
+    # the checkpoint (the committed store), not from zero
+    g.remove_member("m1")
+    assert {p: c.positions()[p] for p in (2, 3)} \
+        == {p: ckpt[p] for p in (2, 3)}
+    with pytest.raises(ValueError):
+        c.restore(ckpt, on_unassigned="bogus")

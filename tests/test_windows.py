@@ -1,0 +1,231 @@
+"""Watermark-driven event-time windows: WindowedAggregate closes tumbling
+windows only when the LowWatermarkClock passes them, routes stragglers to
+``late``, flushes the remainder at end of stream, and — via the flow
+engine's idle triggers — fires closes while its own input is quiet."""
+import time
+
+import pytest
+
+from repro.core import (CollectSink, FlowError, FlowGraph,
+                        LowWatermarkClock, Processor, Source,
+                        WindowedAggregate, make_flowfile)
+from repro.core.windows import (ATTR_WINDOW_CLOSE_WM, ATTR_WINDOW_COUNT,
+                                ATTR_WINDOW_END, ATTR_WINDOW_START)
+
+
+def ff_at(ts: float, text: str = "x"):
+    return make_flowfile(text, **{"event.ts": f"{ts:.6f}"})
+
+
+def run_trigger(proc, batch):
+    return list(proc.on_trigger(batch))
+
+
+def test_windows_close_only_at_or_behind_watermark():
+    clock = LowWatermarkClock()
+    t = clock.register("src", lateness=0.0)
+    w = WindowedAggregate("w", clock, 10.0)
+    # records span three windows [0,10) [10,20) [20,30); watermark at 5
+    t.observe(5.0)
+    out = run_trigger(w, [ff_at(1.0, "a"), ff_at(12.0, "b"),
+                          ff_at(22.0, "c")])
+    assert out == []                     # wm=5: no window end <= 5
+    # watermark passes the first two windows
+    t.observe(21.0)
+    out = run_trigger(w, [])
+    assert [o[0] for o in out] == ["success", "success"]
+    closes = [o[1] for o in out]
+    assert [c.attributes[ATTR_WINDOW_START] for c in closes] \
+        == ["0.000000", "10.000000"]
+    for c in closes:
+        # the invariant the acceptance scenario checks fleet-wide
+        assert (float(c.attributes[ATTR_WINDOW_END])
+                <= float(c.attributes[ATTR_WINDOW_CLOSE_WM]))
+        assert c.attributes[ATTR_WINDOW_COUNT] == "1"
+    assert w.snapshot_windows()["open_windows"] == 1
+
+
+def test_window_contents_merge_in_event_time_order():
+    clock = LowWatermarkClock()
+    t = clock.register("src", lateness=0.0)
+    w = WindowedAggregate("w", clock, 10.0)
+    run_trigger(w, [ff_at(7.0, "late-in-window"), ff_at(2.0, "first"),
+                    ff_at(5.0, "mid")])
+    t.observe(12.0)
+    # the close gate needs BOTH the clock and the stage's own frontier past
+    # the window end — the stage seeing ts=11 supplies the second half
+    ((rel, merged), *rest) = run_trigger(w, [ff_at(11.0, "next-window")])
+    assert rel == "success" and not rest
+    assert merged.content == b"first\nmid\nlate-in-window"
+    assert merged.attributes[ATTR_WINDOW_COUNT] == "3"
+
+
+def test_close_gated_on_stage_frontier_not_raw_clock():
+    """The clock is read live and can outrun records still in flight to
+    this stage; a window must NOT close before the stage itself has seen
+    past its end, or the in-flight suffix would all land late."""
+    clock = LowWatermarkClock()
+    t = clock.register("src", lateness=0.0)
+    w = WindowedAggregate("w", clock, 10.0)
+    t.observe(50.0)                      # clock far ahead of the stage
+    assert run_trigger(w, [ff_at(2.0, "in-flight")]) == []   # no close
+    assert run_trigger(w, [ff_at(4.0, "also-on-time")]) == []  # not late!
+    out = run_trigger(w, [ff_at(12.0, "past-the-window")])
+    assert [(rel, ff.attributes[ATTR_WINDOW_COUNT]) for rel, ff in out] \
+        == [("success", "2")]
+    assert w.late_records == 0
+
+
+def test_straggler_behind_closed_window_routes_late():
+    clock = LowWatermarkClock()
+    t = clock.register("src", lateness=0.0)
+    w = WindowedAggregate("w", clock, 10.0)
+    t.observe(15.0)
+    run_trigger(w, [ff_at(12.0)])        # closes [0,10) (empty) at wm=15
+    out = run_trigger(w, [ff_at(3.0, "straggler")])
+    assert [(rel, ff.content) for rel, ff in out] \
+        == [("late", b"straggler")]
+    assert w.late_records == 1
+    # the open [10,20) window is untouched by the straggler
+    assert w.snapshot_windows()["buffered_records"] == 1
+
+
+def test_declared_unseen_source_gates_closes():
+    """Fail-open regression: a declared source that finished (the clock
+    excludes it) before ANY of its records reached the stage must hold
+    every close — otherwise its whole in-flight stream lands late. The
+    gate releases once its tail drains through the stage."""
+    clock = LowWatermarkClock()
+    a = clock.register("a", lateness=0.0)
+    b = clock.register("b", lateness=0.0)
+    w = WindowedAggregate("w", clock, 10.0, sources=("a", "b"))
+    a.observe(50.0)
+    b.observe(5.0)
+    clock.mark_finished("b")             # b's records are all still in flight
+    # stage has seen plenty of "a" but nothing of "b": closes held
+    out = run_trigger(w, [make_flowfile("a45", **{
+        "event.ts": "45.0", "source": "a"})])
+    assert out == []
+    # b's tail drains through the stage: bucketed on time, gate released
+    out = run_trigger(w, [make_flowfile("b5", **{
+        "event.ts": "5.0", "source": "b"})])
+    rels = [rel for rel, _ in out]
+    assert "late" not in rels
+    assert w.late_records == 0
+    assert rels == ["success"]           # [0,10) closes, b5 inside it
+    assert out[0][1].attributes[ATTR_WINDOW_COUNT] == "1"
+
+
+def test_declared_unregistered_source_raises_instead_of_wedging():
+    """A declared source name the clock has never registered (a typo, or
+    a renamed connector) could never be released — instead of silently
+    holding every close forever, the first close attempt raises."""
+    clock = LowWatermarkClock()
+    a = clock.register("a", lateness=0.0)
+    w = WindowedAggregate("w", clock, 10.0, sources=("a", "typo"))
+    a.observe(50.0)
+    with pytest.raises(ValueError, match="typo"):
+        run_trigger(w, [make_flowfile("x", **{"event.ts": "5.0",
+                                              "source": "a"})])
+
+
+def test_declared_source_finishing_empty_releases_gate():
+    """A declared source that finishes having produced NOTHING (no
+    watermark at all — e.g. an empty feed) has no in-flight tail to wait
+    for: its gate must release, not hold every close at -inf forever."""
+    clock = LowWatermarkClock()
+    a = clock.register("a", lateness=0.0)
+    clock.register("b", lateness=0.0)
+    w = WindowedAggregate("w", clock, 10.0, sources=("a", "b"))
+    clock.mark_finished("b")             # finished empty: never observed
+    a.observe(50.0)
+    out = run_trigger(w, [
+        make_flowfile("old", **{"event.ts": "5.0", "source": "a"}),
+        make_flowfile("new", **{"event.ts": "45.0", "source": "a"})])
+    rels = [rel for rel, _ in out]
+    assert rels == ["success"]           # [0,10) closes; [40,50) stays open
+    assert w.snapshot_windows()["open_windows"] == 1
+
+
+def test_final_flush_emits_remaining_windows_marked_final():
+    clock = LowWatermarkClock()
+    clock.register("src", lateness=0.0)
+    w = WindowedAggregate("w", clock, 10.0)
+    run_trigger(w, [ff_at(1.0, "a"), ff_at(11.0, "b")])
+    out = list(w.final_flush())
+    assert [ff.attributes[ATTR_WINDOW_CLOSE_WM] for _, ff in out] \
+        == ["final", "final"]
+    assert w.snapshot_windows()["open_windows"] == 0
+
+
+def test_rejects_nonpositive_window():
+    with pytest.raises(ValueError):
+        WindowedAggregate("w", LowWatermarkClock(), 0.0)
+
+
+def test_idle_trigger_failure_escalates_with_retry_armed():
+    """Regression: with record retry armed (max_retries>0) a failing EMPTY
+    trigger used to be reprocessed 'record-at-a-time' — zero iterations —
+    silently swallowing the exception. It must escalate to the supervisor
+    like any other processor failure."""
+    class BoomOnIdle(Processor):
+        idle_trigger_sec = 0.01
+
+        def on_trigger(self, batch):
+            if not batch:
+                raise RuntimeError("boom on idle")
+            return ()
+
+    def gen():
+        yield make_flowfile("x")
+        time.sleep(0.5)                  # hold the stream open: idle fires
+
+    g = FlowGraph("idle-fail")
+    src = g.add(Source("src", gen))
+    boom = g.add(BoomOnIdle("boom"))
+    g.connect(src, "success", boom, max_retries=2)
+    g.start()
+    with pytest.raises(FlowError, match="boom"):
+        g.join(timeout=10)
+
+
+def test_idle_trigger_closes_windows_without_new_input():
+    """The flow engine re-triggers an idle WindowedAggregate, so a window
+    closes when ANOTHER stream's progress advances the clock — no new
+    record through the window stage is needed (the upstream is held open
+    to prove it's the idle trigger, not the final flush)."""
+    import threading
+    clock = LowWatermarkClock()
+    t = clock.register("src", lateness=0.0)
+    release = threading.Event()
+
+    def gen():
+        yield ff_at(1.0, "a")
+        time.sleep(0.06)                 # > source linger: deliver each now
+        yield ff_at(12.0, "next-window")
+        release.wait(20)                 # hold the stream open
+
+    g = FlowGraph("windows-idle")
+    src = g.add(Source("src", gen))
+    w = g.add(WindowedAggregate("w", clock, 10.0, idle_trigger_sec=0.01))
+    sink = g.add(CollectSink("sink"))
+    g.connect(src, "success", w)
+    g.connect(w, "success", sink)
+    t.observe(3.0)                       # wm=3: window [0,10) stays open
+    g.start()
+    deadline = time.monotonic() + 5
+    while (w.snapshot_windows()["buffered_records"] < 2
+           and time.monotonic() < deadline):
+        time.sleep(0.005)
+    assert w.snapshot_windows()["buffered_records"] == 2
+    assert sink.items == []              # buffered, not closed (wm=3)
+    t.observe(25.0)                      # clock jumps past the window...
+    deadline = time.monotonic() + 5
+    while not sink.items and time.monotonic() < deadline:
+        time.sleep(0.005)                # ...and an IDLE trigger closes it
+    assert len(sink.items) == 1
+    closed = sink.items[0]
+    assert closed.content == b"a"
+    assert closed.attributes[ATTR_WINDOW_CLOSE_WM] != "final"
+    release.set()
+    g.join(timeout=10)

@@ -16,6 +16,11 @@ loader variant).
                             HTTP/WebSocket servers + crash/rebuild (zero
                             loss, monotonic watermarks, window closes at or
                             behind the low watermark)
+  bench_fabric              multi-process fabric: sharded workers over the
+                            socket-transported log (ingest_fabric_w{2,4})
+                            + the kill -9 lease-takeover scenario (zero
+                            acked-record loss, bounded dupes, monotone
+                            fabric watermark)
   bench_loader              host→device feed rate (ingestion fabric edge)
   roofline                  §Roofline table from artifacts/dryrun (if present)
 
@@ -38,6 +43,8 @@ recovery/acquisition scenarios.
 from __future__ import annotations
 
 import json
+import os
+import platform
 import subprocess
 import sys
 import tempfile
@@ -49,7 +56,7 @@ _REPO_ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(_REPO_ROOT / "src"))
 sys.path.insert(0, str(_REPO_ROOT))
 
-from benchmarks import (bench_acquisition, bench_backpressure,
+from benchmarks import (bench_acquisition, bench_backpressure, bench_fabric,
                         bench_ingest_throughput, bench_loader,
                         bench_recovery, bench_socket_acquisition, roofline)
 
@@ -63,7 +70,8 @@ GUARD_RATIO = 0.8
 ACCEPTANCE_FLAGS = ("zero_record_loss", "watermark_monotonic",
                     "watermark_resumed_from_checkpoint",
                     "duplicates_bounded", "at_least_once_ok",
-                    "no_committed_loss", "windows_closed_behind_watermark")
+                    "no_committed_loss", "windows_closed_behind_watermark",
+                    "lease_takeover")
 
 
 def emit(rows):
@@ -81,20 +89,25 @@ def write_snapshot(ingest_rows, loader_rows, quick_ingest_rows,
     CI (`--quick`) can guard like-for-like — small-input rates differ
     structurally from full-run rates (startup amortization) — and the
     calibration rate lets the guard discount shared-host load."""
+    def _ingest_entry(r: dict) -> dict:
+        entry = {"records_per_sec": r["records_per_sec"],
+                 "records_per_cpu_sec": r["records_per_cpu_sec"],
+                 "records": r["records"],
+                 "wall_sec": r["wall_sec"]}
+        # multi-process variants record their worker count: a rate without
+        # its process count (and the host's core count below) is ambiguous
+        if "workers" in r:
+            entry["workers"] = r["workers"]
+        return entry
+
     snapshot = {
+        "host": {"cpu_count": os.cpu_count(),
+                 "platform": platform.platform()},
         "calibration_ops_per_sec": round(calibration, 1),
         "bench_ingest_throughput": {
-            r["name"]: {"records_per_sec": r["records_per_sec"],
-                        "records_per_cpu_sec": r["records_per_cpu_sec"],
-                        "records": r["records"],
-                        "wall_sec": r["wall_sec"]}
-            for r in ingest_rows},
+            r["name"]: _ingest_entry(r) for r in ingest_rows},
         "bench_ingest_quick": {
-            r["name"]: {"records_per_sec": r["records_per_sec"],
-                        "records_per_cpu_sec": r["records_per_cpu_sec"],
-                        "records": r["records"],
-                        "wall_sec": r["wall_sec"]}
-            for r in quick_ingest_rows},
+            r["name"]: _ingest_entry(r) for r in quick_ingest_rows},
         "bench_loader": {
             r["name"]: {"tokens_per_sec": r["tokens_per_sec"],
                         "tokens": r["tokens"],
@@ -160,11 +173,20 @@ def measure_head_quick() -> dict | None:
         subprocess.run(["git", "worktree", "add", "--detach", wt, ref],
                        cwd=_REPO_ROOT, check=True, capture_output=True,
                        timeout=120)
-        code = ("import sys, json; "
-                f"sys.path.insert(0, {wt!r}); "
-                f"sys.path.insert(0, {wt + '/src'!r}); "
-                "from benchmarks import bench_ingest_throughput as b; "
-                "print(json.dumps(b.main(n=2_000)))")
+        code = (
+            "import sys, json\n"
+            f"sys.path.insert(0, {wt!r})\n"
+            f"sys.path.insert(0, {wt + '/src'!r})\n"
+            "from benchmarks import bench_ingest_throughput as b\n"
+            "rows = b.main(n=2_000)\n"
+            # fabric variants exist only from PR 6 on — a baseline commit
+            # without them just yields no floor for those names
+            "try:\n"
+            "    from benchmarks import bench_fabric as bf\n"
+            "    rows += bf.main_throughput(n=2_000, workers_list=(2,))\n"
+            "except Exception:\n"
+            "    pass\n"
+            "print(json.dumps(rows))")
         out = subprocess.run([sys.executable, "-c", code], check=True,
                              capture_output=True, text=True, timeout=600)
         rows = json.loads(out.stdout.strip().splitlines()[-1])
@@ -213,6 +235,8 @@ def main(quick: bool = False) -> None:
         # rewrite BENCH_ingest.json — the perf trajectory is full-run only.
         head_baseline = measure_head_quick()    # same-load-phase A/B side
         ingest_rows = bench_ingest_throughput.main(n=2_000)
+        ingest_rows += bench_fabric.main_throughput(n=2_000,
+                                                    workers_list=(2,))
         emit(ingest_rows)
         scale = 1.0
         if head_baseline is not None:
@@ -236,6 +260,10 @@ def main(quick: bool = False) -> None:
             retry = {r["name"]: r
                      for r in bench_ingest_throughput.main(n=2_000,
                                                            only=slow)}
+            retry.update(
+                {r["name"]: r
+                 for r in bench_fabric.main_throughput(n=2_000, only=slow,
+                                                       workers_list=(2,))})
             emit([dict(retry[n], name=f"{n}_retry") for n in slow])
             best = [r if r["name"] not in retry
                     else dict(r, **{k: max(r[k], retry[r["name"]][k])
@@ -252,9 +280,12 @@ def main(quick: bool = False) -> None:
         sock_rows = bench_socket_acquisition.main(n_rss=900, n_fire=600,
                                                   n_ws=300)
         emit(sock_rows)
+        fabric_rows = [bench_fabric.run_failover_scenario(n=8_000)]
+        emit(fabric_rows)
         emit(bench_backpressure.main(produced=5_000))
         emit(bench_loader.main(n_docs=2_000))
-        failures += check_acceptance(recovery_rows + acq_rows + sock_rows)
+        failures += check_acceptance(recovery_rows + acq_rows + sock_rows
+                                     + fabric_rows)
         print("snapshot,skipped,--quick")
         if failures:
             print(f"guard,FAILED,{';'.join(failures)}")
@@ -262,13 +293,18 @@ def main(quick: bool = False) -> None:
         print(f"guard,ok,ratio={GUARD_RATIO}")
     else:
         ingest_rows = bench_ingest_throughput.main()
+        ingest_rows += bench_fabric.main_throughput()
         emit(ingest_rows)
         # quick-sized baseline for the CI guard: per-METRIC min of two
         # passes — a conservative floor on each rate independently, so
         # host-load swings at snapshot time don't arm a hair-trigger guard
         # on either metric
-        qa = {r["name"]: r for r in bench_ingest_throughput.main(n=2_000)}
-        qb = {r["name"]: r for r in bench_ingest_throughput.main(n=2_000)}
+        def _quick_pass() -> dict:
+            rows = bench_ingest_throughput.main(n=2_000)
+            rows += bench_fabric.main_throughput(n=2_000, workers_list=(2,))
+            return {r["name"]: r for r in rows}
+        qa = _quick_pass()
+        qb = _quick_pass()
         quick_ingest_rows = [
             dict(qa[n], **{k: min(qa[n][k], qb[n][k])
                            for k in ("records_per_sec",
@@ -282,11 +318,14 @@ def main(quick: bool = False) -> None:
         emit(acq_rows)
         sock_rows = bench_socket_acquisition.main()
         emit(sock_rows)
+        fabric_rows = [bench_fabric.run_failover_scenario()]
+        emit(fabric_rows)
         loader_rows = bench_loader.main()
         emit(loader_rows)
         # acceptance flags gate the full run too: a loss/watermark break
         # must not silently refresh the perf trajectory
-        failures += check_acceptance(recovery_rows + acq_rows + sock_rows)
+        failures += check_acceptance(recovery_rows + acq_rows + sock_rows
+                                     + fabric_rows)
         if failures:
             print(f"guard,FAILED,{';'.join(failures)}")
             print("snapshot,skipped,acceptance-failure")

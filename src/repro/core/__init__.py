@@ -79,6 +79,7 @@ from .connection import (BackpressureTimeout, Connection, DurableConnection,
                          DEFAULT_OBJECT_THRESHOLD, DEFAULT_SIZE_THRESHOLD)
 from .delivery import (Consumer, ConsumerGroup, OffsetStore, Producer,
                        StaleGeneration, range_assign)
+from .fabric import FabricError, IngestionFabric, LeaseTable
 from .faults import FaultInjector, InjectedFault, INJECTOR
 from .flow import FlowError, FlowGraph
 from .flowfile import FlowFile, make_flowfile
@@ -96,6 +97,8 @@ from .net_connectors import HttpPollConnector, WebSocketConnector
 from .provenance import ProvenanceEvent, ProvenanceRepository
 from .sources import (FirehoseSource, RssAggregatorSource, WebSocketSource,
                       corpus_documents, synth_article)
+from .transport import (FencedError, FenceTable, FrameTooLarge,
+                        LogServer, RemoteLogStore, TransportError)
 from .watermark import LowWatermarkClock, WatermarkTracker
 from .windows import WindowedAggregate
 
@@ -106,10 +109,11 @@ __all__ = [
     "ConsumerGroup", "Consumer", "ContentFilter", "CorruptRecord",
     "DEFAULT_OBJECT_THRESHOLD", "DEFAULT_SIZE_THRESHOLD", "DeadLetterQueue",
     "DetectDuplicate", "DurableConnection", "EndOfStream",
-    "ExecuteScript", "FaultInjector", "FileSink", "FirehoseSource",
+    "ExecuteScript", "FabricError", "FaultInjector", "FenceTable",
+    "FencedError", "FileSink", "FirehoseSource", "FrameTooLarge",
     "FlowError", "FlowFile",
-    "FlowGraph", "HttpPollConnector", "INJECTOR", "InjectedFault",
-    "LogRecord", "LogStore",
+    "FlowGraph", "HttpPollConnector", "INJECTOR", "IngestionFabric",
+    "InjectedFault", "LeaseTable", "LogRecord", "LogServer", "LogStore",
     "LookupEnrich", "LowWatermarkClock",
     "MergeContent", "OffsetStore",
     "PartitionRecords", "PartitionedLog", "Processor", "Producer",
@@ -118,7 +122,8 @@ __all__ = [
     "REL_FAILURE", "REL_SUCCESS", "ReplicatedLog", "ReplicationError",
     "RestartPolicy", "RouteOnAttribute",
     "RssAggregatorSource", "SimulatedEndpoint", "Source", "SourceConnector",
-    "StaleEpoch", "StaleGeneration", "Throttle", "WatermarkTracker",
+    "RemoteLogStore", "StaleEpoch", "StaleGeneration", "Throttle",
+    "TransportError", "WatermarkTracker",
     "WebSocketConnector", "WebSocketSource", "WindowedAggregate",
     "corpus_documents", "default_event_ts", "emission_order",
     "make_flowfile", "range_assign", "route_partition", "synth_article",

@@ -36,6 +36,7 @@ from pathlib import Path
 from typing import Iterable
 
 from . import faults
+from .log import route_partition
 from .logstore import LogRecord, LogStore, atomic_write_bytes
 
 
@@ -47,12 +48,21 @@ class Producer:
     bytes, or ``linger_sec`` since the oldest buffered record (checked on
     every ``send``; call ``flush()`` at quiesce points — there is no timer
     thread). Thread-safe; record order is preserved per partition.
-    """
+
+    ``producer_id`` makes delivery **idempotent**: the producer resolves
+    each record's partition itself (the same key-hash rule the stores use),
+    numbers records per partition with a dense sequence, and stamps every
+    drained batch with ``(producer_id, base_seq)`` so the store dedups
+    retried batches — a drain whose failure was ambiguous (socket drop
+    after the server applied it; fenced leader re-append) lands exactly
+    once. The id must be unique per live producer: two producers sharing
+    one id corrupt each other's sequence window."""
 
     def __init__(self, log: LogStore, topic: str, *,
                  max_batch_records: int = 512,
                  max_batch_bytes: int = 1 << 20,
-                 linger_sec: float = 0.05) -> None:
+                 linger_sec: float = 0.05,
+                 producer_id: str | None = None) -> None:
         if max_batch_records <= 0 or max_batch_bytes <= 0:
             raise ValueError("batch bounds must be positive")
         self.log = log
@@ -60,6 +70,13 @@ class Producer:
         self.max_batch_records = max_batch_records
         self.max_batch_bytes = max_batch_bytes
         self.linger_sec = linger_sec
+        self.producer_id = producer_id
+        self._seqs: dict[int, int] = {}     # partition -> next base_seq
+        self._nparts: int | None = None     # lazy (topic may not exist yet)
+        # runs whose append failed ambiguously, frozen with their reserved
+        # sequence range: the retry must resend them byte-identical for the
+        # store's dedup to recognize them (new sends must not extend them)
+        self._inflight: list[tuple[list[tuple[bytes, bytes]], int, int]] = []
         self._lock = threading.Lock()
         # parallel buffers: records grouped as (key, value), partition per rec
         self._buf: list[tuple[bytes, bytes]] = []
@@ -102,18 +119,54 @@ class Producer:
         # the producer's at-least-once retry contract is exercised here
         faults.fire("delivery.producer.drain", records=records)
         # group consecutive-partition runs so explicit partitions batch too;
-        # None-partition records are key-routed by append_batch itself.
-        # The buffer is trimmed only as runs land, so an append failure
-        # (disk full, bad partition) keeps the unsent suffix for retry —
-        # the at-least-once producer contract.
+        # None-partition records are key-routed by append_batch itself
+        # (resolved eagerly with the same rule when idempotence needs
+        # per-partition sequences). The buffer is trimmed only as runs
+        # land, so an append failure (disk full, bad partition) keeps the
+        # unsent suffix for retry — the at-least-once producer contract;
+        # with a producer_id the retried run dedups store-side.
+        if self.producer_id is not None:
+            # resend frozen runs first (identical composition, same
+            # base_seq: a run that DID land before its failure surfaced is
+            # recognized and acked without a second append)
+            while self._inflight:
+                recs, p, seq = self._inflight[0]
+                self.log.append_batch(self.topic, recs, partition=p,
+                                      producer_id=self.producer_id,
+                                      base_seq=seq)
+                self.delivered += len(recs)
+                self._inflight.pop(0)
+            if self._nparts is None:
+                self._nparts = self.log.num_partitions(self.topic)
+            for i, p in enumerate(parts):
+                if p is None:
+                    parts[i] = route_partition(records[i][0], self._nparts)
         i = 0
         try:
             while i < n:
                 j = i + 1
                 while j < n and parts[j] == parts[i]:
                     j += 1
-                self.log.append_batch(self.topic, records[i:j],
-                                      partition=parts[i])
+                if self.producer_id is None:
+                    self.log.append_batch(self.topic, records[i:j],
+                                          partition=parts[i])
+                else:
+                    p = parts[i]
+                    seq = self._seqs.get(p, 0)
+                    run = records[i:j]
+                    try:
+                        self.log.append_batch(
+                            self.topic, run, partition=p,
+                            producer_id=self.producer_id, base_seq=seq)
+                    except Exception:
+                        # ambiguous: the server may have applied it. Freeze
+                        # the run with its reserved sequence range; the
+                        # buffer moves on so later sends can't extend it
+                        self._seqs[p] = seq + (j - i)
+                        self._inflight.append((run, p, seq))
+                        i = j
+                        raise
+                    self._seqs[p] = seq + (j - i)
                 self.delivered += j - i
                 i = j
         finally:
@@ -131,7 +184,7 @@ class Producer:
 
     def pending(self) -> int:
         with self._lock:
-            return len(self._buf)
+            return len(self._buf) + sum(len(r) for r, _, _ in self._inflight)
 
     def __enter__(self) -> "Producer":
         return self

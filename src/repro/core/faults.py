@@ -17,6 +17,11 @@ Built-in sites (fired by the library itself):
                                ``ReplicatedLog`` partition, ``ctx: topic,
                                partition, replica, epoch`` — arm to kill a
                                leader mid-ingest and exercise failover
+  ``replica.fence``            after a leader-store append, before the
+                               epoch re-validation, ``ctx: topic,
+                               partition, replica, epoch`` — arm a callable
+                               that demotes the leader to land a write in
+                               the zombie window deterministically
   ``replica.ship``             before each follower range-ship, ``ctx:
                                topic, partition, replica, offset``
   ``acquire.connect``          before each connector session open in the

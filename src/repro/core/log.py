@@ -48,7 +48,7 @@ from pathlib import Path
 from typing import Sequence
 
 from . import faults
-from .logstore import LogRecord, LogStore
+from .logstore import LogRecord, LogStore, ProducerDedupTable
 
 __all__ = ["CorruptRecord", "LogRecord", "PartitionedLog",
            "DEFAULT_SEGMENT_BYTES", "route_partition"]
@@ -441,6 +441,7 @@ class PartitionedLog(LogStore):
         self.segment_bytes = segment_bytes
         self.fsync_every = fsync_every
         self._topics: dict[str, list[_Partition]] = {}
+        self._dedup = ProducerDedupTable()
         self._lock = threading.Lock()
         # re-open any topics already on disk (crash recovery)
         for tdir in sorted(self.root.iterdir()) if self.root.exists() else []:
@@ -489,7 +490,9 @@ class PartitionedLog(LogStore):
 
     def append_batch(self, topic: str,
                      records: Sequence[tuple[bytes, bytes]],
-                     partition: int | None = None
+                     partition: int | None = None, *,
+                     producer_id: str | None = None,
+                     base_seq: int | None = None
                      ) -> list[tuple[int, int]]:
         """Append a batch of ``(key, value)`` records with one lock
         acquisition / buffer pack / write per touched partition.
@@ -497,10 +500,30 @@ class PartitionedLog(LogStore):
         With ``partition=None`` each record is routed by key hash (the same
         rule as ``append``) and the batch is regrouped per partition, order
         preserved within each partition. Returns ``(partition, offset)`` per
-        record, in input order."""
+        record, in input order.
+
+        With ``producer_id``/``base_seq`` (explicit partition required) the
+        batch is idempotent: a resend of the last accepted batch — e.g. a
+        ``RemoteLogStore`` client retrying after an ambiguous connection
+        drop — returns the original offsets instead of appending again."""
         if not records:
             return []
         parts = self._part_list(topic)
+        if producer_id is not None:
+            if partition is None or base_seq is None:
+                raise ValueError("idempotent appends need an explicit "
+                                 "partition and a base_seq")
+            verdict, entry = self._dedup.classify(
+                topic, partition, producer_id, base_seq, len(records))
+            if verdict == "retry":
+                # the first attempt landed (the entry is only recorded
+                # after a successful append): ack with the original offsets
+                return [(partition, entry.first_offset + i)
+                        for i in range(len(records))]
+            first = parts[partition].append_batch(records)
+            self._dedup.record(topic, partition, producer_id, base_seq,
+                               len(records), first)
+            return [(partition, first + i) for i in range(len(records))]
         if partition is not None:
             first = parts[partition].append_batch(records)
             return [(partition, first + i) for i in range(len(records))]

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import abc
 import os
+import threading
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Iterator, Sequence
@@ -63,6 +64,68 @@ def atomic_write_bytes(path: Path, data: bytes, *, fsync: bool = True) -> None:
             os.fsync(dfd)
         finally:
             os.close(dfd)
+
+
+@dataclass(frozen=True, slots=True)
+class DedupEntry:
+    """Last accepted batch of one ``(topic, partition, producer_id)``."""
+
+    base_seq: int
+    count: int
+    first_offset: int
+
+
+class ProducerDedupTable:
+    """Idempotent-producer sequence table (Kafka's idempotent producer,
+    reduced to the last-batch window that matters here).
+
+    A producer stamps each per-partition batch with ``(producer_id,
+    base_seq)`` where ``base_seq`` counts records, not batches; the store
+    records the last accepted batch per ``(topic, partition, producer_id)``.
+    :meth:`classify` then tells an append attempt apart:
+
+      * ``"new"``   — first batch, the next batch (``base_seq`` == previous
+        ``base_seq + count``), or a forward gap (the table guards against
+        duplication, not loss — a producer that skipped sequences is its own
+        problem);
+      * ``"retry"`` — exactly the last batch again (same ``base_seq`` and
+        ``count``): the producer resent after an ambiguous failure (socket
+        reconnect, fenced leader re-append) and the store must not append it
+        twice;
+      * anything else raises ``ValueError`` (an overlapping or rewinding
+        batch is a protocol violation, not a retry).
+
+    The contract is **single writer per producer_id** (enforced by callers:
+    ``delivery.Producer`` drains under its lock). The table is in-memory
+    only — across a store process restart the window is lost and delivery
+    degrades to the documented at-least-once (persisting producer state in
+    the log itself is Kafka's full protocol, out of scope)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._entries: dict[tuple[str, int, str], DedupEntry] = {}
+
+    def classify(self, topic: str, partition: int, producer_id: str,
+                 base_seq: int, count: int
+                 ) -> tuple[str, DedupEntry | None]:
+        if base_seq < 0 or count < 1:
+            raise ValueError("base_seq must be >= 0 and count >= 1")
+        with self._lock:
+            entry = self._entries.get((topic, partition, producer_id))
+        if entry is None or base_seq >= entry.base_seq + entry.count:
+            return "new", entry
+        if base_seq == entry.base_seq and count == entry.count:
+            return "retry", entry
+        raise ValueError(
+            f"out-of-sequence batch from producer {producer_id!r} on "
+            f"{topic}/{partition}: got base_seq={base_seq} count={count}, "
+            f"last accepted base_seq={entry.base_seq} count={entry.count}")
+
+    def record(self, topic: str, partition: int, producer_id: str,
+               base_seq: int, count: int, first_offset: int) -> None:
+        with self._lock:
+            self._entries[(topic, partition, producer_id)] = DedupEntry(
+                base_seq, count, first_offset)
 
 
 @dataclass(frozen=True, slots=True)
@@ -111,10 +174,18 @@ class LogStore(abc.ABC):
     @abc.abstractmethod
     def append_batch(self, topic: str,
                      records: Sequence[tuple[bytes, bytes]],
-                     partition: int | None = None
+                     partition: int | None = None, *,
+                     producer_id: str | None = None,
+                     base_seq: int | None = None
                      ) -> list[tuple[int, int]]:
         """Append many records (the high-throughput entry point); returns
-        ``(partition, offset)`` per record in input order."""
+        ``(partition, offset)`` per record in input order.
+
+        ``producer_id``/``base_seq`` stamp the batch for idempotent-producer
+        dedup (see :class:`ProducerDedupTable`): a retried batch returns the
+        originally assigned offsets instead of appending twice. Requires an
+        explicit ``partition`` (the producer resolves routing so sequence
+        numbers are per-partition)."""
 
     @abc.abstractmethod
     def flush(self, fsync: bool = True) -> None: ...

@@ -22,7 +22,7 @@ import struct
 import time
 import zlib
 from pathlib import Path
-from typing import Callable, Iterable, Iterator, Mapping
+from typing import Callable, Iterable, Iterator, Mapping, Sequence
 
 from .connection import RateThrottle
 from .delivery import Producer
@@ -279,27 +279,42 @@ class PublishToLog(Processor):
     Publishes through a batching ``delivery.Producer``: a whole trigger batch
     is accumulated and drained via ``append_batch`` (one pack/write per
     partition), instead of one ``struct.pack`` + CRC + ``write`` per record.
+
+    ``partitions`` restricts publishing to an owned subset of the topic's
+    partitions (the ingestion fabric assigns each worker a disjoint subset,
+    so two workers never interleave writes — or sequence numbers — on one
+    partition); keys then hash over the subset. ``producer_id`` stamps
+    appends for store-side idempotent dedup (see ``delivery.Producer``).
     """
 
     def __init__(self, name: str, log: LogStore, topic: str,
                  flush_every: int = 2048,
                  batch_records: int = 512,
-                 batch_bytes: int = 1 << 20) -> None:
+                 batch_bytes: int = 1 << 20,
+                 partitions: "Sequence[int] | None" = None,
+                 producer_id: str | None = None) -> None:
         super().__init__(name)
         self.log = log
         self.topic = topic
         self.flush_every = flush_every
         self._since_flush = 0
         self.published = 0
+        self.partitions = None if partitions is None else list(partitions)
+        if self.partitions is not None and not self.partitions:
+            raise ValueError(f"{name}: empty partition subset")
         self._producer = Producer(log, topic,
                                   max_batch_records=batch_records,
-                                  max_batch_bytes=batch_bytes)
+                                  max_batch_bytes=batch_bytes,
+                                  producer_id=producer_id)
         self._nparts: int | None = None
 
     def _partition_of(self, ff: FlowFile) -> int:
+        pkey = ff.attributes.get("partition.key", ff.lineage_id)
+        if self.partitions is not None:
+            return self.partitions[zlib.crc32(pkey.encode())
+                                   % len(self.partitions)]
         if self._nparts is None:
             self._nparts = self.log.num_partitions(self.topic)
-        pkey = ff.attributes.get("partition.key", ff.lineage_id)
         return zlib.crc32(pkey.encode()) % self._nparts
 
     def process(self, ff: FlowFile):

@@ -42,7 +42,12 @@ the next replica in preference order (``(partition + k) % N``) is promoted.
 A writer that captured the old leadership re-validates the epoch after its
 store write and, when fenced, retries against the new leader — the write
 that landed on the demoted replica is abandoned there (duplicates allowed,
-loss is not: at-least-once). ``restore_replica`` rebuilds a returning
+loss is not: at-least-once). **Idempotent producers close that duplicate
+window**: when the batch carries ``(producer_id, base_seq)``, the fenced
+retry first checks whether the batch already reached the new leader through
+a racing ship (ships are byte-identical contiguous prefixes, so the batch's
+first and last records are compared at the recorded offsets) and skips the
+re-append when it did — the regression the PR 3 docs left open. ``restore_replica`` rebuilds a returning
 replica by full per-partition resync (reset to the leader's
 ``begin_offset``, then range shipping) before it rejoins the in-sync set.
 
@@ -66,6 +71,10 @@ Deterministic fault sites (:mod:`repro.core.faults`):
 
   ``replica.leader``  before each leader-store append
                       (ctx: ``topic, partition, replica, epoch``)
+  ``replica.fence``   after the leader-store append, before the epoch
+                      re-validation (ctx: ``topic, partition, replica,
+                      epoch``) — arm a callable that ships + demotes to
+                      reproduce the fenced zombie re-append deterministically
   ``replica.ship``    before each follower range-ship
                       (ctx: ``topic, partition, replica, offset``)
 
@@ -82,7 +91,8 @@ from typing import Sequence
 
 from . import faults
 from .log import DEFAULT_SEGMENT_BYTES, PartitionedLog, route_partition
-from .logstore import LogRecord, LogStore, atomic_write_bytes
+from .logstore import (LogRecord, LogStore, ProducerDedupTable,
+                       atomic_write_bytes)
 
 __all__ = ["ReplicatedLog", "ReplicationError", "StaleEpoch"]
 
@@ -209,6 +219,9 @@ class ReplicatedLog(LogStore):
                            fsync_every[i])
             for i in range(replicas)]
         self.n_replicas = replicas
+        #: idempotent-producer sequence table, consulted on the fenced
+        #: re-append path (single-replica delegates to the store's own)
+        self._dedup = ProducerDedupTable()
         #: replicas whose store is closed/unusable for every partition
         self._dead: set[int] = set()
         self._sets: dict[tuple[str, int], _ReplicaSet] = {}
@@ -414,13 +427,50 @@ class ReplicatedLog(LogStore):
                 self._demote(rset, f)   # follower-side failure: ISR shrink
 
     # -- leader-routed operations ---------------------------------------------
+    def _batch_present(self, store: PartitionedLog, topic: str, p: int,
+                       entry, records: Sequence[tuple[bytes, bytes]]) -> bool:
+        """Is the recorded batch already in ``store`` (the current leader)?
+        Ships are byte-identical contiguous prefixes of the old leader's
+        log, so the batch is present iff its *last* record made it — the
+        first is checked too so an unrelated write that happens to occupy
+        those offsets (the old leader never shipped; other producers' later
+        appends reused them) isn't mistaken for ours. Content equality at
+        both ends is a proxy, not proof (per-record producer metadata in
+        the log — Kafka's full protocol — would make it exact); any doubt
+        re-appends, erring toward the documented at-least-once."""
+        last_off = entry.first_offset + entry.count - 1
+        try:
+            firsts = store.read(topic, p, entry.first_offset, 1)
+            lasts = store.read(topic, p, last_off, 1)
+        except Exception:
+            return False
+        return (bool(firsts) and bool(lasts)
+                and firsts[0].offset == entry.first_offset
+                and lasts[0].offset == last_off
+                and (firsts[0].key, firsts[0].value) == tuple(records[0])
+                and (lasts[0].key, lasts[0].value) == tuple(records[-1]))
+
     def _append_partition(self, topic: str, p: int,
-                          records: Sequence[tuple[bytes, bytes]]) -> int:
+                          records: Sequence[tuple[bytes, bytes]],
+                          producer_id: str | None = None,
+                          base_seq: int | None = None) -> int:
         """Append one partition's batch through its leader, fence, ship.
         Returns the first assigned offset."""
         rset = self._rset(topic, p)
+        if producer_id is not None and base_seq is None:
+            raise ValueError("idempotent appends need a base_seq")
         while True:
             leader, epoch = rset.snapshot()
+            if producer_id is not None:
+                verdict, entry = self._dedup.classify(
+                    topic, p, producer_id, base_seq, len(records))
+                # a fenced retry (or a caller-level resend): skip the
+                # re-append iff the batch already reached the current
+                # leader — a racing lazy ship can have copied it over
+                # before the old leader was fenced
+                if verdict == "retry" and self._batch_present(
+                        self._stores[leader], topic, p, entry, records):
+                    return entry.first_offset
             try:
                 faults.fire("replica.leader", topic=topic, partition=p,
                             replica=leader, epoch=epoch)
@@ -440,6 +490,15 @@ class ReplicatedLog(LogStore):
                 # demote it and retry on the promoted follower
                 self._demote(rset, leader, epoch)
                 continue
+            # the zombie window: the store write is durable on `leader` but
+            # the epoch has not been re-validated yet — a leadership change
+            # in exactly this gap is what fencing (and idempotent-producer
+            # dedup) exists for; the armed callable gets to cause one
+            faults.fire("replica.fence", topic=topic, partition=p,
+                        replica=leader, epoch=epoch)
+            if producer_id is not None:
+                self._dedup.record(topic, p, producer_id, base_seq,
+                                   len(records), first)
             try:
                 self._replicate(rset, topic, p, leader, epoch,
                                 lazy=self.acks == "leader")
@@ -515,14 +574,22 @@ class ReplicatedLog(LogStore):
 
     def append_batch(self, topic: str,
                      records: Sequence[tuple[bytes, bytes]],
-                     partition: int | None = None
+                     partition: int | None = None, *,
+                     producer_id: str | None = None,
+                     base_seq: int | None = None
                      ) -> list[tuple[int, int]]:
         if self._single is not None:
-            return self._single.append_batch(topic, records, partition)
+            return self._single.append_batch(topic, records, partition,
+                                             producer_id=producer_id,
+                                             base_seq=base_seq)
         if not records:
             return []
+        if producer_id is not None and partition is None:
+            raise ValueError("idempotent appends require an explicit "
+                             "partition (the producer resolves routing)")
         if partition is not None:
-            first = self._append_partition(topic, partition, records)
+            first = self._append_partition(topic, partition, records,
+                                           producer_id, base_seq)
             return [(partition, first + i) for i in range(len(records))]
         nparts = self.num_partitions(topic)
         groups: dict[int, list[tuple[bytes, bytes]]] = {}

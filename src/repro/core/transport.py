@@ -1,0 +1,663 @@
+"""Wire transport for the :class:`~repro.core.logstore.LogStore` contract
+(paper §III: the distribution layer is what lets acquisition scale past one
+node; NiFi's site-to-site protocol plays this role between NiFi instances,
+and Kafka's broker wire protocol plays it between producers/consumers and
+the broker).
+
+Until this module, every store lived in the producer's process. Here the
+batched ``append_batch``/``pread``-range ``read`` machinery from the segment
+store *is* the protocol: each operation is one length-prefixed binary frame
+over TCP, so a remote store behaves like a local one — same dense offsets,
+same at-least-once append semantics, same range reads.
+
+Three pieces:
+
+  * a framed codec — ``u32 length | u8 opcode | body`` with a hard 16 MiB
+    frame cap (mirroring the WebSocket connector's frame cap) and torn-frame
+    detection: a short read mid-frame raises :class:`TransportError` rather
+    than yielding a half-decoded record batch;
+  * :class:`LogServer` — hosts any ``LogStore`` behind a listening socket
+    (thread per connection, like the test fixtures' WS/HTTP servers). The
+    server optionally enforces **write fencing**: appends carry a leader
+    epoch, and a :class:`FenceTable` bumped by the fabric coordinator
+    rejects stale-epoch writers (the Kafka broker/controller split:
+    storage enforces the controller's epoch decisions);
+  * :class:`RemoteLogStore` — a ``LogStore`` client. Reads and offset
+    queries retry transparently across reconnects (they are idempotent);
+    ``append_batch`` retries make delivery at-least-once, upgraded to
+    exactly-once when the caller stamps idempotent producer ids
+    (``producer_id``/``base_seq``, deduped store-side — see
+    ``logstore.ProducerDedupTable``).
+
+The request/response cycle is strictly serial per connection; concurrency
+comes from opening more connections (each fabric worker holds its own).
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+import threading
+import time
+from pathlib import Path
+from typing import Sequence
+
+from .log import PartitionedLog, route_partition
+from .logstore import LogRecord, LogStore
+
+__all__ = [
+    "MAX_FRAME", "TransportError", "FrameTooLarge", "FencedError",
+    "FenceTable", "LogServer", "RemoteLogStore",
+    "send_frame", "recv_frame", "encode_records", "decode_records",
+    "serve_store",
+]
+
+#: Hard cap on one wire frame (header excluded) — mirrors the 16 MiB frame
+#: cap of the WebSocket connector. A peer announcing a larger frame is
+#: protocol-corrupt (or hostile); both sides drop the connection instead of
+#: allocating unbounded buffers.
+MAX_FRAME = 16 << 20
+
+_LEN = struct.Struct("<I")
+_U16 = struct.Struct("<H")
+_U32 = struct.Struct("<I")
+_U64 = struct.Struct("<Q")
+_I32 = struct.Struct("<i")
+_I64 = struct.Struct("<q")
+_REC = struct.Struct("<II")          # key_len, val_len
+_OFFREC = struct.Struct("<QII")      # offset, key_len, val_len
+_PARTOFF = struct.Struct("<iQ")      # partition, offset
+
+# -- opcodes ----------------------------------------------------------------
+OP_CREATE_TOPIC = 0x01
+OP_TOPICS = 0x02
+OP_NUM_PARTITIONS = 0x03
+OP_APPEND_BATCH = 0x04
+OP_READ = 0x05
+OP_BEGIN_OFFSET = 0x06
+OP_END_OFFSET = 0x07
+OP_FLUSH = 0x08
+OP_FLUSH_TOPIC = 0x09
+OP_ENFORCE_RETENTION = 0x0A
+OP_DROP_SEGMENTS_BELOW = 0x0B
+OP_PING = 0x0C
+#: JSON control frame — not part of the LogStore surface; the fabric's
+#: coordinator/worker control channel reuses this framing (see core/fabric).
+OP_CTRL = 0x20
+
+# -- response status codes --------------------------------------------------
+ST_OK = 0
+ST_ERR = 1          # server-side RuntimeError / unexpected exception
+ST_ERR_KEY = 2      # KeyError (unknown topic, ...)
+ST_ERR_VALUE = 3    # ValueError (bad partition, out-of-sequence batch, ...)
+ST_ERR_FENCED = 4   # stale leader epoch — the writer is a fenced zombie
+
+
+class TransportError(ConnectionError):
+    """Connection-level failure: torn frame, unexpected EOF, reconnect
+    exhaustion. Retryable for idempotent operations."""
+
+
+class FrameTooLarge(ValueError):
+    """A frame exceeded :data:`MAX_FRAME`. Deliberately *not* a
+    :class:`TransportError`: retrying an oversized batch can never succeed,
+    so the client surfaces it to the caller instead of reconnect-looping."""
+
+
+class FencedError(RuntimeError):
+    """An append carried a stale leader epoch. The writer has been
+    superseded (its lease expired and the coordinator re-elected); it must
+    stop — its partition now belongs to another worker."""
+
+
+# -- framing ----------------------------------------------------------------
+
+def recv_exact(sock: socket.socket, n: int) -> bytes:
+    """Read exactly ``n`` bytes. EOF before the first byte raises
+    ``TransportError("closed")``; EOF mid-way is a torn frame."""
+    chunks: list[bytes] = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            if got == 0:
+                raise TransportError("connection closed")
+            raise TransportError(
+                f"torn frame: expected {n} bytes, connection closed after "
+                f"{got}")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def send_frame(sock: socket.socket, op: int, body: bytes = b"") -> None:
+    if 1 + len(body) > MAX_FRAME:
+        raise FrameTooLarge(
+            f"frame of {1 + len(body)} bytes exceeds cap of {MAX_FRAME}")
+    sock.sendall(_LEN.pack(1 + len(body)) + bytes([op]) + body)
+
+
+def recv_frame(sock: socket.socket) -> tuple[int, bytes]:
+    (length,) = _LEN.unpack(recv_exact(sock, 4))
+    if length < 1 or length > MAX_FRAME:
+        raise FrameTooLarge(f"peer announced {length}-byte frame "
+                            f"(cap {MAX_FRAME})")
+    payload = recv_exact(sock, length)
+    return payload[0], payload[1:]
+
+
+def _pack_str(s: str) -> bytes:
+    b = s.encode("utf-8")
+    if len(b) > 0xFFFF:
+        raise ValueError("string field exceeds 64 KiB")
+    return _U16.pack(len(b)) + b
+
+
+class _Reader:
+    """Sequential decoder over one frame body; every read is bounds-checked
+    so a truncated body raises instead of mis-decoding."""
+
+    __slots__ = ("buf", "pos")
+
+    def __init__(self, buf: bytes) -> None:
+        self.buf = buf
+        self.pos = 0
+
+    def take(self, n: int) -> bytes:
+        if self.pos + n > len(self.buf):
+            raise TransportError("torn frame body")
+        out = self.buf[self.pos:self.pos + n]
+        self.pos += n
+        return out
+
+    def u16(self) -> int:
+        return _U16.unpack(self.take(2))[0]
+
+    def u32(self) -> int:
+        return _U32.unpack(self.take(4))[0]
+
+    def u64(self) -> int:
+        return _U64.unpack(self.take(8))[0]
+
+    def i32(self) -> int:
+        return _I32.unpack(self.take(4))[0]
+
+    def i64(self) -> int:
+        return _I64.unpack(self.take(8))[0]
+
+    def string(self) -> str:
+        return self.take(self.u16()).decode("utf-8")
+
+    def done(self) -> None:
+        if self.pos != len(self.buf):
+            raise TransportError(
+                f"frame body has {len(self.buf) - self.pos} trailing bytes")
+
+
+def encode_records(records: Sequence[tuple[bytes, bytes]]) -> bytes:
+    parts = [_U32.pack(len(records))]
+    for key, value in records:
+        parts.append(_REC.pack(len(key), len(value)))
+        parts.append(key)
+        parts.append(value)
+    return b"".join(parts)
+
+
+def decode_records(r: _Reader) -> list[tuple[bytes, bytes]]:
+    n = r.u32()
+    out = []
+    for _ in range(n):
+        klen, vlen = _REC.unpack(r.take(8))
+        out.append((r.take(klen), r.take(vlen)))
+    return out
+
+
+def send_ctrl(sock: socket.socket, obj: dict) -> None:
+    """JSON control frame (fabric coordinator<->worker channel)."""
+    send_frame(sock, OP_CTRL, json.dumps(obj, separators=(",", ":")).encode())
+
+
+def recv_ctrl(sock: socket.socket) -> dict:
+    op, body = recv_frame(sock)
+    if op != OP_CTRL:
+        raise TransportError(f"expected control frame, got opcode {op:#x}")
+    return json.loads(body)
+
+
+# -- server -----------------------------------------------------------------
+
+
+class FenceTable:
+    """Leader epochs per ``(topic, partition)``, enforced on fenced appends.
+
+    The fabric coordinator ``advance()``s an entry when it reassigns the
+    partition to a new worker; the :class:`LogServer` then rejects appends
+    carrying an older epoch. Partitions with no entry are unfenced (epoch 0
+    wire value means "no fencing requested" on the append side)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._epochs: dict[tuple[str, int], int] = {}
+
+    def advance(self, topic: str, partition: int, epoch: int) -> int:
+        """Raise the fence for a partition (monotonic; never lowers)."""
+        with self._lock:
+            cur = self._epochs.get((topic, partition), 0)
+            if epoch > cur:
+                self._epochs[(topic, partition)] = epoch
+                cur = epoch
+            return cur
+
+    def current(self, topic: str, partition: int) -> int:
+        with self._lock:
+            return self._epochs.get((topic, partition), 0)
+
+    def check(self, topic: str, partition: int, epoch: int) -> None:
+        with self._lock:
+            cur = self._epochs.get((topic, partition), 0)
+        if epoch < cur:
+            raise FencedError(
+                f"append to {topic}/{partition} with stale epoch {epoch} "
+                f"(current {cur})")
+
+
+class LogServer:
+    """Host a ``LogStore`` behind a TCP listener (one thread per
+    connection, serial request/response per connection).
+
+    ``fences`` (a :class:`FenceTable`) arms write fencing: appends with a
+    non-zero epoch are validated against it; appends with epoch 0 bypass
+    fencing (single-writer setups). ``store`` must be thread-safe — both
+    shipped stores are."""
+
+    def __init__(self, store: LogStore, host: str = "127.0.0.1",
+                 port: int = 0, *, fences: FenceTable | None = None) -> None:
+        self.store = store
+        self.fences = fences
+        self._sock = socket.create_server((host, port))
+        self._host, self._port = self._sock.getsockname()[:2]
+        self._sock.settimeout(0.2)
+        self._stop = threading.Event()
+        self._accept_thread: threading.Thread | None = None
+        self._conn_threads: list[threading.Thread] = []
+        self._lock = threading.Lock()
+
+    # -- lifecycle --
+    @property
+    def address(self) -> tuple[str, int]:
+        return (self._host, self._port)
+
+    @property
+    def host(self) -> str:
+        return self._host
+
+    @property
+    def port(self) -> int:
+        return self._port
+
+    def start(self) -> "LogServer":
+        t = threading.Thread(target=self._accept_loop,
+                             name=f"logserver-{self._port}", daemon=True)
+        self._accept_thread = t
+        t.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        with self._lock:
+            threads = list(self._conn_threads)
+        for t in threads:
+            t.join(timeout=2.0)
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            conn.settimeout(0.5)
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            t = threading.Thread(target=self._serve_conn, args=(conn,),
+                                 daemon=True)
+            with self._lock:
+                self._conn_threads.append(t)
+                self._conn_threads = [x for x in self._conn_threads
+                                      if x.is_alive() or x is t]
+            t.start()
+
+    # -- per-connection service --
+    def _serve_conn(self, conn: socket.socket) -> None:
+        try:
+            while not self._stop.is_set():
+                try:
+                    op, body = recv_frame(conn)
+                except socket.timeout:
+                    continue
+                except (TransportError, FrameTooLarge, OSError):
+                    return   # peer gone or protocol-corrupt: drop the conn
+                try:
+                    status, resp = ST_OK, self._dispatch(op, body)
+                except KeyError as e:
+                    status, resp = ST_ERR_KEY, str(e.args[0] if e.args else e).encode()
+                except FencedError as e:
+                    status, resp = ST_ERR_FENCED, str(e).encode()
+                except (ValueError, TransportError) as e:
+                    status, resp = ST_ERR_VALUE, str(e).encode()
+                except Exception as e:   # noqa: BLE001 — survive bad requests
+                    status, resp = ST_ERR, f"{type(e).__name__}: {e}".encode()
+                try:
+                    send_frame(conn, status, resp)
+                except (OSError, FrameTooLarge):
+                    return
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _dispatch(self, op: int, body: bytes) -> bytes:
+        r = _Reader(body)
+        store = self.store
+        if op == OP_APPEND_BATCH:
+            topic = r.string()
+            partition: int | None = r.i32()
+            if partition < 0:
+                partition = None
+            epoch = r.u64()
+            producer_id: str | None = r.string() or None
+            base_seq: int | None = r.i64()
+            if base_seq < 0:
+                base_seq = None
+            records = decode_records(r)
+            r.done()
+            if epoch and self.fences is not None:
+                nparts = store.num_partitions(topic)
+                if partition is not None:
+                    self.fences.check(topic, partition, epoch)
+                else:
+                    for key, _ in records:
+                        self.fences.check(
+                            topic, route_partition(key, nparts), epoch)
+            kwargs = {}
+            if producer_id is not None:
+                kwargs = {"producer_id": producer_id, "base_seq": base_seq}
+            placed = store.append_batch(topic, records, partition=partition,
+                                        **kwargs)
+            return _U32.pack(len(placed)) + b"".join(
+                _PARTOFF.pack(p, off) for p, off in placed)
+        if op == OP_READ:
+            topic, partition = r.string(), r.u32()
+            offset, max_records = r.u64(), r.u32()
+            r.done()
+            recs = store.read(topic, partition, offset,
+                              max_records=max_records)
+            parts = [_U32.pack(len(recs))]
+            for rec in recs:
+                parts.append(_OFFREC.pack(rec.offset, len(rec.key),
+                                          len(rec.value)))
+                parts.append(rec.key)
+                parts.append(rec.value)
+            return b"".join(parts)
+        if op == OP_BEGIN_OFFSET or op == OP_END_OFFSET:
+            topic, partition = r.string(), r.u32()
+            r.done()
+            fn = (store.begin_offset if op == OP_BEGIN_OFFSET
+                  else store.end_offset)
+            return _U64.pack(fn(topic, partition))
+        if op == OP_CREATE_TOPIC:
+            topic, partitions = r.string(), r.u32()
+            r.done()
+            store.create_topic(topic, partitions=partitions)
+            return b""
+        if op == OP_TOPICS:
+            r.done()
+            names = store.topics()
+            return _U32.pack(len(names)) + b"".join(
+                _pack_str(n) for n in names)
+        if op == OP_NUM_PARTITIONS:
+            topic = r.string()
+            r.done()
+            return _U32.pack(store.num_partitions(topic))
+        if op == OP_FLUSH:
+            fsync = bool(r.take(1)[0])
+            r.done()
+            store.flush(fsync=fsync)
+            return b""
+        if op == OP_FLUSH_TOPIC:
+            topic = r.string()
+            fsync = bool(r.take(1)[0])
+            r.done()
+            store.flush_topic(topic, fsync=fsync)
+            return b""
+        if op == OP_ENFORCE_RETENTION:
+            topic, retention = r.string(), r.u64()
+            r.done()
+            return _U64.pack(store.enforce_retention(topic, retention))
+        if op == OP_DROP_SEGMENTS_BELOW:
+            topic, partition, offset = r.string(), r.u32(), r.u64()
+            r.done()
+            return _U64.pack(store.drop_segments_below(
+                topic, partition, offset))
+        if op == OP_PING:
+            r.done()
+            return b""
+        raise ValueError(f"unknown opcode {op:#x}")
+
+
+# -- client -----------------------------------------------------------------
+
+
+class RemoteLogStore(LogStore):
+    """``LogStore`` client over the framed TCP protocol.
+
+    * ``root`` is **client-local scratch** (consumer-group offset stores
+      default into it); the server's segment files live under the server
+      store's own root.
+    * Idempotent operations (reads, offsets, topic admin, flush) reconnect
+      and retry transparently. ``append_batch`` also retries — delivery is
+      at-least-once, exactly-once when the caller stamps
+      ``producer_id``/``base_seq`` (the server-side store dedups retried
+      batches).
+    * ``set_fence_epoch(e)`` attaches a leader epoch to every subsequent
+      append; a fenced server rejects the write with :class:`FencedError`
+      once the coordinator has raised the fence (zombie writer).
+    * ``close()`` closes this client session only — never the server store.
+    """
+
+    def __init__(self, address: tuple[str, int], root: Path | str, *,
+                 connect_timeout: float = 5.0, op_timeout: float = 30.0,
+                 retries: int = 3, retry_backoff_sec: float = 0.05) -> None:
+        self.address = (address[0], int(address[1]))
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.connect_timeout = connect_timeout
+        self.op_timeout = op_timeout
+        self.retries = retries
+        self.retry_backoff_sec = retry_backoff_sec
+        self._lock = threading.RLock()
+        self._sock: socket.socket | None = None
+        self._epoch = 0
+        self._nparts: dict[str, int] = {}
+        self.reconnects = 0
+
+    # -- connection management --
+    def set_fence_epoch(self, epoch: int) -> None:
+        """Attach leader epoch ``epoch`` to all subsequent appends."""
+        with self._lock:
+            self._epoch = int(epoch)
+
+    def _ensure_sock(self) -> socket.socket:
+        if self._sock is None:
+            s = socket.create_connection(self.address,
+                                         timeout=self.connect_timeout)
+            s.settimeout(self.op_timeout)
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._sock = s
+        return self._sock
+
+    def _drop_sock(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def _call(self, op: int, body: bytes) -> bytes:
+        """One request/response cycle with reconnect-retry. All LogStore
+        operations are safe to retry: reads/offsets are pure, appends are
+        made idempotent by producer ids (or degrade to at-least-once)."""
+        with self._lock:
+            last: Exception | None = None
+            for attempt in range(self.retries + 1):
+                try:
+                    sock = self._ensure_sock()
+                    send_frame(sock, op, body)
+                    status, resp = recv_frame(sock)
+                except (OSError, TransportError) as e:
+                    self._drop_sock()
+                    last = e
+                    if attempt < self.retries:
+                        self.reconnects += 1
+                        time.sleep(self.retry_backoff_sec * (attempt + 1))
+                        continue
+                    raise TransportError(
+                        f"log server {self.address} unreachable after "
+                        f"{self.retries + 1} attempts: {e}") from e
+                if status == ST_OK:
+                    return resp
+                msg = resp.decode("utf-8", errors="replace")
+                if status == ST_ERR_KEY:
+                    raise KeyError(msg)
+                if status == ST_ERR_VALUE:
+                    raise ValueError(msg)
+                if status == ST_ERR_FENCED:
+                    raise FencedError(msg)
+                raise RuntimeError(f"server error: {msg}")
+            raise TransportError(str(last))  # pragma: no cover
+
+    # -- topic admin --
+    def create_topic(self, topic: str, partitions: int = 1) -> None:
+        self._call(OP_CREATE_TOPIC, _pack_str(topic) + _U32.pack(partitions))
+        with self._lock:
+            self._nparts[topic] = partitions
+
+    def topics(self) -> list[str]:
+        r = _Reader(self._call(OP_TOPICS, b""))
+        return [r.string() for _ in range(r.u32())]
+
+    def num_partitions(self, topic: str) -> int:
+        with self._lock:
+            cached = self._nparts.get(topic)
+        if cached is not None:
+            return cached   # partition counts are fixed at create_topic
+        r = _Reader(self._call(OP_NUM_PARTITIONS, _pack_str(topic)))
+        n = r.u32()
+        with self._lock:
+            self._nparts[topic] = n
+        return n
+
+    # -- producer --
+    def append(self, topic: str, key: bytes, value: bytes,
+               partition: int | None = None) -> tuple[int, int]:
+        return self.append_batch(topic, [(key, value)], partition)[0]
+
+    def append_batch(self, topic: str,
+                     records: Sequence[tuple[bytes, bytes]],
+                     partition: int | None = None, *,
+                     producer_id: str | None = None,
+                     base_seq: int | None = None
+                     ) -> list[tuple[int, int]]:
+        if not records:
+            return []
+        if producer_id is not None and partition is None:
+            raise ValueError("idempotent appends require an explicit "
+                             "partition (the producer resolves routing)")
+        with self._lock:
+            epoch = self._epoch
+        body = (_pack_str(topic)
+                + _I32.pack(-1 if partition is None else partition)
+                + _U64.pack(epoch)
+                + _pack_str(producer_id or "")
+                + _I64.pack(-1 if base_seq is None else base_seq)
+                + encode_records(records))
+        r = _Reader(self._call(OP_APPEND_BATCH, body))
+        n = r.u32()
+        if n != len(records):
+            raise TransportError(
+                f"append acked {n} records, sent {len(records)}")
+        return [_PARTOFF.unpack(r.take(12)) for _ in range(n)]
+
+    def flush(self, fsync: bool = True) -> None:
+        self._call(OP_FLUSH, bytes([int(fsync)]))
+
+    def flush_topic(self, topic: str, fsync: bool = True) -> None:
+        self._call(OP_FLUSH_TOPIC, _pack_str(topic) + bytes([int(fsync)]))
+
+    # -- consumer --
+    def read(self, topic: str, partition: int, offset: int,
+             max_records: int = 512) -> list[LogRecord]:
+        body = (_pack_str(topic) + _U32.pack(partition) + _U64.pack(offset)
+                + _U32.pack(max_records))
+        r = _Reader(self._call(OP_READ, body))
+        out = []
+        for _ in range(r.u32()):
+            off, klen, vlen = _OFFREC.unpack(r.take(16))
+            out.append(LogRecord(topic, partition, off,
+                                 r.take(klen), r.take(vlen)))
+        return out
+
+    def begin_offset(self, topic: str, partition: int) -> int:
+        return _U64.unpack(self._call(
+            OP_BEGIN_OFFSET, _pack_str(topic) + _U32.pack(partition)))[0]
+
+    def end_offset(self, topic: str, partition: int) -> int:
+        return _U64.unpack(self._call(
+            OP_END_OFFSET, _pack_str(topic) + _U32.pack(partition)))[0]
+
+    # -- retention --
+    def enforce_retention(self, topic: str, retention_bytes: int) -> int:
+        return _U64.unpack(self._call(
+            OP_ENFORCE_RETENTION,
+            _pack_str(topic) + _U64.pack(retention_bytes)))[0]
+
+    def drop_segments_below(self, topic: str, partition: int,
+                            offset: int) -> int:
+        return _U64.unpack(self._call(
+            OP_DROP_SEGMENTS_BELOW,
+            _pack_str(topic) + _U32.pack(partition) + _U64.pack(offset)))[0]
+
+    def ping(self) -> None:
+        self._call(OP_PING, b"")
+
+    def close(self) -> None:
+        with self._lock:
+            self._drop_sock()
+
+
+# -- standalone server process helper ---------------------------------------
+
+def serve_store(root: str, conn) -> None:
+    """``multiprocessing`` target: host a :class:`PartitionedLog` at
+    ``root`` behind a :class:`LogServer`, report ``(host, port)`` through
+    ``conn`` (a ``multiprocessing.Pipe`` end), then serve until the parent
+    sends anything (or hangs up). Used by the cross-process transport tests
+    and handy as a minimal standalone log daemon."""
+    store = PartitionedLog(root)
+    server = LogServer(store).start()
+    conn.send(server.address)
+    try:
+        conn.recv()            # block until shutdown signal / EOF
+    except (EOFError, OSError):
+        pass
+    server.stop()
+    store.flush(fsync=False)
+    store.close()

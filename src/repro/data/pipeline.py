@@ -3,6 +3,13 @@
 sources (RSS + firehose + websocket) → parse/filter → dedup → enrich →
 route → PublishToLog(topic) ; consumers (training loaders / file sinks)
 attach to the topic as consumer groups.
+
+``build_news_fabric`` shards the same topology over N worker *processes*
+(``core/fabric.py``): each shard group runs a vertical slice — its own
+seeded sources, parser, dedup, enrich, route — and publishes into a
+disjoint partition subset of the shared topics through the socket-
+transported log. ``build_fabric_news_worker`` is the factory the worker
+processes resolve by dotted path to rebuild their slice.
 """
 from __future__ import annotations
 
@@ -17,6 +24,8 @@ from ..core import (ConsumerGroup, DeadLetterQueue, DetectDuplicate,
                     WebSocketSource, WindowedAggregate)
 from ..core.acquisition import (AcquisitionRuntime, ConnectorPolicy,
                                 SimulatedEndpoint, SourceConnector)
+from ..core.fabric import IngestionFabric
+from ..core.flowfile import FlowFile
 from ..core.net_connectors import HttpPollConnector, WebSocketConnector
 from ..core.delivery import Consumer
 from .loader import StreamingDataLoader
@@ -46,7 +55,8 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
                         ooo_window: int = 4,
                         redelivery: int = 4,
                         socket_endpoints: dict[str, tuple] | None = None,
-                        window_sec: float | None = None
+                        window_sec: float | None = None,
+                        workers: int = 1
                         ) -> tuple[FlowGraph, LogStore]:
     """The paper §IV case study: returns (flow, log) with topic ``articles``
     (clean, deduped, enriched news) and topic ``events`` (websocket feed).
@@ -96,8 +106,23 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
     :class:`~repro.core.windows.WindowedAggregate` fans out from the
     enrich stage, closes tumbling event-time windows only when the
     fabric-wide low watermark passes them, lands them in topic
-    ``windows`` and routes stragglers to the existing ``late`` topic."""
+    ``windows`` and routes stragglers to the existing ``late`` topic.
+
+    ``workers=N`` (N > 1) switches to the multi-process fabric: the return
+    value is ``(fabric, fabric.store)`` where ``fabric`` is an unstarted
+    :class:`~repro.core.fabric.IngestionFabric` — drive it with
+    ``fabric.start()`` / ``fabric.wait()`` (see :func:`build_news_fabric`
+    for the knobs that matter there; options specific to the in-process
+    topology — ``live``/``replicas``/``window_sec``/… — do not apply)."""
     root = Path(root)
+    if workers > 1:
+        fabric = build_news_fabric(
+            root, workers=workers, n_rss=n_rss, n_firehose=n_firehose,
+            n_ws=n_ws, partitions=partitions, dedup_mode=dedup_mode,
+            seed=seed, poison_rate=poison_rate, durable=durable,
+            max_retries=max_retries, ooo_window=ooo_window,
+            redelivery=redelivery)
+        return fabric, fabric.store
     if window_sec and not live:
         raise ValueError(
             "window_sec requires a live acquisition mode (live=True or "
@@ -275,6 +300,228 @@ def expected_clean_doc_ids(n_rss: int, seed: int,
         if ff.attributes.get("kind") == "article":
             out.add(str(json.loads(ff.content)["id"]))
     return out
+
+
+# ---------------------------------------------------------------------------
+# multi-process fabric mode (core/fabric.py)
+# ---------------------------------------------------------------------------
+
+def fabric_shard_specs(*, workers: int, n_rss: int = 2000,
+                       n_firehose: int = 2000, n_ws: int = 500,
+                       partitions: int = 8, dedup_mode: str = "exact",
+                       seed: int = 0, poison_rate: float = 0.0,
+                       durable: bool = False, max_retries: int = 0,
+                       ooo_window: int = 4, redelivery: int = 4,
+                       timeout_sec: float = 300.0) -> list[dict]:
+    """Split the news case study into ``workers`` shard-group specs.
+
+    Each group ``g<i>`` gets a share of every source (distinct seeds, so the
+    shards are independent feeds), a disjoint subset of the shared topics'
+    partitions (articles: round-robin over ``max(partitions, workers)``;
+    events/late: one partition per group) and its own checkpoint topic. The
+    ``partitions`` map in each spec is exactly the fence unit a takeover
+    advances — WAL topics are intentionally absent from it (see
+    ``core/fabric.py``)."""
+    if workers < 1:
+        raise ValueError("workers must be >= 1")
+    n_articles = max(partitions, workers)
+    topics = {"articles": n_articles, "events": workers, "late": workers}
+
+    def share(total: int, i: int) -> int:
+        return total // workers + (1 if i < total % workers else 0)
+
+    shards = []
+    for i in range(workers):
+        gid = f"g{i}"
+        shards.append({
+            "group": gid,
+            "factory": "repro.data.pipeline:build_fabric_news_worker",
+            "partitions": {
+                "articles": [p for p in range(n_articles)
+                             if p % workers == i],
+                "events": [i],
+                "late": [i],
+                f"__acq__.news.{gid}": [0],
+            },
+            "timeout_sec": timeout_sec,
+            "kwargs": {
+                "n_rss": share(n_rss, i),
+                "n_firehose": share(n_firehose, i),
+                "n_ws": share(n_ws, i),
+                "seed": seed + 1000 * i,
+                "dedup_mode": dedup_mode,
+                "poison_rate": poison_rate,
+                "durable": durable,
+                "max_retries": max_retries,
+                "ooo_window": ooo_window,
+                "redelivery": redelivery,
+                "topics": topics,
+            },
+        })
+    return shards
+
+
+def build_news_fabric(root: str | Path, *, workers: int = 2,
+                      heartbeat_sec: float = 0.2,
+                      lease_timeout_sec: float = 2.0,
+                      group_timeout_sec: float = 300.0,
+                      **spec_kw) -> IngestionFabric:
+    """Fabric mode of the case study: the coordinator store + topics plus an
+    **unstarted** :class:`~repro.core.fabric.IngestionFabric` over
+    ``workers`` processes. ``spec_kw`` forwards to
+    :func:`fabric_shard_specs` (``n_rss=…``, ``durable=True`` for the
+    crash-safety scenario, …). Call ``.start()`` then ``.wait()``; consume
+    the landed topics from ``fabric.store`` afterwards."""
+    root = Path(root)
+    shards = fabric_shard_specs(
+        workers=workers, timeout_sec=group_timeout_sec, **spec_kw)
+    store = PartitionedLog(root / "log")
+    for topic, nparts in shards[0]["kwargs"]["topics"].items():
+        store.create_topic(topic, partitions=nparts)
+    return IngestionFabric(root, store, shards=shards, workers=workers,
+                           name="news-fabric",
+                           heartbeat_sec=heartbeat_sec,
+                           lease_timeout_sec=lease_timeout_sec,
+                           group_timeout_sec=group_timeout_sec)
+
+
+def build_fabric_news_worker(log: LogStore,
+                             spec: dict) -> tuple[FlowGraph, AcquisitionRuntime]:
+    """Worker-side factory (resolved by dotted path inside the worker
+    process): rebuild one shard group's slice of the news topology against
+    the coordinator's log, reached through ``RemoteLogStore``.
+
+    Processor names carry the group id so per-group state topics (ingress
+    WAL ``__wal__.__ingress__->parse.<gid>``, checkpoints
+    ``__acq__.news.<gid>``) never collide across groups; the publish sinks
+    are pinned to the group's owned partition subsets and stamped with an
+    epoch-qualified producer id, so a fenced zombie's retries can never
+    duplicate records under the new lease."""
+    gid, epoch, kw = spec["group"], spec["epoch"], spec["kwargs"]
+    owned = spec["partitions"]
+    for topic, nparts in kw["topics"].items():
+        log.create_topic(topic, partitions=nparts)   # idempotent
+
+    from ..core import ProvenanceRepository
+    g = FlowGraph(f"news-{gid}", provenance=ProvenanceRepository())
+
+    def parse(ff):
+        try:
+            doc = ff.json()
+        except (ValueError, UnicodeDecodeError):
+            return None                                  # junk → DROP
+        text = doc.get("title", "")
+        body = doc.get("body") or doc.get("text") or ""
+        if not body:
+            return None
+        return ff.with_attributes(
+            doc_id=str(doc.get("id", "")),
+            lang=str(doc.get("lang", "")),
+            text=(text + " " + body).strip())
+
+    parser = g.add(ExecuteScript(f"parse.{gid}", parse))
+    dedup = g.add(DetectDuplicate(
+        f"dedup.{gid}", mode=kw["dedup_mode"],
+        key_fn=lambda ff: ff.attributes.get("text", "").encode()))
+    enrich = g.add(LookupEnrich(
+        f"enrich.{gid}", SOURCE_REGIONS,
+        key_fn=lambda ff: ff.attributes.get("origin", "")))
+    route = g.add(RouteOnAttribute(f"route.{gid}", {
+        "en": lambda ff: ff.attributes.get("lang") == "en",
+        "other": lambda ff: True,
+    }))
+    pid = f"{gid}.e{epoch}"
+    pub_articles = g.add(PublishToLog(
+        f"pub-articles.{gid}", log, "articles",
+        partitions=owned["articles"], producer_id=f"{pid}.articles"))
+    pub_events = g.add(PublishToLog(
+        f"pub-events.{gid}", log, "events",
+        partitions=owned["events"], producer_id=f"{pid}.events"))
+    pub_late = g.add(PublishToLog(
+        f"pub-late.{gid}", log, "late",
+        partitions=owned["late"], producer_id=f"{pid}.late"))
+
+    rt = AcquisitionRuntime(g, log, name=f"news.{gid}")
+    pol = ConnectorPolicy(
+        restart=RestartPolicy(max_restarts=1_000, backoff_base_sec=0.002,
+                              backoff_cap_sec=0.05),
+        checkpoint_every_records=256,
+        lateness_sec=4.0 * max(kw["ooo_window"], kw["redelivery"], 1))
+    # durable covers the whole path, as in the single-process builder: the
+    # ingress WAL alone would still lose records sitting in interior queues
+    # when a worker is killed
+    ingress_kw: dict = {}
+    conn_kw: dict = {}
+    if kw["durable"]:
+        ingress_kw["durable"] = log
+        conn_kw["durable"] = log
+    if kw["max_retries"]:
+        ingress_kw["max_retries"] = kw["max_retries"]
+        conn_kw["max_retries"] = kw["max_retries"]
+    seed = kw["seed"]
+    # generator names carry the group id too: the ``source`` attribute
+    # survives into the landed records, giving the acceptance check an
+    # exact per-shard ground truth even when doc ids collide across seeds
+    feeds = [
+        (SimulatedEndpoint(
+            "big-rss",
+            RssAggregatorSource(kw["n_rss"], seed=seed,
+                                poison_rate=kw["poison_rate"],
+                                name=f"big-rss.{gid}"),
+            total=kw["n_rss"], ooo_window=kw["ooo_window"],
+            redelivery=kw["redelivery"]), parser),
+        (SimulatedEndpoint(
+            "twitter",
+            FirehoseSource(kw["n_firehose"], seed=seed + 1,
+                           name=f"twitter.{gid}"),
+            total=kw["n_firehose"], ooo_window=kw["ooo_window"],
+            redelivery=kw["redelivery"]), parser),
+        (SimulatedEndpoint(
+            "websocket",
+            WebSocketSource(kw["n_ws"], seed=seed + 2,
+                            name=f"websocket.{gid}"),
+            total=kw["n_ws"], ooo_window=kw["ooo_window"],
+            redelivery=kw["redelivery"]), pub_events),
+    ]
+    for ep, dest in feeds:
+        rt.add_connector(ep, dest, policy=pol, late_dest=pub_late,
+                         **ingress_kw)
+    g.connect(parser, "success", dedup, **conn_kw)
+    g.connect(dedup, "unique", enrich, **conn_kw)
+    g.connect(enrich, "success", route, **conn_kw)
+    g.connect(route, "en", pub_articles, **conn_kw)
+    g.connect(route, "other", pub_articles)
+    return g, rt
+
+
+def expected_fabric_doc_ids(shards: list[dict]) -> dict[str, set[str]]:
+    """Per-shard ground truth for the fabric acceptance: ``{group: set of
+    clean article doc ids that must land}`` (each shard replayed with its
+    own seed/size/poison parameters)."""
+    return {s["group"]: expected_clean_doc_ids(
+        s["kwargs"]["n_rss"], s["kwargs"]["seed"],
+        s["kwargs"]["poison_rate"]) for s in shards}
+
+
+def landed_doc_ids_by_shard(store: LogStore, topic: str = "articles"
+                            ) -> tuple[dict[str, set[str]], dict[str, int]]:
+    """Scan the landed topic and split it by originating shard (the
+    ``source`` attribute is ``big-rss.<gid>``). Returns ``({group: ids},
+    {group: total article records})`` — the second map exposes duplicates
+    (records minus unique ids)."""
+    ids: dict[str, set[str]] = {}
+    counts: dict[str, int] = {}
+    for p in range(store.num_partitions(topic)):
+        for rec in store.iter_records(topic, p):
+            ff = FlowFile.from_record(rec.key, rec.value)
+            src = ff.attributes.get("source", "")
+            if not src.startswith("big-rss.") or \
+                    ff.attributes.get("kind") != "article":
+                continue
+            gid = src.split(".", 1)[1]
+            ids.setdefault(gid, set()).add(ff.attributes.get("doc_id", ""))
+            counts[gid] = counts.get(gid, 0) + 1
+    return ids, counts
 
 
 def attach_training_loader(log: LogStore, *, topic: str = "articles",

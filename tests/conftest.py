@@ -3,7 +3,9 @@
 launch/dryrun.py (and subprocess-based sharding tests) force 512/8 devices.
 """
 import os
+import signal
 import sys
+import threading
 
 # Make `import repro` work when running pytest from the repo root without
 # installing the package (PYTHONPATH=src is the documented invocation; this
@@ -21,6 +23,40 @@ def tmp_log(tmp_path):
     log = PartitionedLog(tmp_path / "log")
     yield log
     log.close()
+
+
+#: per-test wall-clock ceiling; override per test with @pytest.mark.timeout(N)
+DEFAULT_TEST_TIMEOUT_SEC = 180
+
+
+@pytest.fixture(autouse=True)
+def _per_test_timeout(request):
+    """SIGALRM watchdog: a hung test (deadlocked socket, stuck worker
+    process) fails with a traceback instead of wedging the whole suite.
+    pytest-timeout is not installed in this environment, so this is the
+    stdlib equivalent — Linux main-thread only, which is where pytest runs
+    the test body."""
+    if (sys.platform != "linux"
+            or threading.current_thread() is not threading.main_thread()):
+        yield
+        return
+    marker = request.node.get_closest_marker("timeout")
+    seconds = int(marker.args[0]) if marker and marker.args \
+        else DEFAULT_TEST_TIMEOUT_SEC
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(
+            f"test exceeded {seconds}s watchdog "
+            f"({request.node.nodeid}); frame: {frame.f_code.co_filename}:"
+            f"{frame.f_lineno}")
+
+    old = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.alarm(seconds)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
 
 
 @pytest.fixture(autouse=True)

@@ -1,0 +1,128 @@
+"""Ingestion fabric: lease-table election logic (pure, injected clock) and
+end-to-end multi-process runs — clean completion and kill -9 takeover."""
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.core.fabric import FabricError, LeaseTable, resolve_factory
+from repro.data.pipeline import (build_news_fabric, expected_fabric_doc_ids,
+                                 landed_doc_ids_by_shard)
+
+
+# -- LeaseTable (no processes, no sleeps) ------------------------------------
+
+def test_lease_initial_assignment_round_robins():
+    lt = LeaseTable(lease_timeout_sec=1.0)
+    for w in ("w0", "w1"):
+        lt.register_worker(w, now=0.0)
+    out = lt.assign_initial(["g0", "g1", "g2"])
+    assert out == {"g0": "w0", "g1": "w1", "g2": "w0"}
+    assert lt.holder("g1") == ("w1", 1)
+
+
+def test_lease_expiry_uses_injected_clock():
+    lt = LeaseTable(lease_timeout_sec=1.0)
+    lt.register_worker("w0", now=0.0)
+    lt.register_worker("w1", now=0.0)
+    lt.heartbeat("w0", now=5.0)
+    assert lt.expired_workers(now=5.5) == ["w1"]
+    assert lt.expired_workers(now=0.5) == []
+
+
+def test_lease_takeover_bumps_epoch_and_picks_least_loaded():
+    lt = LeaseTable(lease_timeout_sec=1.0)
+    for w in ("w0", "w1", "w2"):
+        lt.register_worker(w, now=0.0)
+    lt.assign_initial(["g0", "g1", "g2", "g3"])   # w0:{g0,g3} w1:{g1} w2:{g2}
+    moved = lt.declare_dead("w0")
+    assert [(g, e) for g, _w, e in moved] == [("g0", 2), ("g3", 2)]
+    # least-loaded first: w1 and w2 hold one group each, so the two orphans
+    # split across them instead of piling onto one survivor
+    assert sorted(w for _g, w, _e in moved) == ["w1", "w2"]
+    assert lt.declare_dead("w0") == []             # idempotent
+
+
+def test_lease_dead_worker_cannot_heartbeat_or_complete():
+    lt = LeaseTable(lease_timeout_sec=1.0)
+    lt.register_worker("w0", now=0.0)
+    lt.register_worker("w1", now=0.0)
+    lt.assign_initial(["g0"])
+    lt.declare_dead("w0")
+    assert lt.heartbeat("w0", now=9.0) is False    # zombies stay dead
+    # a completion report under the stale lease must be rejected
+    assert lt.mark_done("g0", "w0", epoch=1) is False
+    assert lt.mark_done("g0", "w1", epoch=2) is True
+    assert lt.all_done()
+
+
+def test_lease_last_worker_death_raises():
+    lt = LeaseTable(lease_timeout_sec=1.0)
+    lt.register_worker("w0", now=0.0)
+    lt.assign_initial(["g0"])
+    with pytest.raises(FabricError):
+        lt.declare_dead("w0")
+
+
+def test_resolve_factory_validates_path():
+    fn = resolve_factory("repro.data.pipeline:build_fabric_news_worker")
+    assert callable(fn)
+    with pytest.raises(ValueError):
+        resolve_factory("repro.data.pipeline")      # no ':function'
+    with pytest.raises(ValueError):
+        resolve_factory("repro.data.pipeline:nope")
+
+
+# -- end-to-end (spawned workers + socket log) -------------------------------
+
+@pytest.mark.cluster
+@pytest.mark.slow
+def test_fabric_clean_run_lands_every_shard_exactly(tmp_path):
+    fab = build_news_fabric(tmp_path, workers=2, n_rss=400, n_firehose=400,
+                            n_ws=100, partitions=4, group_timeout_sec=120.0)
+    fab.start()
+    st = fab.wait(timeout=120.0)
+    assert not st["reassignments"]
+    exp = expected_fabric_doc_ids(list(fab.shards.values()))
+    ids, counts = landed_doc_ids_by_shard(fab.store)
+    for gid in exp:
+        assert exp[gid] - ids.get(gid, set()) == set()
+        assert counts[gid] == len(ids[gid])        # clean run: zero dupes
+    # events landed on each group's own partition
+    ev = fab.store.end_offsets("events")
+    assert sum(ev) == 100 and all(n > 0 for n in ev)
+
+
+@pytest.mark.cluster
+@pytest.mark.slow
+@pytest.mark.timeout(300)
+def test_fabric_kill9_takeover_no_acked_loss(tmp_path):
+    fab = build_news_fabric(tmp_path, workers=2, n_rss=8_000,
+                            n_firehose=8_000, n_ws=1_000, partitions=4,
+                            durable=True, heartbeat_sec=0.1,
+                            lease_timeout_sec=1.0, group_timeout_sec=240.0)
+    fab.start()
+    # kill once real progress exists but well before completion
+    deadline = time.monotonic() + 60.0
+    while (sum(fab.store.end_offsets("articles")) < 1_000
+           and time.monotonic() < deadline):
+        time.sleep(0.05)
+    assert not fab.leases.all_done()
+    fab.kill_worker("w0")
+    st = fab.wait(timeout=240.0)
+    # lease takeover: the dead worker's group moved, under a higher epoch
+    assert st["reassignments"]
+    gid, old, new, epoch = st["reassignments"][0]
+    assert old == "w0" and new == "w1" and epoch == 2
+    # zero acked-record loss: every clean article of every shard landed
+    exp = expected_fabric_doc_ids(list(fab.shards.values()))
+    ids, counts = landed_doc_ids_by_shard(fab.store)
+    for g in exp:
+        assert exp[g] - ids.get(g, set()) == set(), f"lost records in {g}"
+    # bounded duplicates: in-flight replay, not O(run length)
+    dupes = sum(counts[g] - len(ids[g]) for g in exp)
+    assert dupes <= 4096 + 64
+    # fabric-wide low watermark never went backwards through the takeover
+    hist = st["watermark_history"]
+    assert all(a <= b for a, b in zip(hist, hist[1:]))

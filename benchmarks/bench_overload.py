@@ -1,0 +1,240 @@
+"""Overload-survival acceptance scenario (ISSUE 7; paper §I/§III "highly
+irregular data rates"): a 10x wall-clock burst from a rate-shaped endpoint
+against a deliberately slow stage, run once per congestion mode
+(``throttle`` / ``shed`` / ``spill`` — ``block`` is the seed behavior the
+backpressure bench already covers), with an elastic worker pool on the slow
+stage. The contract under test, per mode:
+
+* **bounded memory** — no connection's high-water mark ever exceeds its
+  object threshold beyond the documented ``requeue`` overshoot;
+* **zero unaccounted loss** — every generated record is accounted as
+  delivered, shed (with DROP provenance), or spilled-and-replayed:
+  ``delivered + shed == generated`` and ``spill_replayed == spilled``;
+* **recovery** — after the burst ends, the bottleneck queue falls back
+  below the congestion low-water mark within a measured, reported window,
+  and the elastic pool that scaled up for the burst scales back down.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+from repro.core import (ExecuteScript, FlowGraph, PartitionedLog,
+                        PublishToLog, RestartPolicy)
+from repro.core.acquisition import (AcquisitionRuntime, ConnectorPolicy,
+                                    EndOfStream, SourceConnector)
+from repro.core.flowfile import make_flowfile
+
+#: ingress queue object threshold — small, so the burst actually congests
+_THRESHOLD = 400
+_HIGH_WATER = 0.75
+_LOW_WATER = 0.5
+
+
+class BurstEndpoint(SourceConnector):
+    """Rate-shaped endpoint: ``steady_rate`` records/sec for ``steady_sec``,
+    then ``burst_mult`` x that for ``burst_sec``, then steady again for
+    ``tail_sec``. ``poll`` releases whatever the wall clock says is due
+    (an endpoint-side buffer, like a firehose the client fell behind on),
+    so a stalled poll loop sees the backlog on its next poll instead of
+    losing it. Event times rise monotonically — no late records."""
+
+    def __init__(self, name: str, *, steady_rate: float, burst_mult: float,
+                 steady_sec: float, burst_sec: float, tail_sec: float,
+                 base_ts: float = 1_534_660_000.0) -> None:
+        self.name = name
+        self.steady_rate = steady_rate
+        self.burst_mult = burst_mult
+        self.steady_sec = steady_sec
+        self.burst_sec = burst_sec
+        self.tail_sec = tail_sec
+        self.base_ts = base_ts
+        self.total = int(steady_rate * steady_sec
+                         + steady_rate * burst_mult * burst_sec
+                         + steady_rate * tail_sec)
+        self.t0: float | None = None
+        self._emitted = 0
+        self._acked = 0
+
+    def _due(self, elapsed: float) -> int:
+        """Cumulative records due by wall-clock ``elapsed``."""
+        r, m = self.steady_rate, self.burst_mult
+        t1, t2 = self.steady_sec, self.steady_sec + self.burst_sec
+        if elapsed <= t1:
+            due = r * elapsed
+        elif elapsed <= t2:
+            due = r * t1 + r * m * (elapsed - t1)
+        else:
+            due = r * t1 + r * m * self.burst_sec + r * (elapsed - t2)
+        return min(self.total, int(due))
+
+    @property
+    def burst_end(self) -> float:
+        """Absolute monotonic time the burst phase ended (t0 required)."""
+        return self.t0 + self.steady_sec + self.burst_sec
+
+    # -- SourceConnector -----------------------------------------------------
+    def connect(self, cursor: str | None) -> None:
+        if self.t0 is None:
+            self.t0 = time.monotonic()
+        self._emitted = int(cursor) if cursor else 0
+
+    def poll(self, max_records: int) -> list:
+        if self._emitted >= self.total:
+            raise EndOfStream(self.name)
+        due = self._due(time.monotonic() - self.t0) - self._emitted
+        k = min(max(0, due), max_records)
+        if k == 0:
+            return []
+        out = []
+        for i in range(self._emitted, self._emitted + k):
+            payload = json.dumps({"id": i, "body": "x" * 64})
+            out.append(make_flowfile(
+                payload, seq=str(i),
+                **{"event.ts": f"{self.base_ts + i * 0.001:.6f}"}))
+        self._emitted += k
+        return out
+
+    def cursor(self) -> str | None:
+        return str(self._emitted)
+
+    def ack(self, cursor: str) -> None:
+        self._acked = max(self._acked, int(cursor))
+
+    def close(self) -> None: ...
+
+    def lag(self) -> int | None:
+        return self.total - self._emitted
+
+
+def run_overload_scenario(mode: str, *, steady_rate: float = 400.0,
+                          burst_mult: float = 10.0, steady_sec: float = 0.8,
+                          burst_sec: float = 1.0, tail_sec: float = 1.0,
+                          service_sec_per_record: float = 0.00125,
+                          max_workers: int = 4,
+                          recover_within_sec: float = 10.0) -> dict:
+    """One 10x-burst run under congestion mode ``mode``. The slow stage
+    sleeps ``service_sec_per_record`` per record (service rate well under
+    the burst rate), bounded by an elastic pool of ``max_workers``."""
+    tmp = Path(tempfile.mkdtemp(prefix="bench_overload_"))
+    t_start = time.monotonic()
+    try:
+        log = PartitionedLog(tmp / "log")
+        log.create_topic("out", partitions=1)
+        g = FlowGraph(f"overload-{mode}")
+
+        def slow_fn(ff):
+            time.sleep(service_sec_per_record)
+            return ff
+
+        slow = g.add(ExecuteScript("slow", slow_fn),
+                     min_workers=1, max_workers=max_workers)
+        sink = g.add(PublishToLog("sink", log, "out"))
+        g.connect(slow, "success", sink)
+
+        ep = BurstEndpoint(f"burst-{mode}", steady_rate=steady_rate,
+                           burst_mult=burst_mult, steady_sec=steady_sec,
+                           burst_sec=burst_sec, tail_sec=tail_sec)
+        pol = ConnectorPolicy(
+            restart=RestartPolicy(max_restarts=1_000,
+                                  backoff_base_sec=0.001,
+                                  backoff_cap_sec=0.01),
+            max_poll_records=128, poll_interval_sec=0.001,
+            checkpoint_every_records=100_000,   # checkpoint noise off
+            lateness_sec=1e9,
+            congestion_mode=mode,
+            congestion_high_water=_HIGH_WATER,
+            congestion_low_water=_LOW_WATER,
+            throttle_max_interval_sec=0.1)
+        rt = AcquisitionRuntime(g, log, name=f"overload-{mode}")
+        rt.add_connector(ep, slow, policy=pol, priority=1,
+                         object_threshold=_THRESHOLD)
+        bottleneck = g.nodes["slow"].input
+
+        # sample (elapsed, depth, workers) concurrently with the run; the
+        # recovery window and peak pool size are derived from these
+        samples: list[tuple[float, int, int]] = []
+        done = threading.Event()
+
+        def sampler() -> None:
+            while not done.is_set():
+                samples.append((time.monotonic(), len(bottleneck),
+                                slow.stats.workers))
+                done.wait(0.02)
+
+        st_thread = threading.Thread(target=sampler, daemon=True)
+        st_thread.start()
+        try:
+            rt.run_with_flow(timeout=120)
+        finally:
+            done.set()
+            st_thread.join(timeout=2)
+        wall = time.monotonic() - t_start
+
+        # -- accounting: delivered + shed == generated, spills replayed ----
+        delivered = sum(log.end_offsets("out"))
+        conn_stats = rt.status()["connectors"][ep.name]
+        shed = conn_stats["shed"]
+        spilled = conn_stats["spilled"]
+        replayed = conn_stats["spill_replayed"]
+        unaccounted = ep.total - delivered - shed
+        flow_st = g.status()
+
+        # -- bounded memory: hwm never beyond threshold + requeue overshoot
+        mem_ok = all(
+            c["high_water_mark"] <= c["object_threshold"]
+            + c["requeue_overshoot"]
+            for c in flow_st["connections"])
+
+        # -- recovery: depth back under low-water after the burst ended ----
+        recovery_sec = None
+        for t, depth, _ in samples:
+            if t >= ep.burst_end and depth <= _LOW_WATER * _THRESHOLD:
+                recovery_sec = t - ep.burst_end
+                break
+        peak_workers = max((w for _, _, w in samples), default=1)
+        slow_snap = flow_st["processors"]["slow"]
+        log.close()
+        return {
+            "name": f"overload_{mode}",
+            "records": ep.total,
+            "wall_sec": round(wall, 3),
+            "records_per_sec": round(delivered / wall, 1),
+            "delivered": delivered,
+            "shed": shed,
+            "spilled": spilled,
+            "spill_replayed": replayed,
+            "unaccounted": unaccounted,
+            "backpressure_engagements": sum(
+                c["backpressure_engagements"]
+                for c in flow_st["connections"]),
+            "throttle_engagements": conn_stats["throttle_engagements"],
+            "queue_high_water": max(c["high_water_mark"]
+                                    for c in flow_st["connections"]),
+            "peak_workers": peak_workers,
+            "scale_ups": slow_snap["scale_ups"],
+            "scale_downs": slow_snap["scale_downs"],
+            "recovery_sec": (round(recovery_sec, 3)
+                             if recovery_sec is not None else None),
+            "overload_bounded_memory": mem_ok,
+            "overload_zero_unaccounted_loss": (unaccounted == 0
+                                               and replayed == spilled),
+            "overload_recovered": (recovery_sec is not None
+                                   and recovery_sec <= recover_within_sec),
+        }
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def main(**kw) -> list[dict]:
+    return [run_overload_scenario(mode, **kw)
+            for mode in ("throttle", "shed", "spill")]
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

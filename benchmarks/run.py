@@ -21,6 +21,11 @@ loader variant).
                             + the kill -9 lease-takeover scenario (zero
                             acked-record loss, bounded dupes, monotone
                             fabric watermark)
+  bench_overload            overload survival: 10x burst vs a slow stage
+                            under each congestion mode (throttle/shed/
+                            spill) with an elastic worker pool — bounded
+                            memory, zero unaccounted loss, spill replay,
+                            measured recovery window
   bench_loader              host→device feed rate (ingestion fabric edge)
   roofline                  §Roofline table from artifacts/dryrun (if present)
 
@@ -58,7 +63,8 @@ sys.path.insert(0, str(_REPO_ROOT))
 
 from benchmarks import (bench_acquisition, bench_backpressure, bench_fabric,
                         bench_ingest_throughput, bench_loader,
-                        bench_recovery, bench_socket_acquisition, roofline)
+                        bench_overload, bench_recovery,
+                        bench_socket_acquisition, roofline)
 
 SNAPSHOT_PATH = _REPO_ROOT / "BENCH_ingest.json"
 
@@ -71,7 +77,8 @@ ACCEPTANCE_FLAGS = ("zero_record_loss", "watermark_monotonic",
                     "watermark_resumed_from_checkpoint",
                     "duplicates_bounded", "at_least_once_ok",
                     "no_committed_loss", "windows_closed_behind_watermark",
-                    "lease_takeover")
+                    "lease_takeover", "overload_bounded_memory",
+                    "overload_zero_unaccounted_loss", "overload_recovered")
 
 
 def emit(rows):
@@ -282,10 +289,12 @@ def main(quick: bool = False) -> None:
         emit(sock_rows)
         fabric_rows = [bench_fabric.run_failover_scenario(n=8_000)]
         emit(fabric_rows)
+        overload_rows = bench_overload.main()
+        emit(overload_rows)
         emit(bench_backpressure.main(produced=5_000))
         emit(bench_loader.main(n_docs=2_000))
         failures += check_acceptance(recovery_rows + acq_rows + sock_rows
-                                     + fabric_rows)
+                                     + fabric_rows + overload_rows)
         print("snapshot,skipped,--quick")
         if failures:
             print(f"guard,FAILED,{';'.join(failures)}")
@@ -320,12 +329,14 @@ def main(quick: bool = False) -> None:
         emit(sock_rows)
         fabric_rows = [bench_fabric.run_failover_scenario()]
         emit(fabric_rows)
+        overload_rows = bench_overload.main()
+        emit(overload_rows)
         loader_rows = bench_loader.main()
         emit(loader_rows)
         # acceptance flags gate the full run too: a loss/watermark break
         # must not silently refresh the perf trajectory
         failures += check_acceptance(recovery_rows + acq_rows + sock_rows
-                                     + fabric_rows)
+                                     + fabric_rows + overload_rows)
         if failures:
             print(f"guard,FAILED,{';'.join(failures)}")
             print("snapshot,skipped,acceptance-failure")

@@ -84,9 +84,10 @@ if TYPE_CHECKING:
     from .flow import FlowGraph, IngressHandle
     from .logstore import LogStore
 
-__all__ = ["AcquisitionError", "AcquisitionRuntime", "ConnectorError",
-           "ConnectorPolicy", "EndOfStream", "SimulatedEndpoint",
-           "SourceConnector", "default_event_ts", "emission_order"]
+__all__ = ["AcquisitionError", "AcquisitionRuntime", "CONGESTION_MODES",
+           "ConnectorError", "ConnectorPolicy", "EndOfStream",
+           "SimulatedEndpoint", "SourceConnector", "default_event_ts",
+           "emission_order"]
 
 
 class ConnectorError(RuntimeError):
@@ -144,11 +145,35 @@ class SourceConnector(abc.ABC):
         return 0
 
 
+#: Congestion responses a connector may choose (ConnectorPolicy). ``block``
+#: is the seed behavior: a full downstream queue stalls the poll loop.
+CONGESTION_MODES = ("block", "throttle", "shed", "spill")
+
+
 @dataclass(frozen=True)
 class ConnectorPolicy:
     """Per-connector ingestion policy (AsterixDB's term): how hard to try to
     stay connected, how much to pull per poll, how often to checkpoint the
-    resume cursor, and the watermark's out-of-orderness bound."""
+    resume cursor, the watermark's out-of-orderness bound — and what to do
+    when the downstream queue congests (``congestion_mode``):
+
+    * ``block`` — blocking admission; backpressure stalls the poll loop
+      (correct, but a 10× burst is indistinguishable from a hang).
+    * ``throttle`` — adaptive poll-interval backoff: the effective interval
+      doubles (capped at ``throttle_max_interval_sec``) while downstream
+      depth sits at/above ``congestion_high_water`` of its thresholds, and
+      halves back once it falls to ``congestion_low_water``.
+    * ``shed`` — priority-aware load shedding: past the high-water depth,
+      records whose priority class buys no headroom are dropped with a
+      ``shed`` counter and a ``congestion.shed`` DROP provenance event.
+      A record of priority ``p`` survives until depth reaches
+      ``min(1, congestion_high_water + p * shed_headroom_per_priority)`` —
+      the lowest class sheds first.
+    * ``spill`` — divert the overflow to a durable side topic
+      (``__spill__.<runtime>.<connector>`` in the runtime's LogStore) and
+      re-ingest it from a drain loop once depth recovers below the
+      low-water mark; nothing is lost, order is deferred.
+    """
 
     restart: RestartPolicy = RestartPolicy(
         max_restarts=16, backoff_base_sec=0.01, backoff_cap_sec=0.5)
@@ -156,6 +181,23 @@ class ConnectorPolicy:
     poll_interval_sec: float = 0.002
     checkpoint_every_records: int = 512
     lateness_sec: float = 30.0
+    congestion_mode: str = "block"
+    #: downstream depth (fraction of either threshold) where the congestion
+    #: response engages / releases
+    congestion_high_water: float = 0.75
+    congestion_low_water: float = 0.5
+    throttle_max_interval_sec: float = 0.5
+    #: extra depth headroom each priority class buys before being shed
+    shed_headroom_per_priority: float = 0.10
+
+    def __post_init__(self) -> None:
+        if self.congestion_mode not in CONGESTION_MODES:
+            raise ValueError(
+                f"congestion_mode must be one of {CONGESTION_MODES}, "
+                f"got {self.congestion_mode!r}")
+        if not 0.0 < self.congestion_low_water <= self.congestion_high_water:
+            raise ValueError("need 0 < congestion_low_water <= "
+                             "congestion_high_water")
 
 
 def default_event_ts(ff: FlowFile) -> float:
@@ -314,6 +356,14 @@ class _ConnectorEntry:
     error: BaseException | None = None
     ever_connected: bool = False
     thread: threading.Thread | None = field(default=None, repr=False)
+    # -- congestion state (ConnectorPolicy.congestion_mode) -------------------
+    #: current adaptive poll interval (throttle mode; == policy interval
+    #: while not engaged)
+    throttle_interval: float = 0.0
+    #: durable side topic for spill mode (None otherwise)
+    spill_topic: str | None = None
+    #: offset of the next spilled record to re-ingest (checkpointed)
+    spill_drained: int = 0
 
 
 class AcquisitionRuntime:
@@ -355,6 +405,7 @@ class AcquisitionRuntime:
     def add_connector(self, connector: SourceConnector,
                       dest: "Processor | str", *,
                       policy: ConnectorPolicy | None = None,
+                      priority: int = 0,
                       late_dest: "Processor | str | None" = None,
                       event_ts_fn: Callable[[FlowFile], float] | None = None,
                       object_threshold: int | None = None,
@@ -364,15 +415,24 @@ class AcquisitionRuntime:
         kwargs apply when this ingress creates the connection (fan-in joins
         the existing one). ``late_dest`` receives records behind the
         connector's watermark; without it they are stamped ``wm.late`` and
-        admitted in-band."""
+        admitted in-band. ``priority`` is the connector's admission priority
+        class (``FlowGraph.add_ingress(priority=)``): stamped on every
+        admitted record, honored by the queue's prioritizer and by shed-mode
+        congestion (higher classes shed last)."""
         name = connector.name
         if name in self._entries:
             raise ValueError(f"connector {name!r} already added")
         if self._started:
             raise RuntimeError("add_connector() after start()")
         pol = policy or ConnectorPolicy()
+        if pol.congestion_mode == "spill" and self.log is None:
+            raise ValueError(
+                f"connector {name!r}: congestion_mode='spill' needs the "
+                "runtime constructed with a LogStore (the spill topic is "
+                "durable by contract)")
         handle = self.flow.add_ingress(
-            dest, name=f"{name}-ingress", object_threshold=object_threshold,
+            dest, name=f"{name}-ingress", priority=priority,
+            object_threshold=object_threshold,
             max_retries=max_retries, durable=durable)
         late_handle = None
         if late_dest is not None:
@@ -381,6 +441,10 @@ class AcquisitionRuntime:
         saved = self._saved.get(name, {})
         tracker = self.clock.register(name, lateness=pol.lateness_sec,
                                       initial=saved.get("watermark"))
+        spill_topic = None
+        if pol.congestion_mode == "spill":
+            spill_topic = f"__spill__.{self.name}.{name}"
+            self.log.create_topic(spill_topic, partitions=1)
         self._entries[name] = _ConnectorEntry(
             connector=connector, policy=pol, dest=handle,
             late_dest=late_handle, tracker=tracker,
@@ -388,7 +452,10 @@ class AcquisitionRuntime:
             stats=ComponentStats(name), cursor=saved.get("cursor"),
             # until this incarnation checkpoints, compaction carries the
             # resumed state forward verbatim
-            ckpt_payload=json.dumps(saved).encode() if saved else None)
+            ckpt_payload=json.dumps(saved).encode() if saved else None,
+            throttle_interval=pol.poll_interval_sec,
+            spill_topic=spill_topic,
+            spill_drained=int(saved.get("spill_drained", 0)))
 
     # -- lifecycle ------------------------------------------------------------
     def start(self) -> None:
@@ -495,15 +562,18 @@ class AcquisitionRuntime:
                     connected = True
                     e.state = "CONNECTED"
                     if e.ever_connected:
-                        e.stats.reconnects += 1
+                        e.stats.add(reconnects=1)
                     e.ever_connected = True
-                    e.stats.duplicates = c.redelivered()
+                    e.stats.set(duplicates=c.redelivered())
                 try:
                     faults.fire("acquire.poll", connector=c.name,
                                 cursor=e.cursor)
                     batch = c.poll(pol.max_poll_records)
                 except EndOfStream:
-                    e.state = "COMPLETED"
+                    # the spill topic must drain before the ingress handle
+                    # completes, or the overflow would strand durably parked
+                    if self._drain_spill(e, full=True):
+                        e.state = "COMPLETED"
                     return
                 except Exception as err:
                     connected = False
@@ -515,13 +585,15 @@ class AcquisitionRuntime:
                     continue
                 failures = 0
                 if not batch:
-                    if self._stopping.wait(pol.poll_interval_sec):
+                    if not self._drain_spill(e):
+                        return
+                    if self._stopping.wait(e.throttle_interval):
                         return
                     continue
                 if not self._admit(e, batch):
                     return       # stopping truncated admission: cursor stays
                 e.cursor = c.cursor()
-                e.stats.lag = c.lag()
+                e.stats.set(lag=c.lag())
                 e.since_ckpt += len(batch)
                 if e.since_ckpt >= pol.checkpoint_every_records:
                     e.since_ckpt = 0
@@ -532,6 +604,14 @@ class AcquisitionRuntime:
                         e.state = "RECONNECTING"
                         self._close_quietly(c)
                     self._write_checkpoint(e)
+                if not self._drain_spill(e):
+                    return
+                if pol.congestion_mode == "throttle":
+                    self._adapt_throttle(e)
+                    if e.throttle_interval > pol.poll_interval_sec:
+                        # the backoff IS the congestion response: pause the
+                        # poll loop so the drainer catches up
+                        self._stopping.wait(e.throttle_interval)
         except BaseException as err:   # noqa: BLE001 — surfaced via join()
             e.state = "FAILED"
             e.error = err
@@ -581,10 +661,97 @@ class AcquisitionRuntime:
         except Exception:
             pass
 
+    # -- congestion responses (ConnectorPolicy.congestion_mode) ----------------
+    @staticmethod
+    def _depth_fraction(conn: "Connection") -> float:
+        """Downstream congestion gauge: queue depth as a fraction of
+        whichever backpressure threshold is closer."""
+        return max(len(conn) / conn.object_threshold,
+                   conn.queued_bytes / conn.size_threshold)
+
+    def _adapt_throttle(self, e: _ConnectorEntry) -> None:
+        pol = e.policy
+        depth = self._depth_fraction(e.dest.connection)
+        if depth >= pol.congestion_high_water:
+            prev = e.throttle_interval
+            e.throttle_interval = min(
+                pol.throttle_max_interval_sec,
+                max(prev, pol.poll_interval_sec, 1e-4) * 2)
+            if e.throttle_interval > prev:
+                e.stats.add(throttle_engagements=1)
+        elif depth <= pol.congestion_low_water:
+            e.throttle_interval = max(pol.poll_interval_sec,
+                                      e.throttle_interval / 2)
+
+    def _shed_split(self, e: _ConnectorEntry, batch: list[FlowFile]
+                    ) -> tuple[list[FlowFile], list[FlowFile]]:
+        """(kept, shed): a record of priority ``p`` is shed once downstream
+        depth reaches ``high_water + p * headroom`` — lowest class first."""
+        from .flow import ingress_priority
+        pol = e.policy
+        depth = self._depth_fraction(e.dest.connection)
+        if depth < pol.congestion_high_water:
+            return batch, []
+        kept, shed = [], []
+        for ff in batch:
+            ceiling = min(1.0, pol.congestion_high_water
+                          + ingress_priority(ff)
+                          * pol.shed_headroom_per_priority)
+            (shed if depth >= ceiling else kept).append(ff)
+        return kept, shed
+
+    def _spill(self, e: _ConnectorEntry, ffs: list[FlowFile]) -> None:
+        """Park the overflow on the connector's durable side topic."""
+        self.log.append_batch(e.spill_topic,
+                              [ff.to_record() for ff in ffs], partition=0)
+        self.log.flush_topic(e.spill_topic, fsync=False)
+        e.stats.add(spilled=len(ffs))
+        self.flow.provenance.record_batch("ROUTE", ffs, e.connector.name,
+                                          details="congestion.spill")
+
+    def _drain_spill(self, e: _ConnectorEntry, full: bool = False) -> bool:
+        """Re-ingest spilled records once downstream depth recovered below
+        the low-water mark (``full=True``: drain everything, end-of-stream).
+        One slice per call keeps the poll loop live. Drained records were
+        already watermark-split and stamped at spill time, so they are
+        offered as-is — no re-observation. False = stopping truncated."""
+        if e.spill_topic is None:
+            return True
+        conn = e.dest.connection
+        pol = e.policy
+        while True:
+            end = self.log.end_offset(e.spill_topic, 0)
+            if e.spill_drained >= end:
+                return True
+            if not full \
+                    and self._depth_fraction(conn) > pol.congestion_low_water:
+                return True
+            recs = self.log.read(e.spill_topic, 0, e.spill_drained,
+                                 pol.max_poll_records)
+            if not recs:
+                return True
+            ffs = [FlowFile.from_record(r.key, r.value) for r in recs]
+            self.flow.provenance.record_batch(
+                "REPLAY", ffs, e.connector.name, details="congestion.spill")
+            if not self._offer(conn, ffs):
+                return False
+            e.spill_drained = recs[-1].offset + 1
+            e.stats.add(spill_replayed=len(ffs), out_records=len(ffs),
+                        out_bytes=sum(ff.size for ff in ffs))
+            if not full:
+                return True
+
     # -- admission ------------------------------------------------------------
     def _admit(self, e: _ConnectorEntry, batch: list[FlowFile]) -> bool:
-        """Watermark-split ``batch`` and offer it downstream with
-        backpressure. True only when every record was admitted."""
+        """Stamp priority, watermark-split ``batch``, apply the connector's
+        congestion response, and offer the survivors downstream with
+        backpressure. True only when every surviving record was admitted
+        (shed and spilled records count as handled, not admitted)."""
+        from .flow import ATTR_INGRESS_PRIORITY
+        if e.dest.priority:
+            p = str(e.dest.priority)
+            batch = [ff.with_attributes(**{ATTR_INGRESS_PRIORITY: p})
+                     for ff in batch]
         tracker, ts_fn = e.tracker, e.event_ts_fn
         on_time: list[FlowFile] = []
         late: list[FlowFile] = []
@@ -596,23 +763,43 @@ class AcquisitionRuntime:
             else:
                 on_time.append(ff)
         stats = e.stats
-        stats.in_records += len(batch)
-        stats.in_bytes += sum(ff.size for ff in batch)
-        stats.late_records = tracker.late
-        stats.watermark = tracker.watermark
+        stats.add(in_records=len(batch),
+                  in_bytes=sum(ff.size for ff in batch))
+        stats.set(late_records=tracker.late, watermark=tracker.watermark)
+        pol = e.policy
         prov = self.flow.provenance
         ok = True
+        admitted = 0
+        admitted_bytes = 0
         if on_time:
             prov.record_batch("CREATE", on_time, e.connector.name)
-            ok &= self._offer(e.dest.connection, on_time)
+            if pol.congestion_mode == "shed":
+                on_time, shed = self._shed_split(e, on_time)
+                if shed:
+                    stats.add(shed=len(shed))
+                    prov.record_batch("DROP", shed, e.connector.name,
+                                      details="congestion.shed")
+            elif pol.congestion_mode == "spill" \
+                    and self._depth_fraction(e.dest.connection) \
+                    >= pol.congestion_high_water:
+                self._spill(e, on_time)
+                on_time = []
+            if on_time:
+                ok &= self._offer(e.dest.connection, on_time)
+                if ok:
+                    admitted += len(on_time)
+                    admitted_bytes += sum(ff.size for ff in on_time)
         if late:
             prov.record_batch("CREATE", late, e.connector.name,
                               details="late")
             target = e.late_dest or e.dest
-            ok &= self._offer(target.connection, late)
-        if ok:
-            stats.out_records += len(batch)
-            stats.out_bytes += sum(ff.size for ff in batch)
+            delivered = self._offer(target.connection, late)
+            if delivered:
+                admitted += len(late)
+                admitted_bytes += sum(ff.size for ff in late)
+            ok &= delivered
+        if admitted:
+            stats.add(out_records=admitted, out_bytes=admitted_bytes)
         return ok
 
     def _offer(self, conn: "Connection", ffs: list[FlowFile]) -> bool:
@@ -631,6 +818,7 @@ class AcquisitionRuntime:
             "cursor": e.cursor,
             "watermark": e.tracker.watermark,
             "acquired": e.stats.in_records,
+            "spill_drained": e.spill_drained,
         }).encode()
 
     def _write_checkpoint(self, e: _ConnectorEntry) -> None:

@@ -87,6 +87,12 @@ class Connection:
         self.total_out = 0
         self.backpressure_engagements = 0
         self._hwm_objects = 0
+        # consumer-side redelivery bypasses the thresholds (see requeue());
+        # ``requeue_overshoot`` counts the records pushed while the queue was
+        # already at/over threshold — the documented bounded overshoot the
+        # overload scenario's memory check must allow for
+        self.requeued = 0
+        self.requeue_overshoot = 0
 
     # -- queue internals (call with lock held) --------------------------------
     def _count_locked(self) -> int:
@@ -112,6 +118,22 @@ class Connection:
         self._bytes -= ff.size
         self.total_out += 1
         return ff
+
+    def install_prioritizer(
+            self, prioritizer: Callable[[FlowFile], float]) -> None:
+        """Switch an existing FIFO queue to heap ordering (a prioritized
+        ingress fanning into a connection that was created FIFO). Queued
+        records migrate in arrival order; no-op when a prioritizer is
+        already installed."""
+        with self._lock:
+            if self._prioritizer is not None:
+                return
+            self._prioritizer = prioritizer
+            while self._fifo:
+                ff = self._fifo.popleft()
+                heapq.heappush(
+                    self._heap,
+                    (prioritizer(ff), next(self._fifo_counter), ff))
 
     # -- state ---------------------------------------------------------------
     def __len__(self) -> int:
@@ -192,6 +214,12 @@ class Connection:
                     if deadline is not None:
                         remaining = deadline - time.monotonic()
                         if remaining <= 0:
+                            if accepted:
+                                # records pushed since the last stall were
+                                # never announced — a consumer blocked in
+                                # poll() with no timeout would sleep forever
+                                # over a non-empty queue
+                                self._not_empty.notify_all()
                             return accepted
                     self._not_full.wait(remaining)
                 self._push_locked(ff)
@@ -208,7 +236,10 @@ class Connection:
         batch plus pending retries."""
         with self._lock:
             for ff in ffs:
+                if self._full_locked():
+                    self.requeue_overshoot += 1
                 self._push_locked(ff)
+            self.requeued += len(ffs)
             self._not_empty.notify_all()
 
     # -- consumer side -------------------------------------------------------
@@ -246,17 +277,24 @@ class Connection:
 
     def snapshot(self) -> dict:
         with self._lock:
+            n = self._count_locked()
             return {
                 "name": self.name,
-                "queued_objects": self._count_locked(),
+                "queued_objects": n,
                 "queued_bytes": self._bytes,
                 "object_threshold": self.object_threshold,
                 "size_threshold": self.size_threshold,
+                # depth as a fraction of each threshold — what congestion
+                # policies and elastic worker pools act on
+                "utilization_objects": n / self.object_threshold,
+                "utilization_bytes": self._bytes / self.size_threshold,
                 "backpressure": self._full_locked(),
                 "backpressure_engagements": self.backpressure_engagements,
                 "high_water_mark": self._hwm_objects,
                 "total_in": self.total_in,
                 "total_out": self.total_out,
+                "requeued": self.requeued,
+                "requeue_overshoot": self.requeue_overshoot,
             }
 
 
@@ -314,6 +352,12 @@ class DurableConnection(Connection):
         self._acks_since_gc = 0
         self._acked = self._load_frontier()
         self.replayed = self._replay()
+
+    def install_prioritizer(
+            self, prioritizer: Callable[[FlowFile], float]) -> None:
+        raise RuntimeError(
+            f"{self.name}: durable connections are FIFO-only "
+            "(the acked frontier is a count prefix)")
 
     def _load_frontier(self) -> int:
         end = self.log.end_offset(self.ack_topic, 0)
@@ -410,6 +454,9 @@ class DurableConnection(Connection):
         this queue cannot deadlock itself."""
         with self._wal_lock:
             with self._lock:
+                room = max(0, self.object_threshold - self._count_locked())
+                self.requeue_overshoot += max(0, len(ffs) - room)
+                self.requeued += len(ffs)
                 self._journal_and_push_locked(ffs)
 
     # -- consumer side -------------------------------------------------------

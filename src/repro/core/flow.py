@@ -30,6 +30,18 @@ class FlowError(RuntimeError):
     pass
 
 
+#: FlowFile attribute carrying the admission priority class (stamped by the
+#: acquisition runtime for ingresses opened with ``priority != 0``). Higher
+#: values are delivered first (queue prioritizer) and shed last (congestion
+#: shedding, see core/acquisition.py).
+ATTR_INGRESS_PRIORITY = "ingress.priority"
+
+
+def ingress_priority(ff: FlowFile) -> int:
+    """Priority class stamped at admission (0 when never stamped)."""
+    return int(ff.attributes.get(ATTR_INGRESS_PRIORITY, "0"))
+
+
 class _ExternalUpstream:
     """Sentinel upstream for records admitted from outside the graph (a live
     connector's poll loop). Quacks like a FlowNode for the one thing the
@@ -49,9 +61,12 @@ class IngressHandle:
     the destination worker can drain and terminate."""
 
     def __init__(self, name: str, connection: Connection,
-                 upstream: _ExternalUpstream) -> None:
+                 upstream: _ExternalUpstream, priority: int = 0) -> None:
         self.name = name
         self.connection = connection
+        #: admission priority class — the producer stamps it onto every
+        #: record it admits (``ATTR_INGRESS_PRIORITY``); higher wins
+        self.priority = priority
         self._upstream = upstream
 
     def complete(self) -> None:
@@ -82,10 +97,18 @@ class FlowGraph:
 
     # -- assembly -------------------------------------------------------------
     def add(self, processor: Processor,
-            restart_policy: RestartPolicy | None = None) -> Processor:
+            restart_policy: RestartPolicy | None = None,
+            min_workers: int | None = None,
+            max_workers: int | None = None) -> Processor:
+        """Register a processor. ``min_workers``/``max_workers`` override the
+        class-level elastic pool bounds (see core/processor.py docstring);
+        eligibility is validated at :meth:`start`, once the input connection
+        type is known."""
         if processor.name in self.nodes:
             raise FlowError(f"duplicate processor name {processor.name!r}")
-        self.nodes[processor.name] = FlowNode(processor, restart_policy)
+        self.nodes[processor.name] = FlowNode(
+            processor, restart_policy,
+            min_workers=min_workers, max_workers=max_workers)
         return processor
 
     def connect(self, src: Processor | str, relationship: str,
@@ -141,6 +164,7 @@ class FlowGraph:
 
     def add_ingress(self, dst: Processor | str, *,
                     name: str | None = None,
+                    priority: int = 0,
                     object_threshold: int | None = None,
                     size_threshold: int | None = None,
                     max_retries: int | None = None,
@@ -154,7 +178,15 @@ class FlowGraph:
         ingresses and ordinary upstream connections — fan into the same
         queue. Each call returns its own handle: the destination terminates
         only after *every* handle completed, every graph upstream finished,
-        and the queue drained."""
+        and the queue drained.
+
+        ``priority`` declares the admission priority class: the producer
+        stamps it onto every record (``ATTR_INGRESS_PRIORITY``), a priority
+        queue delivers higher classes first, and congestion shedding drops
+        lower classes first. The first ingress to *create* a non-durable
+        connection with any nonzero priority in play installs the priority
+        prioritizer; durable connections stay FIFO (the WAL frontier is a
+        count prefix), so priority there only steers the shed path."""
         dst_name = dst if isinstance(dst, str) else dst.name
         if dst_name not in self.nodes:
             raise FlowError("add_ingress() before add()")
@@ -175,13 +207,24 @@ class FlowGraph:
             if durable is not None:
                 conn = DurableConnection(conn_name, durable, **kwargs)
             else:
-                conn = Connection(conn_name, **kwargs)
+                prioritizer = None
+                if priority != 0:
+                    prioritizer = lambda ff: -ingress_priority(ff)  # noqa: E731
+                conn = Connection(conn_name, prioritizer=prioritizer, **kwargs)
             dst_node.input = conn
             self.connections.append(conn)
+        elif (priority != 0
+              and not isinstance(dst_node.input, DurableConnection)):
+            # a later prioritized ingress fanning into an existing FIFO
+            # queue upgrades it to priority ordering (no-op if one is
+            # already installed)
+            dst_node.input.install_prioritizer(
+                lambda ff: -ingress_priority(ff))
         ingress_name = name or f"ingress-{len(self._ingresses)}->{dst_name}"
         upstream = _ExternalUpstream(ingress_name)
         dst_node.upstreams.append(upstream)
-        handle = IngressHandle(ingress_name, dst_node.input, upstream)
+        handle = IngressHandle(ingress_name, dst_node.input, upstream,
+                               priority=priority)
         self._ingresses.append(handle)
         return handle
 
@@ -232,9 +275,33 @@ class FlowGraph:
 
     def _validate(self) -> None:
         for node in self.nodes.values():
-            if not isinstance(node.processor, Source) and node.input is None:
+            proc = node.processor
+            if not isinstance(proc, Source) and node.input is None:
                 raise FlowError(
-                    f"processor {node.processor.name!r} has no input connection")
+                    f"processor {proc.name!r} has no input connection")
+            if node.max_workers > 1:
+                # pool eligibility (see core/processor.py docstring): the
+                # combinations below are unsound, not merely slow
+                if isinstance(proc, Source):
+                    raise FlowError(
+                        f"{proc.name!r}: sources cannot run a worker pool "
+                        "(one replayable generator, one cursor)")
+                if isinstance(node.input, DurableConnection):
+                    raise FlowError(
+                        f"{proc.name!r}: worker pools are unsupported on a "
+                        "durable input — the acked frontier is a count "
+                        "prefix, and concurrent out-of-order acks would "
+                        "cover unsettled records")
+                if proc.buffers_across_triggers:
+                    raise FlowError(
+                        f"{proc.name!r}: buffers_across_triggers processors "
+                        "hold cross-trigger state; a worker pool would "
+                        "interleave it")
+                if proc.idle_trigger_sec is not None:
+                    raise FlowError(
+                        f"{proc.name!r}: idle-triggered processors are "
+                        "single-threaded state machines; a worker pool "
+                        "would fire their empty trigger concurrently")
 
     def stop(self) -> None:
         self.stopping.set()

@@ -1,5 +1,13 @@
 """Component statistics — NiFi's status-history view (paper §IV.C:
-"number of bytes read, written, in, and out in 5 minutes")."""
+"number of bytes read, written, in, and out in 5 minutes").
+
+``ComponentStats`` is mutated from several threads at once (the node's
+worker pool, acquisition poll loops, the supervisor) — all updates go
+through the locked :meth:`ComponentStats.add` / :meth:`ComponentStats.set`
+helpers so counters never lose increments and :meth:`snapshot` returns one
+consistent view (no torn in/out pairs). Direct attribute reads stay cheap
+and are fine for monotone single-writer gauges.
+"""
 from __future__ import annotations
 
 import threading
@@ -29,19 +37,53 @@ class ComponentStats:
     duplicates: int = 0
     lag: int | None = None
     watermark: float | None = None
+    # congestion-response counters (ConnectorPolicy.congestion_mode):
+    # records dropped by priority-aware load shedding, records diverted to /
+    # replayed from the durable spill topic, and poll-throttle engagements
+    shed: int = 0
+    spilled: int = 0
+    spill_replayed: int = 0
+    throttle_engagements: int = 0
+    # elastic worker-pool gauges (flow engine; see core/processor.py)
+    workers: int = 1
+    scale_ups: int = 0
+    scale_downs: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  init=False, repr=False, compare=False)
+
+    def add(self, **deltas: int) -> None:
+        """Atomically increment counters (``+=`` from several threads loses
+        updates: the read-modify-write is three bytecodes)."""
+        with self._lock:
+            for k, v in deltas.items():
+                setattr(self, k, getattr(self, k) + v)
+
+    def set(self, **values) -> None:
+        """Atomically assign gauges (paired gauges set in one call are seen
+        together by ``snapshot()``)."""
+        with self._lock:
+            for k, v in values.items():
+                setattr(self, k, v)
 
     def snapshot(self) -> dict:
-        return {
-            "name": self.name,
-            "in_records": self.in_records, "in_bytes": self.in_bytes,
-            "out_records": self.out_records, "out_bytes": self.out_bytes,
-            "dropped": self.dropped,
-            "restarts": self.restarts, "retries": self.retries,
-            "dead_lettered": self.dead_lettered,
-            "reconnects": self.reconnects, "late_records": self.late_records,
-            "duplicates": self.duplicates,
-            "lag": self.lag, "watermark": self.watermark,
-        }
+        with self._lock:
+            return {
+                "name": self.name,
+                "in_records": self.in_records, "in_bytes": self.in_bytes,
+                "out_records": self.out_records, "out_bytes": self.out_bytes,
+                "dropped": self.dropped,
+                "restarts": self.restarts, "retries": self.retries,
+                "dead_lettered": self.dead_lettered,
+                "reconnects": self.reconnects,
+                "late_records": self.late_records,
+                "duplicates": self.duplicates,
+                "lag": self.lag, "watermark": self.watermark,
+                "shed": self.shed, "spilled": self.spilled,
+                "spill_replayed": self.spill_replayed,
+                "throttle_engagements": self.throttle_engagements,
+                "workers": self.workers, "scale_ups": self.scale_ups,
+                "scale_downs": self.scale_downs,
+            }
 
 
 class WindowedCounter:
@@ -75,12 +117,17 @@ class WindowedCounter:
             return sum(v for _, v in self._buckets)
 
     def rate_per_sec(self) -> float:
+        """Observed rate over the elapsed time from the oldest surviving
+        bucket to *now* (clamped to ``window_sec``). Dividing by occupied-
+        bucket span instead would freeze a burst's peak rate for the whole
+        window after the burst ends — the rate must decay as idle time
+        accumulates, reaching 0 only when the window fully evicts."""
         with self._lock:
             now = time.monotonic()
             self._evict(now)
             if not self._buckets:
                 return 0.0
-            span = max(self.bucket_sec,
-                       (self._buckets[-1][0] - self._buckets[0][0] + 1)
-                       * self.bucket_sec)
+            span = min(self.window_sec,
+                       max(self.bucket_sec,
+                           now - self._buckets[0][0] * self.bucket_sec))
             return sum(v for _, v in self._buckets) / span

@@ -33,6 +33,26 @@ which is penalized (``retry_penalty_sec * 2**k``) and re-queued with a
 is routed to the graph's dead-letter connection (or dropped with DROP
 provenance if none is wired). Innocent records in a failing batch may be
 re-emitted — duplicates are allowed, loss is not.
+
+Elastic worker pools (congestion response, paper §I "highly irregular
+data rates")
+------------------------------------------------------------------------
+``graph.add(proc, max_workers=N)`` (or the class attrs
+``min_workers``/``max_workers``) lets a processor's input be drained by up
+to N threads. The node's primary worker stays the supervised one — it owns
+restarts, penalized-retry redelivery, idle triggers and the final flush —
+and doubles as the pool governor: when the input connection's depth sits
+at/above ``scale_up_utilization`` of its object threshold for
+``scale_up_polls`` consecutive polls, it spawns a helper drainer
+(``scale_ups`` counter, ``workers`` gauge); a helper retires itself after
+``scale_down_idle_polls`` consecutive empty polls (``scale_downs``). A
+helper that hits a processor-level failure hands its in-flight batch back
+to the queue and exits, so the failure re-surfaces on the primary's fully
+supervised path. Pools require a thread-safe ``process``/``on_trigger`` and
+forfeit cross-record ordering; they are refused for durable inputs (the
+acked frontier is a count prefix — concurrent out-of-order acks would cover
+unsettled records), for ``buffers_across_triggers`` processors, and for
+idle-triggered ones (single-threaded state machines).
 """
 from __future__ import annotations
 
@@ -113,6 +133,19 @@ class Processor:
     #: watermark) can fire without waiting for the next record. ``None``
     #: (default) keeps the engine's poll loop unchanged.
     idle_trigger_sec: float | None = None
+    #: elastic worker pool bounds (see module docstring). ``max_workers=1``
+    #: (default) keeps the engine single-threaded per node; raising it
+    #: asserts the processor's trigger path is thread-safe. Overridable per
+    #: node via ``FlowGraph.add(proc, min_workers=, max_workers=)``.
+    min_workers: int = 1
+    max_workers: int = 1
+    #: input-depth fraction (vs the object threshold) that counts as
+    #: congested for scale-up purposes
+    scale_up_utilization: float = 0.75
+    #: consecutive congested polls before the primary adds a helper
+    scale_up_polls: int = 3
+    #: consecutive empty polls before a surplus helper retires
+    scale_down_idle_polls: int = 20
 
     def __init__(self, name: str) -> None:
         self.name = name
@@ -184,7 +217,7 @@ class _Worker(threading.Thread):
                         graph._record_error(proc.name, e)
                         return
                     node.restarts += 1
-                    proc.stats.restarts += 1
+                    proc.stats.add(restarts=1)
                     delay = policy.backoff_for(node.restarts)
                     node.backoff_history.append(delay)
                     node.state = "RESTARTING"
@@ -209,14 +242,14 @@ class _Worker(threading.Thread):
         prov = self.graph.provenance
         if rel == REL_DROP:
             prov.record_batch("DROP", ffs, proc.name)
-            proc.stats.dropped += len(ffs)
+            proc.stats.add(dropped=len(ffs))
             return True
         conns = node.outputs.get(rel)
         if not conns:
             # unwired relationship == auto-terminated (NiFi semantics)
             prov.record_batch("DROP", ffs, proc.name,
                               details=f"auto-terminated:{rel}")
-            proc.stats.dropped += len(ffs)
+            proc.stats.add(dropped=len(ffs))
             return True
         prov.record_batch("ROUTE", ffs, proc.name, details=rel)
         delivered = len(ffs)
@@ -226,8 +259,8 @@ class _Worker(threading.Thread):
                 offered += conn.offer_batch(ffs[offered:], block=True,
                                             timeout=0.25)
             delivered = min(delivered, offered)
-        proc.stats.out_records += delivered
-        proc.stats.out_bytes += sum(ff.size for ff in ffs[:delivered])
+        proc.stats.add(out_records=delivered,
+                       out_bytes=sum(ff.size for ff in ffs[:delivered]))
         return delivered == len(ffs)
 
     def _emit_all(self, outputs: Iterable[tuple[str, FlowFile]]) -> bool:
@@ -253,8 +286,8 @@ class _Worker(threading.Thread):
         def trigger(batch: list[FlowFile]) -> None:
             faults.fire(site, batch=batch)
             self.graph.provenance.record_batch("CREATE", batch, proc.name)
-            proc.stats.in_records += len(batch)
-            proc.stats.in_bytes += sum(ff.size for ff in batch)
+            proc.stats.add(in_records=len(batch),
+                           in_bytes=sum(ff.size for ff in batch))
             self._emit_all(proc.on_trigger(batch))
             # counted only after a full emit: a supervisor restart replays
             # the replayable generator from here (at-least-once — a crash
@@ -312,51 +345,165 @@ class _Worker(threading.Thread):
         deferred = 0
         idle_every = proc.idle_trigger_sec
         last_trigger = time.monotonic()
-        while True:
-            if node.pending_retries:
-                self._requeue_due_retries(conn)
-            if self.graph.stopping.is_set():
-                # abandon the backlog on shutdown. This also closes a WAL
-                # frontier hole: the count-based frontier tolerates at most
-                # one unsettled (un-acked) batch, and unsettlement only
-                # happens when stopping truncates an emit — so no batch may
-                # be processed (and acked) after stopping lands.
-                break
-            batch = conn.poll_batch(proc.batch_size, timeout=0.05)
-            if not batch:
-                if self.graph.stopping.is_set():
-                    break
+        # -- elastic pool governor state (primary worker only) ---------------
+        for _ in range(max(0, node.min_workers - 1)):
+            self._spawn_helper(governor=False)
+        congested_polls = 0
+        try:
+            while True:
                 if node.pending_retries:
-                    continue          # penalized records still owed to us
-                upstream_done = all(u.done.is_set() for u in node.upstreams)
-                if upstream_done and len(conn) == 0:
+                    self._requeue_due_retries(conn)
+                if self.graph.stopping.is_set():
+                    # abandon the backlog on shutdown. This also closes a WAL
+                    # frontier hole: the count-based frontier tolerates at
+                    # most one unsettled (un-acked) batch, and unsettlement
+                    # only happens when stopping truncates an emit — so no
+                    # batch may be processed (and acked) after stopping lands.
                     break
-                if (idle_every is not None
-                        and time.monotonic() - last_trigger >= idle_every):
-                    # opt-in empty trigger: lets state-driven processors
-                    # (watermark window closes) fire while the queue is
-                    # quiet. Nothing to ack — the batch is empty.
-                    last_trigger = time.monotonic()
-                    self._process_batch(conn, [], site)
-                continue
-            if durable and conn.max_retries > 0:
-                self._wait_for_penalties(batch)
-            last_trigger = time.monotonic()
-            proc.stats.in_records += len(batch)
-            proc.stats.in_bytes += sum(ff.size for ff in batch)
-            settled = self._process_batch(conn, batch, site)
-            if durable and settled:
-                # every record emitted / re-journaled / dead-lettered: the
-                # WAL frontier may advance past this batch
-                if defer_acks:
-                    deferred += len(batch)
-                else:
-                    conn.ack(len(batch))
+                if node.max_workers > 1:
+                    # scale up on sustained congestion: depth at/over the
+                    # high-water fraction of the object threshold for K
+                    # consecutive polls (the gauges FlowGraph.status() shows)
+                    if len(conn) >= proc.scale_up_utilization \
+                            * conn.object_threshold:
+                        congested_polls += 1
+                        if congested_polls >= proc.scale_up_polls \
+                                and node.pool_size < node.max_workers:
+                            self._spawn_helper()
+                            congested_polls = 0
+                    else:
+                        congested_polls = 0
+                batch = conn.poll_batch(proc.batch_size, timeout=0.05)
+                if not batch:
+                    if self.graph.stopping.is_set():
+                        break
+                    if node.pending_retries:
+                        continue      # penalized records still owed to us
+                    upstream_done = all(u.done.is_set()
+                                        for u in node.upstreams)
+                    # pool_size == 1 gate: a helper may still hold an
+                    # in-flight batch that a failure would hand back to the
+                    # queue — the primary must outlive every helper so that
+                    # replay lands on its supervised path
+                    if upstream_done and len(conn) == 0 \
+                            and node.pool_size == 1:
+                        break
+                    if (idle_every is not None
+                            and time.monotonic() - last_trigger >= idle_every):
+                        # opt-in empty trigger: lets state-driven processors
+                        # (watermark window closes) fire while the queue is
+                        # quiet. Nothing to ack — the batch is empty.
+                        last_trigger = time.monotonic()
+                        self._process_batch(conn, [], site)
+                    continue
+                if durable and conn.max_retries > 0:
+                    self._wait_for_penalties(batch)
+                last_trigger = time.monotonic()
+                proc.stats.add(in_records=len(batch),
+                               in_bytes=sum(ff.size for ff in batch))
+                settled = self._process_batch(conn, batch, site)
+                if durable and settled:
+                    # every record emitted / re-journaled / dead-lettered:
+                    # the WAL frontier may advance past this batch
+                    if defer_acks:
+                        deferred += len(batch)
+                    else:
+                        conn.ack(len(batch))
+        finally:
+            # helpers must drain their in-flight batches before the final
+            # flush / on_stop — and before node.done releases downstreams
+            self._join_helpers()
         flushed = self._emit_all(proc.final_flush())
         if defer_acks and deferred and flushed \
                 and not self.graph.stopping.is_set():
             conn.ack(deferred)
         proc.on_stop()
+
+    # -- elastic pool (see module docstring) -----------------------------------
+    def _spawn_helper(self, governor: bool = True) -> None:
+        node = self.node
+        with node.pool_lock:
+            if node.pool_size >= node.max_workers:
+                return
+            node.pool_size += 1
+            idx = node.helpers_spawned = node.helpers_spawned + 1
+            t = threading.Thread(
+                target=self._run_helper,
+                name=f"flow-{node.processor.name}-w{idx}", daemon=True)
+            node.helpers.append(t)
+        node.processor.stats.set(workers=node.pool_size)
+        if governor:     # the initial min_workers fill is not a scale event
+            node.processor.stats.add(scale_ups=1)
+        t.start()
+
+    def _run_helper(self) -> None:
+        """Surplus drainer for one node: poll → trigger → emit, no
+        supervision duties. Exits on shutdown, end of stream, sustained
+        idleness (scale-down), or a processor-level failure — in that last
+        case ``_process_batch``'s escalation path has already handed the
+        in-flight batch back to the queue, so the failure replays on the
+        primary's supervised path instead of being lost."""
+        node = self.node
+        proc = node.processor
+        conn = node.input
+        site = "proc." + proc.name
+        idle_polls = 0
+        departed = False
+
+        def depart() -> None:
+            nonlocal departed
+            with node.pool_lock:
+                node.pool_size -= 1
+                node.helpers.remove(threading.current_thread())
+            departed = True
+            proc.stats.set(workers=node.pool_size)
+
+        try:
+            while not self.graph.stopping.is_set():
+                batch = conn.poll_batch(proc.batch_size, timeout=0.05)
+                if not batch:
+                    upstream_done = all(u.done.is_set()
+                                        for u in node.upstreams)
+                    if upstream_done and len(conn) == 0:
+                        return
+                    idle_polls += 1
+                    if idle_polls >= proc.scale_down_idle_polls:
+                        # check-and-leave under the pool lock: two idle
+                        # helpers racing here must not both retire past
+                        # min_workers
+                        with node.pool_lock:
+                            retire = node.pool_size > node.min_workers
+                            if retire:
+                                node.pool_size -= 1
+                                node.helpers.remove(
+                                    threading.current_thread())
+                        if retire:
+                            departed = True
+                            proc.stats.set(workers=node.pool_size)
+                            proc.stats.add(scale_downs=1)
+                            return
+                        idle_polls = 0
+                    continue
+                idle_polls = 0
+                proc.stats.add(in_records=len(batch),
+                               in_bytes=sum(ff.size for ff in batch))
+                try:
+                    self._process_batch(conn, batch, site)
+                except Exception as e:   # noqa: BLE001 — replays on primary
+                    node.last_error = e
+                    return
+        finally:
+            if not departed:
+                depart()
+
+    def _join_helpers(self) -> None:
+        while True:
+            with self.node.pool_lock:
+                helpers = list(self.node.helpers)
+            if not helpers:
+                return
+            for t in helpers:
+                t.join()
 
     def _wait_for_penalties(self, batch: list[FlowFile]) -> None:
         """Durable-connection penalization: retried records are re-queued
@@ -380,11 +527,14 @@ class _Worker(threading.Thread):
         re-queued at failure time, so this list stays empty there)."""
         node = self.node
         now = time.monotonic()
-        due = [ff for t, ff in node.pending_retries if t <= now]
-        if not due:
-            return
-        node.pending_retries = [(t, ff) for t, ff in node.pending_retries
-                                if t > now]
+        # the filter-and-swap below races with pool helpers appending via
+        # _retry_or_dead_letter — an unguarded swap would drop their records
+        with node.retry_lock:
+            due = [ff for t, ff in node.pending_retries if t <= now]
+            if not due:
+                return
+            node.pending_retries = [(t, ff) for t, ff in node.pending_retries
+                                    if t > now]
         # requeue() bypasses backpressure: this worker is the queue's only
         # drainer, so a blocking offer against a full queue would deadlock
         conn.requeue(due)
@@ -447,7 +597,7 @@ class _Worker(threading.Thread):
             ATTR_RETRY_COUNT: str(rc + 1),
             ATTR_LAST_ERROR: type(err).__name__,
             ATTR_RETRY_NOT_BEFORE: f"{due:.6f}"})
-        proc.stats.retries += 1
+        proc.stats.add(retries=1)
         self.graph.provenance.record_batch("ROUTE", [penalized], proc.name,
                                            details=f"retry:{rc + 1}")
         if isinstance(conn, DurableConnection):
@@ -455,7 +605,8 @@ class _Worker(threading.Thread):
             # the penalty is honored at delivery time (_wait_for_penalties)
             conn.requeue([penalized])
             return True
-        node.pending_retries.append((due, penalized))
+        with node.retry_lock:
+            node.pending_retries.append((due, penalized))
         return True
 
     def _dead_letter(self, ffs: list[FlowFile], err: Exception) -> bool:
@@ -467,12 +618,12 @@ class _Worker(threading.Thread):
             ATTR_DEAD_LETTER_SOURCE: proc.name,
             ATTR_DEAD_LETTER_REASON: f"{type(err).__name__}: {err}"})
             for ff in ffs]
-        proc.stats.dead_lettered += len(ffs)
+        proc.stats.add(dead_lettered=len(ffs))
         dlq = graph._dlq_conn
         if dlq is None:
             graph.provenance.record_batch("DROP", tagged, proc.name,
                                           details="dead-letter:unrouted")
-            proc.stats.dropped += len(ffs)
+            proc.stats.add(dropped=len(ffs))
             return True
         graph.provenance.record_batch("ROUTE", tagged, proc.name,
                                       details="dead-letter")
@@ -485,7 +636,9 @@ class _Worker(threading.Thread):
 
 class FlowNode:
     def __init__(self, processor: Processor,
-                 restart_policy: RestartPolicy | None = None) -> None:
+                 restart_policy: RestartPolicy | None = None,
+                 min_workers: int | None = None,
+                 max_workers: int | None = None) -> None:
         self.processor = processor
         self.input: Connection | None = None
         self.outputs: dict[str, list[Connection]] = {}
@@ -498,4 +651,18 @@ class FlowNode:
         self.backoff_history: list[float] = []
         self.last_error: BaseException | None = None
         self.pending_retries: list[tuple[float, FlowFile]] = []
+        self.retry_lock = threading.Lock()
         self.source_emitted = 0
+        # -- elastic pool state (see module docstring) ------------------------
+        self.min_workers = (processor.min_workers if min_workers is None
+                            else min_workers)
+        self.max_workers = (processor.max_workers if max_workers is None
+                            else max_workers)
+        if not 1 <= self.min_workers <= self.max_workers:
+            raise ValueError(
+                f"{processor.name}: need 1 <= min_workers "
+                f"({self.min_workers}) <= max_workers ({self.max_workers})")
+        self.pool_lock = threading.Lock()
+        self.pool_size = 1           # the supervised primary worker
+        self.helpers: list[threading.Thread] = []
+        self.helpers_spawned = 0

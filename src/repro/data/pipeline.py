@@ -13,6 +13,7 @@ processes resolve by dotted path to rebuild their slice.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 from pathlib import Path
 
@@ -52,6 +53,9 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
                         acks: str = "all",
                         live: bool | str = False,
                         live_policy: ConnectorPolicy | None = None,
+                        congestion_mode: str | None = None,
+                        priorities: dict[str, int] | None = None,
+                        elastic_workers: dict[str, tuple[int, int]] | None = None,
                         ooo_window: int = 4,
                         redelivery: int = 4,
                         socket_endpoints: dict[str, tuple] | None = None,
@@ -101,6 +105,15 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
     (``expected_clean_doc_ids``) and must match the parameters the feed
     servers were built with (see ``bench_socket_acquisition._build``).
 
+    Overload knobs (all live modes): ``congestion_mode`` overrides the
+    connectors' congestion response (``block``/``throttle``/``shed``/
+    ``spill``, see :class:`~repro.core.acquisition.ConnectorPolicy`);
+    ``priorities`` maps connector names to admission priority classes
+    (``{"big-rss": 2, "twitter": 1}`` — higher delivered first, shed
+    last); ``elastic_workers`` maps interior stage names to ``(min, max)``
+    elastic worker-pool bounds (``{"enrich": (1, 4)}`` — incompatible with
+    ``durable=True``, which makes every interior input FIFO-prefix-acked).
+
     ``window_sec`` (any live mode; defaults to 64 event-time seconds when
     ``live="socket"``) adds the watermark-driven aggregation stage: a
     :class:`~repro.core.windows.WindowedAggregate` fans out from the
@@ -143,6 +156,12 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
     if durable:
         conn_kw["durable"] = log
     add_kw = {"restart_policy": restart_policy} if restart_policy else {}
+
+    def pool_kw(stage: str) -> dict:
+        if not elastic_workers or stage not in elastic_workers:
+            return {}
+        lo, hi = elastic_workers[stage]
+        return {"min_workers": lo, "max_workers": hi}
     rss_gen = RssAggregatorSource(n_rss, seed=seed, poison_rate=poison_rate)
     fire_gen = FirehoseSource(n_firehose, seed=seed + 1)
     ws_gen = WebSocketSource(n_ws, seed=seed + 2)
@@ -164,7 +183,8 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
             doc_id=str(doc.get("id", "")),
             lang=str(doc.get("lang", "")),
             text=(text + " " + body).strip())
-    parser = g.add(ExecuteScript("parse", parse), **add_kw)
+    parser = g.add(ExecuteScript("parse", parse), **add_kw,
+                   **pool_kw("parse"))
 
     dedup = g.add(DetectDuplicate(
         "dedup", mode=dedup_mode,
@@ -172,12 +192,13 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
 
     enrich = g.add(LookupEnrich(
         "enrich", SOURCE_REGIONS,
-        key_fn=lambda ff: ff.attributes.get("origin", "")), **add_kw)
+        key_fn=lambda ff: ff.attributes.get("origin", "")), **add_kw,
+        **pool_kw("enrich"))
 
     route = g.add(RouteOnAttribute("route", {
         "en": lambda ff: ff.attributes.get("lang") == "en",
         "other": lambda ff: True,
-    }), **add_kw)
+    }), **add_kw, **pool_kw("route"))
 
     pub_articles = g.add(PublishToLog("pub-articles", log, "articles"),
                          **add_kw)
@@ -200,6 +221,8 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
                                   backoff_cap_sec=0.05),
             checkpoint_every_records=256,
             lateness_sec=4.0 * max(ooo_window, redelivery, 1))
+        if congestion_mode is not None:
+            pol = dataclasses.replace(pol, congestion_mode=congestion_mode)
         ingress_kw = {"durable": log} if durable else {}
         if max_retries:
             ingress_kw["max_retries"] = max_retries
@@ -223,6 +246,7 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
                                    redelivery=redelivery), pub_events)]
         for ep, dest in connectors:
             rt.add_connector(ep, dest, policy=pol, late_dest=pub_late,
+                             priority=(priorities or {}).get(ep.name, 0),
                              **ingress_kw)
         if window_sec:
             # watermark-driven aggregation stage: tumbling event-time

@@ -483,3 +483,199 @@ def test_live_news_pipeline_matches_static_topology(tmp_path):
     assert expected <= landed
     assert sum(log.end_offsets("events")) == n_ws
     log.close()
+
+
+# ---------------------------------------------------------------------------
+# congestion responses (ConnectorPolicy.congestion_mode — ISSUE 7 tentpole)
+# ---------------------------------------------------------------------------
+def _congestion_rt(tmp_path, mode, *, priority=0, threshold=10, count=50,
+                   **pol_kw):
+    """Unstarted runtime + one connector feeding a CollectSink, for driving
+    the congestion machinery deterministically (no threads)."""
+    log = PartitionedLog(tmp_path / "log")
+    g = FlowGraph("cong")
+    sink = g.add(CollectSink("sink"))
+    rt = AcquisitionRuntime(g, log, name="t")
+    pol = ConnectorPolicy(
+        restart=RestartPolicy(max_restarts=10, backoff_base_sec=0.001),
+        max_poll_records=16, poll_interval_sec=0.001, lateness_sec=1e9,
+        congestion_mode=mode, **pol_kw)
+    ep = SimulatedEndpoint("ws", WebSocketSource(count), total=count)
+    rt.add_connector(ep, sink, policy=pol, priority=priority,
+                     object_threshold=threshold)
+    return g, log, rt
+
+
+def _fill(conn, n):
+    for _ in range(n):
+        conn.offer(make_flowfile(b"x"), block=False)
+
+
+def test_congestion_policy_validation():
+    with pytest.raises(ValueError, match="congestion_mode"):
+        ConnectorPolicy(congestion_mode="bogus")
+    with pytest.raises(ValueError, match="low_water"):
+        ConnectorPolicy(congestion_low_water=0.9, congestion_high_water=0.5)
+    # spill is durable by contract: the runtime must own a LogStore
+    g = FlowGraph("x")
+    sink = g.add(CollectSink("s"))
+    rt = AcquisitionRuntime(g)                      # no log
+    with pytest.raises(ValueError, match="LogStore"):
+        rt.add_connector(
+            SimulatedEndpoint("ws", WebSocketSource(5), total=5), sink,
+            policy=ConnectorPolicy(congestion_mode="spill"))
+
+
+def test_throttle_interval_adapts_to_depth(tmp_path):
+    g, log, rt = _congestion_rt(tmp_path, "throttle",
+                                throttle_max_interval_sec=0.016)
+    e = rt._entries["ws"]
+    conn = e.dest.connection
+    base = e.policy.poll_interval_sec
+    assert e.throttle_interval == base
+    _fill(conn, 8)                                  # depth 0.8 >= high water
+    for expect in (0.002, 0.004, 0.008, 0.016, 0.016):   # doubles, then caps
+        rt._adapt_throttle(e)
+        assert e.throttle_interval == pytest.approx(expect)
+    assert e.stats.throttle_engagements == 4        # the capped call is free
+    conn.poll_batch(2)                              # 0.6: between the marks
+    rt._adapt_throttle(e)
+    assert e.throttle_interval == pytest.approx(0.016)   # hysteresis holds
+    conn.poll_batch(4)                              # 0.2 <= low water
+    for expect in (0.008, 0.004, 0.002, 0.001, 0.001):   # halves back to base
+        rt._adapt_throttle(e)
+        assert e.throttle_interval == pytest.approx(expect)
+    log.close()
+
+
+def test_shed_split_honors_priority_headroom(tmp_path):
+    from repro.core.flow import ATTR_INGRESS_PRIORITY, ingress_priority
+    g, log, rt = _congestion_rt(tmp_path, "shed")
+    e = rt._entries["ws"]
+    conn = e.dest.connection
+
+    def rec(p):
+        return make_flowfile(b"x", **{ATTR_INGRESS_PRIORITY: str(p)})
+
+    kept, shed = rt._shed_split(e, [rec(0), rec(1)])
+    assert shed == [] and len(kept) == 2            # below high water: all kept
+    _fill(conn, 8)                                  # depth 0.8
+    kept, shed = rt._shed_split(e, [rec(0), rec(1), rec(3)])
+    # ceilings 0.75 / 0.85 / 1.0 at headroom 0.10: only class 0 sheds
+    assert [ingress_priority(f) for f in shed] == [0]
+    assert sorted(ingress_priority(f) for f in kept) == [1, 3]
+    _fill(conn, 2)                                  # saturated: depth 1.0
+    kept, shed = rt._shed_split(e, [rec(3), rec(9)])
+    # every ceiling clamps to 1.0 — at full saturation even the top class
+    # sheds rather than wedging the poll loop
+    assert kept == [] and len(shed) == 2
+    log.close()
+
+
+def test_admit_stamps_priority_and_sheds_with_provenance(tmp_path):
+    from repro.core.flow import ATTR_INGRESS_PRIORITY
+    g, log, rt = _congestion_rt(tmp_path, "shed", priority=1)
+    e = rt._entries["ws"]
+    conn = e.dest.connection
+    batch = [make_flowfile(json.dumps({"i": i}), seq=str(i))
+             for i in range(4)]
+    assert rt._admit(e, list(batch))                # room: all admitted
+    got = conn.poll_batch(10)
+    assert all(f.attributes[ATTR_INGRESS_PRIORITY] == "1" for f in got)
+    st = e.stats.snapshot()
+    assert st["out_records"] == 4 and st["shed"] == 0
+    _fill(conn, 10)                                 # saturate: depth 1.0
+    assert rt._admit(e, list(batch))                # shed records are handled
+    st = e.stats.snapshot()
+    assert st["shed"] == 4
+    assert st["out_records"] == 4                   # only truly-admitted count
+    assert len(conn) == 10                          # nothing squeezed past
+    drops = [ev for ev in g.provenance.events(event_type="DROP")
+             if ev.details == "congestion.shed"]
+    assert len(drops) == 4
+    log.close()
+
+
+def test_spill_diverts_then_drains_when_depth_recovers(tmp_path):
+    g, log, rt = _congestion_rt(tmp_path, "spill")
+    e = rt._entries["ws"]
+    conn = e.dest.connection
+    assert e.spill_topic == "__spill__.t.ws"
+    _fill(conn, 8)                                  # depth 0.8 >= high water
+    batch = [make_flowfile(json.dumps({"i": i}), seq=str(i))
+             for i in range(6)]
+    assert rt._admit(e, list(batch))
+    st = e.stats.snapshot()
+    assert st["spilled"] == 6 and st["out_records"] == 0
+    assert len(conn) == 8                           # overflow went to disk
+    # still congested: a drain pass must not re-ingest yet
+    assert rt._drain_spill(e)
+    assert e.spill_drained == 0
+    conn.poll_batch(6)                              # depth 0.2 <= low water
+    assert rt._drain_spill(e)
+    assert e.spill_drained == 6
+    st = e.stats.snapshot()
+    assert st["spill_replayed"] == 6 and st["out_records"] == 6
+    seqs = [f.attributes["seq"] for f in conn.poll_batch(20)[2:]]
+    assert seqs == [str(i) for i in range(6)]       # replayed in spill order
+    replays = [ev for ev in g.provenance.events(event_type="REPLAY")
+               if ev.details == "congestion.spill"]
+    assert len(replays) == 6
+    log.close()
+
+
+def test_spill_drain_frontier_survives_restart(tmp_path):
+    g, log, rt = _congestion_rt(tmp_path, "spill")
+    e = rt._entries["ws"]
+    _fill(e.dest.connection, 8)
+    rt._admit(e, [make_flowfile(b"x", seq=str(i)) for i in range(5)])
+    e.dest.connection.poll_batch(8)
+    assert rt._drain_spill(e) and e.spill_drained == 5
+    e.cursor = "5"                  # checkpoints are keyed off a live cursor
+    rt._write_checkpoint(e)
+    log.close()
+
+    # a new incarnation must resume the drain frontier, not replay records
+    # that were already re-ingested (duplicates are for crashes, not restarts)
+    log2 = PartitionedLog(tmp_path / "log")
+    g2 = FlowGraph("cong2")
+    sink2 = g2.add(CollectSink("sink"))
+    rt2 = AcquisitionRuntime(g2, log2, name="t")
+    rt2.add_connector(
+        SimulatedEndpoint("ws", WebSocketSource(50), total=50), sink2,
+        policy=ConnectorPolicy(congestion_mode="spill", lateness_sec=1e9))
+    assert rt2._entries["ws"].spill_drained == 5
+    log2.close()
+
+
+def test_overload_end_to_end_spill_zero_loss(tmp_path):
+    """Live run: a congested slow stage under spill mode still delivers
+    every record — overflow detours through the spill topic and back."""
+    count, threshold = 300, 16
+    log = PartitionedLog(tmp_path / "log")
+    g = FlowGraph("cong-e2e")
+
+    def slow_fn(ff):
+        time.sleep(0.002)
+        return ff
+
+    slow = g.add(ExecuteScript("slow", slow_fn))
+    sink = g.add(CollectSink("sink"))
+    g.connect(slow, "success", sink)
+    rt = AcquisitionRuntime(g, log, name="t")
+    pol = ConnectorPolicy(
+        restart=RestartPolicy(max_restarts=10, backoff_base_sec=0.001),
+        max_poll_records=32, poll_interval_sec=0.0005, lateness_sec=1e9,
+        congestion_mode="spill", checkpoint_every_records=10_000)
+    ep = SimulatedEndpoint("ws", WebSocketSource(count), total=count)
+    rt.add_connector(ep, slow, policy=pol, priority=1,
+                     object_threshold=threshold)
+    rt.run_with_flow(timeout=120)
+    st = g.status()
+    cs = st["acquisition"]["connectors"]["ws"]
+    assert cs["state"] == "COMPLETED"
+    assert len(sink.items) == count                 # zero loss, spills drained
+    assert cs["spill_replayed"] == cs["spilled"]
+    hwm = {c["name"]: c for c in st["connections"]}["__ingress__->slow"]
+    assert hwm["high_water_mark"] <= threshold + hwm["requeue_overshoot"]
+    log.close()

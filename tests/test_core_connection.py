@@ -175,3 +175,119 @@ def test_snapshot_fields():
     s = c.snapshot()
     assert s["queued_objects"] == 1 and s["object_threshold"] == 3
     assert s["backpressure"] is False
+
+
+# -- the offer/requeue contract, pinned for both connection classes ----------
+# Six entry points share one producer-facing contract (ISSUE 7 satellite):
+#   * offer(block=False)            -> False when full, never raises
+#   * offer(block=True, timeout=T)  -> raises BackpressureTimeout on expiry
+#   * offer(block=True, timeout=None) -> waits indefinitely for space
+#   * offer_batch(...)              -> returns the partial accepted count,
+#                                      NEVER raises (the caller re-offers the
+#                                      unaccepted suffix)
+#   * requeue(...)                  -> bypasses thresholds (consumer-side
+#                                      redelivery must not deadlock the sole
+#                                      drainer); overshoot past the object
+#                                      threshold is counted per-record
+
+def _durable(tmp_path, **kw):
+    from repro.core import DurableConnection, PartitionedLog
+    log = PartitionedLog(tmp_path / "log")
+    return DurableConnection("a:success->b", log, **kw)
+
+
+@pytest.mark.parametrize("durable", [False, True])
+def test_offer_contract_pinned(tmp_path, durable):
+    c = (_durable(tmp_path, object_threshold=2) if durable
+         else Connection("c", object_threshold=2))
+    assert c.offer(ff(0), block=False)
+    assert c.offer(ff(1), block=False)
+    # full, non-blocking: refuse without raising
+    assert not c.offer(ff(2), block=False)
+    # full, blocking with a deadline: raise so the producer can decide
+    with pytest.raises(BackpressureTimeout):
+        c.offer(ff(2), block=True, timeout=0.05)
+    # full, blocking without a deadline: wait until a consumer makes room
+    t = threading.Thread(target=lambda: (time.sleep(0.05), c.poll()))
+    t.start()
+    assert c.offer(ff(2), block=True, timeout=None)
+    t.join()
+
+
+@pytest.mark.parametrize("durable", [False, True])
+def test_offer_batch_contract_pinned(tmp_path, durable):
+    c = (_durable(tmp_path, object_threshold=3) if durable
+         else Connection("c", object_threshold=3))
+    batch = [ff(i) for i in range(5)]
+    # non-blocking: partial count, no exception
+    assert c.offer_batch(batch, block=False) == 3
+    # blocking with a deadline that expires: still partial count, no raise
+    assert c.offer_batch(batch[3:], block=True, timeout=0.05) == 0
+    assert len(c) == 3
+
+
+@pytest.mark.parametrize("durable", [False, True])
+def test_requeue_bypasses_thresholds_and_counts_overshoot(tmp_path, durable):
+    c = (_durable(tmp_path, object_threshold=2) if durable
+         else Connection("c", object_threshold=2))
+    c.offer_batch([ff(i) for i in range(2)], block=False)
+    batch = c.poll_batch(3)
+    assert len(batch) == 2
+    c.offer_batch([ff(i) for i in range(2, 4)], block=False)  # refill to full
+    c.requeue(batch)                         # redelivery: must never block
+    assert len(c) == 4                       # past the threshold, by design
+    s = c.snapshot()
+    assert s["requeued"] == 2
+    assert s["requeue_overshoot"] == 2       # both records exceeded the room
+    # the gauge is additive: bounded-memory audits subtract it from the HWM
+    assert s["high_water_mark"] <= s["object_threshold"] + s["requeue_overshoot"]
+
+
+def test_requeue_overshoot_counts_only_past_capacity():
+    c = Connection("c", object_threshold=4)
+    c.offer_batch([ff(i) for i in range(3)], block=False)
+    batch = c.poll_batch(3)
+    c.requeue(batch)                         # 3 back into room for 4
+    assert c.snapshot()["requeue_overshoot"] == 0
+    c.offer(ff(9), block=False)              # now full at 4
+    batch = c.poll_batch(2)
+    c.offer_batch([ff(i) for i in range(10, 12)], block=False)
+    c.requeue(batch)                         # room for 0 of the 2
+    assert c.snapshot()["requeue_overshoot"] == 2
+
+
+def test_install_prioritizer_migrates_live_fifo():
+    """Upgrading a FIFO connection mid-flight (fan-in onto an existing edge
+    with a priority ingress) must re-order what is already queued."""
+    c = Connection("c", object_threshold=10)
+    for i in (3, 1, 2):
+        c.offer(ff(i), block=False)
+    c.install_prioritizer(lambda f: int(f.attributes["i"]))
+    c.offer(ff(0), block=False)
+    order = [f.attributes["i"] for f in c.poll_batch(4)]
+    assert order == ["0", "1", "2", "3"]
+    # idempotent: a second install is a no-op, not a re-sort surprise
+    c.install_prioritizer(lambda f: -int(f.attributes["i"]))
+    for i in (5, 7):
+        c.offer(ff(i), block=False)
+    assert [f.attributes["i"] for f in c.poll_batch(2)] == ["5", "7"]
+
+
+def test_durable_connection_refuses_prioritizer(tmp_path):
+    c = _durable(tmp_path)
+    with pytest.raises(RuntimeError, match="FIFO-only"):
+        c.install_prioritizer(lambda f: 0)
+
+
+def test_snapshot_gauges_pinned():
+    """status() surfaces per-connection depth/bytes/utilization — pin the
+    field names the overload bench and operators key off."""
+    c = Connection("q", object_threshold=4, size_threshold=1000)
+    c.offer_batch([ff(i, size=100) for i in range(2)], block=False)
+    s = c.snapshot()
+    assert s["queued_objects"] == 2 and s["queued_bytes"] == 200
+    assert s["utilization_objects"] == 0.5
+    assert s["utilization_bytes"] == pytest.approx(0.2)
+    assert s["high_water_mark"] == 2
+    assert s["backpressure_engagements"] == 0
+    assert {"total_in", "total_out", "requeued", "requeue_overshoot"} <= set(s)

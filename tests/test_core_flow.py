@@ -227,3 +227,131 @@ def test_lineage_without_spill_still_scans_ring(tmp_path):
     repo.record("CREATE", ff, "src")
     assert [e.event_type for e in repo.lineage(ff.lineage_id)] == ["CREATE"]
     repo.close()
+
+
+# ---------------------------------------------------------------------------
+# elastic worker pools (ISSUE 7)
+# ---------------------------------------------------------------------------
+def _gen(n):
+    def it():
+        for i in range(n):
+            yield make_flowfile(b"x" * 32, i=str(i))
+    return it
+
+
+def test_elastic_pool_scales_up_under_sustained_depth():
+    g = FlowGraph("pool")
+    src = g.add(Source("src", _gen(400)))
+
+    def slow_fn(ff):
+        time.sleep(0.001)
+        return ff
+
+    slow = g.add(ExecuteScript("slow", slow_fn), min_workers=1, max_workers=3)
+    # fast-reacting governor so the test stays quick
+    slow.scale_up_utilization = 0.25
+    slow.scale_up_polls = 1
+    sink = g.add(CollectSink("sink"))
+    g.connect(src, "success", slow, object_threshold=16)
+    g.connect(slow, "success", sink)
+    g.run_to_completion(timeout=60)
+    st = g.status()["processors"]["slow"]
+    assert st["scale_ups"] >= 1                  # the burst grew the pool
+    assert st["workers"] == 1                    # helpers departed at drain
+    ids = [f.attributes["i"] for f in sink.items]
+    assert len(ids) == 400 and len(set(ids)) == 400   # no loss, no dup
+
+
+def test_min_workers_fill_is_not_a_scale_event():
+    g = FlowGraph("pool-min")
+    src = g.add(Source("src", _gen(60)))
+    work = g.add(ExecuteScript("work", lambda ff: ff),
+                 min_workers=2, max_workers=2)
+    sink = g.add(CollectSink("sink"))
+    g.connect(src, "success", work)
+    g.connect(work, "success", sink)
+    g.run_to_completion(timeout=60)
+    st = g.status()["processors"]["work"]
+    assert st["scale_ups"] == 0 and st["scale_downs"] == 0
+    assert len(sink.items) == 60
+
+
+def test_helper_failure_replays_on_supervised_path():
+    """A record failing in a pool helper must not be lost: the escalation
+    path hands the in-flight batch back to the queue, the helper exits, and
+    the replay lands on the primary's supervised (restartable) worker."""
+    from repro.core import RestartPolicy
+    g = FlowGraph("pool-fail")
+    src = g.add(Source("src", _gen(100)))
+    tripped = threading.Event()
+
+    # the raise must escape on_trigger (ExecuteScript's own fn-level catch
+    # would route to `failure` instead of exercising the escalation path)
+    class Flaky(ExecuteScript):
+        def process(self, ff):
+            if ff.attributes["i"] == "37" and not tripped.is_set():
+                tripped.set()
+                raise RuntimeError("boom")
+            time.sleep(0.0005)
+            yield "success", ff
+
+    slow = g.add(Flaky("flaky", lambda ff: ff),
+                 restart_policy=RestartPolicy(max_restarts=5,
+                                              backoff_base_sec=0.001),
+                 min_workers=2, max_workers=2)
+    sink = g.add(CollectSink("sink"))
+    g.connect(src, "success", slow, object_threshold=8)
+    g.connect(slow, "success", sink)
+    g.run_to_completion(timeout=60)
+    assert tripped.is_set()
+    ids = {f.attributes["i"] for f in sink.items}
+    assert ids == {str(i) for i in range(100)}   # at-least-once, zero loss
+
+
+def test_pool_eligibility_refusals(tmp_path):
+    # sources: one replayable generator, one cursor — no pool
+    g = FlowGraph("v1")
+    src = g.add(Source("src", _gen(5)), max_workers=2)
+    sink = g.add(CollectSink("sink"))
+    g.connect(src, "success", sink)
+    with pytest.raises(FlowError, match="sources cannot"):
+        g.start()
+
+    # durable inputs: the acked frontier is a count prefix — no pool
+    log = PartitionedLog(tmp_path / "log")
+    g2 = FlowGraph("v2")
+    src2 = g2.add(Source("src", _gen(5)))
+    es2 = g2.add(ExecuteScript("es", lambda ff: ff), max_workers=2)
+    sink2 = g2.add(CollectSink("sink"))
+    g2.connect(src2, "success", es2, durable=log)
+    g2.connect(es2, "success", sink2)
+    with pytest.raises(FlowError, match="durable"):
+        g2.start()
+    log.close()
+
+    # cross-trigger buffering state — no pool
+    g3 = FlowGraph("v3")
+    src3 = g3.add(Source("src", _gen(5)))
+    merge = g3.add(MergeContent("merge", max_records=4), max_workers=2)
+    sink3 = g3.add(CollectSink("sink"))
+    g3.connect(src3, "success", merge)
+    g3.connect(merge, "success", sink3)
+    with pytest.raises(FlowError, match="buffers_across_triggers"):
+        g3.start()
+
+    # idle-triggered state machines — no pool
+    g4 = FlowGraph("v4")
+    src4 = g4.add(Source("src", _gen(5)))
+    es4 = g4.add(ExecuteScript("es", lambda ff: ff), max_workers=2)
+    es4.idle_trigger_sec = 0.1
+    sink4 = g4.add(CollectSink("sink"))
+    g4.connect(src4, "success", es4)
+    g4.connect(es4, "success", sink4)
+    with pytest.raises(FlowError, match="idle-triggered"):
+        g4.start()
+
+    # bounds must be sane
+    g5 = FlowGraph("v5")
+    with pytest.raises(ValueError, match="min_workers"):
+        g5.add(ExecuteScript("es", lambda ff: ff),
+               min_workers=3, max_workers=2)

@@ -1,0 +1,122 @@
+"""Metrics correctness (ISSUE 7 bugfix sweep): the windowed rate gauge must
+decay after a burst, and ``ComponentStats`` must tolerate concurrent writers
+without losing increments or tearing paired gauges."""
+import threading
+
+from repro.core.metrics import ComponentStats, WindowedCounter
+
+
+# -- WindowedCounter.rate_per_sec decay regression ---------------------------
+
+def test_rate_decays_with_idle_time(monkeypatch):
+    """Regression: rate_per_sec divided by the occupied-bucket span only, so
+    a 1-second burst reported its peak rate for the full 5-minute window.
+    The divisor must be elapsed-time-to-now, clamped to the window."""
+    import repro.core.metrics as m
+    fake_now = [1000.0]
+    monkeypatch.setattr(m.time, "monotonic", lambda: fake_now[0])
+
+    wc = WindowedCounter(window_sec=300.0, bucket_sec=1.0)
+    wc.add(600)                       # burst: 600 records in one bucket
+    fake_now[0] += 0.5
+    assert wc.rate_per_sec() == 600.0 / 1.0   # sub-bucket elapse clamps up
+
+    fake_now[0] = 1000.0 + 60.0       # one idle minute later
+    rate = wc.rate_per_sec()
+    assert rate < 11.0                # ~600/60, NOT the frozen 600/s peak
+    assert rate > 0.0
+
+    fake_now[0] = 1000.0 + 299.0      # still inside the window
+    assert 0.0 < wc.rate_per_sec() < 2.1      # ~600/299
+
+    fake_now[0] = 1000.0 + 302.0      # evicted: window fully rolled past
+    assert wc.rate_per_sec() == 0.0
+
+
+def test_rate_clamps_to_window(monkeypatch):
+    """A steady stream's divisor never exceeds window_sec, so the steady
+    rate is reported correctly rather than diluted by forgotten history."""
+    import repro.core.metrics as m
+    fake_now = [0.0]
+    monkeypatch.setattr(m.time, "monotonic", lambda: fake_now[0])
+    wc = WindowedCounter(window_sec=10.0, bucket_sec=1.0)
+    for i in range(40):               # 40s of 5 rec/s; window keeps last 10s
+        fake_now[0] = float(i)
+        wc.add(5)
+    fake_now[0] = 39.5
+    assert abs(wc.rate_per_sec() - 5.0) < 1.0
+
+
+def test_total_evicts_expired_buckets(monkeypatch):
+    import repro.core.metrics as m
+    fake_now = [0.0]
+    monkeypatch.setattr(m.time, "monotonic", lambda: fake_now[0])
+    wc = WindowedCounter(window_sec=5.0, bucket_sec=1.0)
+    wc.add(10)
+    fake_now[0] = 3.0
+    wc.add(7)
+    assert wc.total() == 17
+    fake_now[0] = 6.5                 # first bucket now outside the window
+    assert wc.total() == 7
+
+
+# -- ComponentStats thread-safety --------------------------------------------
+
+def test_add_is_atomic_under_contention():
+    """`stats.in_records += n` from N threads loses updates (read-modify-
+    write is three bytecodes); the locked ``add`` helper must not."""
+    stats = ComponentStats("hammer")
+    threads = [
+        threading.Thread(
+            target=lambda: [stats.add(in_records=1, in_bytes=10)
+                            for _ in range(2_000)])
+        for _ in range(8)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert stats.in_records == 16_000
+    assert stats.in_bytes == 160_000
+
+
+def test_snapshot_is_consistent_with_paired_updates():
+    """A paired set (e.g. in_records+in_bytes moved together) must never be
+    observed torn: every snapshot sees in_bytes == 10 * in_records."""
+    stats = ComponentStats("pairs")
+    stop = threading.Event()
+    torn = []
+
+    def writer():
+        while not stop.is_set():
+            stats.add(in_records=1, in_bytes=10)
+
+    def reader():
+        while not stop.is_set():
+            s = stats.snapshot()
+            if s["in_bytes"] != 10 * s["in_records"]:
+                torn.append(s)
+
+    ts = [threading.Thread(target=writer) for _ in range(4)]
+    ts += [threading.Thread(target=reader) for _ in range(2)]
+    for t in ts:
+        t.start()
+    import time
+    time.sleep(0.3)
+    stop.set()
+    for t in ts:
+        t.join()
+    assert not torn
+
+
+def test_snapshot_carries_congestion_and_pool_fields():
+    s = ComponentStats("c")
+    s.add(shed=3, spilled=5, spill_replayed=5, throttle_engagements=2,
+          scale_ups=1, scale_downs=1)
+    s.set(workers=4, lag=7, watermark=123.0)
+    snap = s.snapshot()
+    assert snap["shed"] == 3 and snap["spilled"] == 5
+    assert snap["spill_replayed"] == 5 and snap["throttle_engagements"] == 2
+    assert snap["workers"] == 4
+    assert snap["scale_ups"] == 1 and snap["scale_downs"] == 1
+    assert snap["lag"] == 7 and snap["watermark"] == 123.0

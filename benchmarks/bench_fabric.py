@@ -50,12 +50,17 @@ def run_fabric_variant(name: str, *, workers: int, n: int,
         fab.start()                      # spawn barrier: workers connected
         t0 = time.monotonic()
         c0 = _cpu_all()
-        fab.wait(timeout=600.0)          # joins the workers (reaps CPU)
+        st = fab.wait(timeout=600.0)     # joins the workers (reaps CPU)
         cpu = _cpu_all() - c0
         dt = time.monotonic() - t0
         produced = 2 * (n // 2)
         landed = sum(fab.store.end_offsets("articles"))
         fab.store.close()
+        # workers report their RemoteLogStore transport counters at group
+        # completion; round trips per landed record is the coordination-tax
+        # metric the pipelined transport attacks
+        tr = st.get("transport") or {}
+        rpcs = tr.get("rpcs", 0)
         return {
             "name": name, "records": produced, "workers": workers,
             "wall_sec": round(dt, 3),
@@ -63,6 +68,9 @@ def run_fabric_variant(name: str, *, workers: int, n: int,
             "cpu_sec": round(cpu, 3),
             "records_per_cpu_sec": round(produced / cpu, 1) if cpu else 0.0,
             "landed": landed,
+            "rpcs": rpcs,
+            "rpcs_per_record": round(rpcs / landed, 4) if landed else 0.0,
+            "coalesced_appends": tr.get("coalesced_appends", 0),
         }
     finally:
         shutil.rmtree(tmp, ignore_errors=True)

@@ -1,0 +1,219 @@
+"""Wire-transport microbenchmarks (the coordination tax, paper §III).
+
+The fabric's throughput ceiling on a small host is round trips, not cores:
+every `LogStore` op that crosses the socket serially costs one RTT. These
+variants make that tax a first-class tracked metric:
+
+* ``transport_rtt`` — sequential pings (pipeline depth 1): the raw
+  request/response floor; ``rtt_us`` is the per-op round trip.
+* ``transport_pipelined`` — N threads appending to their own partitions
+  through ONE client socket: overlapping in-flight requests; ops/s over
+  the rtt floor is the pipelining win.
+* ``transport_coalesced`` — N threads appending single records to the SAME
+  (topic, partition): the client-side coalescer group-commits them;
+  ``rpcs_per_record`` << 1 is the win.
+* ``transport_readahead`` — consumer-style sequential read + end_offset
+  poll loop; read-ahead and the advertised-end cache collapse it to a few
+  bulk fetches.
+
+Every row reports the same rate metrics as the ingest benches (records ==
+ops), so `benchmarks/run.py --quick`'s same-phase A/B guard gates transport
+regressions exactly like ingest-rate regressions.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+from repro.core import PartitionedLog
+from repro.core.transport import LogServer, RemoteLogStore
+
+
+def _cpu() -> float:
+    t = os.times()
+    return t.user + t.system
+
+
+def _rig(tmp: Path, **client_kw):
+    store = PartitionedLog(tmp / "srv")
+    server = LogServer(store).start()
+    client = RemoteLogStore(server.address, tmp / "cli", **client_kw)
+    return store, server, client
+
+
+def _row(name: str, n: int, dt: float, cpu: float, rpcs: int,
+         **extra) -> dict:
+    return {
+        "name": name, "records": n,
+        "wall_sec": round(dt, 3),
+        "records_per_sec": round(n / dt, 1) if dt else 0.0,
+        "cpu_sec": round(cpu, 3),
+        "records_per_cpu_sec": round(n / cpu, 1) if cpu else 0.0,
+        "rpcs": rpcs,
+        "rpcs_per_record": round(rpcs / n, 4) if n else 0.0,
+        **extra,
+    }
+
+
+def run_rtt(n: int = 1_500) -> dict:
+    """Sequential ping round trips — the depth-1 floor everything else is
+    measured against."""
+    tmp = Path(tempfile.mkdtemp(prefix="bench_transport_"))
+    try:
+        store, server, client = _rig(tmp)
+        client.ping()                      # connect outside the clock
+        t0, c0 = time.monotonic(), _cpu()
+        for _ in range(n):
+            client.ping()
+        dt, cpu = time.monotonic() - t0, _cpu() - c0
+        rpcs = client.transport_stats()["rpcs"] - 1
+        client.close()
+        server.stop()
+        store.close()
+        return _row("transport_rtt", n, dt, cpu, rpcs,
+                    rtt_us=round(dt / n * 1e6, 1))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def run_pipelined(n: int = 6_000, threads: int = 8) -> dict:
+    """Concurrent appends to distinct partitions through one client: the
+    in-flight window overlaps round trips on a single socket."""
+    tmp = Path(tempfile.mkdtemp(prefix="bench_transport_"))
+    try:
+        store, server, client = _rig(tmp)
+        client.create_topic("t", partitions=threads)
+        per = n // threads
+        errs: list[Exception] = []
+
+        def work(p: int) -> None:
+            try:
+                for i in range(per):
+                    client.append("t", b"k", b"v" * 64, partition=p)
+            except Exception as e:   # noqa: BLE001
+                errs.append(e)
+
+        ts = [threading.Thread(target=work, args=(p,))
+              for p in range(threads)]
+        t0, c0 = time.monotonic(), _cpu()
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        dt, cpu = time.monotonic() - t0, _cpu() - c0
+        if errs:
+            raise errs[0]
+        total = per * threads
+        stats = client.transport_stats()
+        assert sum(client.end_offsets("t")) == total
+        client.close()
+        server.stop()
+        store.close()
+        return _row("transport_pipelined", total, dt, cpu, stats["rpcs"],
+                    threads=threads)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def run_coalesced(n: int = 6_000, threads: int = 8) -> dict:
+    """Concurrent single-record appends to ONE partition: the client-side
+    coalescer merges them into group commits."""
+    tmp = Path(tempfile.mkdtemp(prefix="bench_transport_"))
+    try:
+        store, server, client = _rig(tmp)
+        client.create_topic("t", partitions=1)
+        per = n // threads
+        errs: list[Exception] = []
+
+        def work() -> None:
+            try:
+                for i in range(per):
+                    client.append("t", b"k", b"v" * 64, partition=0)
+            except Exception as e:   # noqa: BLE001
+                errs.append(e)
+
+        ts = [threading.Thread(target=work) for _ in range(threads)]
+        t0, c0 = time.monotonic(), _cpu()
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        dt, cpu = time.monotonic() - t0, _cpu() - c0
+        if errs:
+            raise errs[0]
+        total = per * threads
+        stats = client.transport_stats()
+        assert client.end_offset("t", 0) == total
+        client.close()
+        server.stop()
+        store.close()
+        return _row("transport_coalesced", total, dt, cpu, stats["rpcs"],
+                    threads=threads,
+                    coalesced_appends=stats["coalesced_appends"])
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def run_readahead(n: int = 20_000) -> dict:
+    """Consumer-style drain: sequential 64-record reads with an end_offset
+    poll per iteration — read-ahead plus the advertised-end cache turn
+    ~2 RPCs per iteration into a handful of bulk fetches total."""
+    tmp = Path(tempfile.mkdtemp(prefix="bench_transport_"))
+    try:
+        store, server, client = _rig(tmp)
+        client.create_topic("t", partitions=1)
+        batch = [(b"k%d" % i, b"v" * 96) for i in range(512)]
+        done = 0
+        while done < n:                    # setup, untimed
+            take = min(512, n - done)
+            client.append_batch("t", batch[:take], partition=0)
+            done += take
+        client.flush_topic("t", fsync=False)
+        t0, c0 = time.monotonic(), _cpu()
+        pos = got = 0
+        while got < n:
+            if pos >= client.end_offset("t", 0):
+                break
+            recs = client.read("t", 0, pos, 64)
+            if not recs:
+                break
+            pos = recs[-1].offset + 1
+            got += len(recs)
+        dt, cpu = time.monotonic() - t0, _cpu() - c0
+        assert got == n, f"drained {got} of {n}"
+        stats = client.transport_stats()
+        rpcs = stats["read_rpcs"] + stats["end_offset_rpcs"]
+        client.close()
+        server.stop()
+        store.close()
+        return _row("transport_readahead", n, dt, cpu, rpcs,
+                    readahead_hits=stats["readahead_hits"],
+                    end_cache_hits=stats["end_cache_hits"])
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def variant_specs(scale: float = 1.0) -> dict[str, tuple]:
+    return {
+        "transport_rtt": (run_rtt, dict(n=max(200, int(1_500 * scale)))),
+        "transport_pipelined": (run_pipelined,
+                                dict(n=max(800, int(6_000 * scale)))),
+        "transport_coalesced": (run_coalesced,
+                                dict(n=max(800, int(6_000 * scale)))),
+        "transport_readahead": (run_readahead,
+                                dict(n=max(2_000, int(20_000 * scale)))),
+    }
+
+
+def main(scale: float = 1.0, only: "list[str] | None" = None) -> list[dict]:
+    return [fn(**kw) for name, (fn, kw) in variant_specs(scale).items()
+            if only is None or name in only]
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -21,6 +21,11 @@ loader variant).
                             + the kill -9 lease-takeover scenario (zero
                             acked-record loss, bounded dupes, monotone
                             fabric watermark)
+  bench_transport           wire-transport microbenches: sequential RTT
+                            floor, pipelined in-flight window, client-side
+                            append coalescing, consumer read-ahead +
+                            advertised-end cache (rpcs_per_record is the
+                            tracked coordination-tax metric)
   bench_overload            overload survival: 10x burst vs a slow stage
                             under each congestion mode (throttle/shed/
                             spill) with an elastic worker pool — bounded
@@ -64,7 +69,7 @@ sys.path.insert(0, str(_REPO_ROOT))
 from benchmarks import (bench_acquisition, bench_backpressure, bench_fabric,
                         bench_ingest_throughput, bench_loader,
                         bench_overload, bench_recovery,
-                        bench_socket_acquisition, roofline)
+                        bench_socket_acquisition, bench_transport, roofline)
 
 SNAPSHOT_PATH = _REPO_ROOT / "BENCH_ingest.json"
 
@@ -105,6 +110,10 @@ def write_snapshot(ingest_rows, loader_rows, quick_ingest_rows,
         # its process count (and the host's core count below) is ambiguous
         if "workers" in r:
             entry["workers"] = r["workers"]
+        # fabric/transport rows track the coordination tax: wire round
+        # trips per record (the metric the pipelined transport attacks)
+        if "rpcs_per_record" in r:
+            entry["rpcs_per_record"] = r["rpcs_per_record"]
         return entry
 
     snapshot = {
@@ -193,6 +202,12 @@ def measure_head_quick() -> dict | None:
             "    rows += bf.main_throughput(n=2_000, workers_list=(2,))\n"
             "except Exception:\n"
             "    pass\n"
+            # transport microbench exists only from PR 8 on
+            "try:\n"
+            "    from benchmarks import bench_transport as bt\n"
+            "    rows += bt.main(scale=0.3)\n"
+            "except Exception:\n"
+            "    pass\n"
             "print(json.dumps(rows))")
         out = subprocess.run([sys.executable, "-c", code], check=True,
                              capture_output=True, text=True, timeout=600)
@@ -244,6 +259,7 @@ def main(quick: bool = False) -> None:
         ingest_rows = bench_ingest_throughput.main(n=2_000)
         ingest_rows += bench_fabric.main_throughput(n=2_000,
                                                     workers_list=(2,))
+        ingest_rows += bench_transport.main(scale=0.3)
         emit(ingest_rows)
         scale = 1.0
         if head_baseline is not None:
@@ -271,6 +287,9 @@ def main(quick: bool = False) -> None:
                 {r["name"]: r
                  for r in bench_fabric.main_throughput(n=2_000, only=slow,
                                                        workers_list=(2,))})
+            retry.update({r["name"]: r
+                          for r in bench_transport.main(scale=0.3,
+                                                        only=slow)})
             emit([dict(retry[n], name=f"{n}_retry") for n in slow])
             best = [r if r["name"] not in retry
                     else dict(r, **{k: max(r[k], retry[r["name"]][k])
@@ -303,6 +322,7 @@ def main(quick: bool = False) -> None:
     else:
         ingest_rows = bench_ingest_throughput.main()
         ingest_rows += bench_fabric.main_throughput()
+        ingest_rows += bench_transport.main()
         emit(ingest_rows)
         # quick-sized baseline for the CI guard: per-METRIC min of two
         # passes — a conservative floor on each rate independently, so
@@ -311,6 +331,7 @@ def main(quick: bool = False) -> None:
         def _quick_pass() -> dict:
             rows = bench_ingest_throughput.main(n=2_000)
             rows += bench_fabric.main_throughput(n=2_000, workers_list=(2,))
+            rows += bench_transport.main(scale=0.3)
             return {r["name"]: r for r in rows}
         qa = _quick_pass()
         qb = _quick_pass()

@@ -162,7 +162,13 @@ class ConnectorPolicy:
     * ``throttle`` — adaptive poll-interval backoff: the effective interval
       doubles (capped at ``throttle_max_interval_sec``) while downstream
       depth sits at/above ``congestion_high_water`` of its thresholds, and
-      halves back once it falls to ``congestion_low_water``.
+      halves back once it falls to ``congestion_low_water``. Release is
+      lag-aware: when the connector's own endpoint ``lag()`` is at least
+      ``throttle_catchup_lag`` records and depth is below the low-water
+      mark, the interval snaps to ``throttle_catchup_interval_sec``
+      (*faster than base*) instead of decaying toward the base interval —
+      a connector that fell behind while throttled catches up at full
+      tilt the moment downstream has headroom.
     * ``shed`` — priority-aware load shedding: past the high-water depth,
       records whose priority class buys no headroom are dropped with a
       ``shed`` counter and a ``congestion.shed`` DROP provenance event.
@@ -187,6 +193,11 @@ class ConnectorPolicy:
     congestion_high_water: float = 0.75
     congestion_low_water: float = 0.5
     throttle_max_interval_sec: float = 0.5
+    #: endpoint lag (records behind) at which a released throttle boosts to
+    #: catch-up polling instead of decaying to base (None disables)
+    throttle_catchup_lag: int | None = 1024
+    #: poll interval while catching up (0.0 = poll flat-out)
+    throttle_catchup_interval_sec: float = 0.0
     #: extra depth headroom each priority class buys before being shed
     shed_headroom_per_priority: float = 0.10
 
@@ -198,6 +209,11 @@ class ConnectorPolicy:
         if not 0.0 < self.congestion_low_water <= self.congestion_high_water:
             raise ValueError("need 0 < congestion_low_water <= "
                              "congestion_high_water")
+        if self.throttle_catchup_lag is not None \
+                and self.throttle_catchup_lag <= 0:
+            raise ValueError("throttle_catchup_lag must be positive or None")
+        if self.throttle_catchup_interval_sec < 0:
+            raise ValueError("throttle_catchup_interval_sec must be >= 0")
 
 
 def default_event_ts(ff: FlowFile) -> float:
@@ -364,6 +380,13 @@ class _ConnectorEntry:
     spill_topic: str | None = None
     #: offset of the next spilled record to re-ingest (checkpointed)
     spill_drained: int = 0
+    #: ``spill_drained`` as of the last durable checkpoint — spill segments
+    #: wholly below this frontier can never be re-read (a crash-restart
+    #: resumes the drain from the checkpoint), so the drain loop GCs them
+    ckpt_spill_drained: int = 0
+    #: highest frontier already handed to ``drop_segments_below`` (avoids
+    #: re-issuing the GC RPC every drain pass)
+    spill_gc_below: int = 0
 
 
 class AcquisitionRuntime:
@@ -455,7 +478,8 @@ class AcquisitionRuntime:
             ckpt_payload=json.dumps(saved).encode() if saved else None,
             throttle_interval=pol.poll_interval_sec,
             spill_topic=spill_topic,
-            spill_drained=int(saved.get("spill_drained", 0)))
+            spill_drained=int(saved.get("spill_drained", 0)),
+            ckpt_spill_drained=int(saved.get("spill_drained", 0)))
 
     # -- lifecycle ------------------------------------------------------------
     def start(self) -> None:
@@ -587,7 +611,11 @@ class AcquisitionRuntime:
                 if not batch:
                     if not self._drain_spill(e):
                         return
-                    if self._stopping.wait(e.throttle_interval):
+                    # a catch-up boost can drive throttle_interval to 0.0;
+                    # an empty poll still paces at the base interval so the
+                    # loop never busy-spins on a drained endpoint
+                    if self._stopping.wait(e.throttle_interval
+                                           or pol.poll_interval_sec):
                         return
                     continue
                 if not self._admit(e, batch):
@@ -680,8 +708,17 @@ class AcquisitionRuntime:
             if e.throttle_interval > prev:
                 e.stats.add(throttle_engagements=1)
         elif depth <= pol.congestion_low_water:
-            e.throttle_interval = max(pol.poll_interval_sec,
-                                      e.throttle_interval / 2)
+            prev = e.throttle_interval
+            lag = e.stats.lag
+            if (pol.throttle_catchup_lag is not None and lag is not None
+                    and lag >= pol.throttle_catchup_lag):
+                # the endpoint ran ahead while we throttled: downstream has
+                # headroom, so poll *faster than base* until lag recovers
+                e.throttle_interval = pol.throttle_catchup_interval_sec
+            else:
+                e.throttle_interval = max(pol.poll_interval_sec, prev / 2)
+            if e.throttle_interval < min(prev, pol.poll_interval_sec):
+                e.stats.add(throttle_boosts=1)
 
     def _shed_split(self, e: _ConnectorEntry, batch: list[FlowFile]
                     ) -> tuple[list[FlowFile], list[FlowFile]]:
@@ -714,11 +751,25 @@ class AcquisitionRuntime:
         the low-water mark (``full=True``: drain everything, end-of-stream).
         One slice per call keeps the poll loop live. Drained records were
         already watermark-split and stamped at spill time, so they are
-        offered as-is — no re-observation. False = stopping truncated."""
+        offered as-is — no re-observation. False = stopping truncated.
+
+        Each pass also GCs spill segments wholly beneath the *checkpointed*
+        drain frontier: a crash-restart resumes from the checkpoint, so
+        nothing below it can ever be re-read — without this, spilled
+        overflow persisted until runtime teardown."""
         if e.spill_topic is None:
             return True
         conn = e.dest.connection
         pol = e.policy
+        if e.ckpt_spill_drained > e.spill_gc_below:
+            try:
+                dropped = self.log.drop_segments_below(
+                    e.spill_topic, 0, e.ckpt_spill_drained)
+                e.spill_gc_below = e.ckpt_spill_drained
+                if dropped:
+                    e.stats.add(spill_gc=int(dropped))
+            except Exception:   # noqa: BLE001 — GC is best-effort
+                pass
         while True:
             end = self.log.end_offset(e.spill_topic, 0)
             if e.spill_drained >= end:
@@ -828,6 +879,9 @@ class AcquisitionRuntime:
         # consistent pair here (both post-_admit)
         payload = self._checkpoint_payload(e)
         e.ckpt_payload = payload
+        # the payload's spill_drained is now durable: segments below it are
+        # fair game for the drain loop's GC
+        e.ckpt_spill_drained = json.loads(payload)["spill_drained"]
         with self._ckpt_lock:
             self.log.append(self.checkpoint_topic,
                             e.connector.name.encode(), payload, partition=0)

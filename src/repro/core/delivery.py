@@ -118,12 +118,16 @@ class Producer:
         # fault site: crash/raise between accumulation and the log append —
         # the producer's at-least-once retry contract is exercised here
         faults.fire("delivery.producer.drain", records=records)
-        # group consecutive-partition runs so explicit partitions batch too;
+        # group by partition (first-appearance order) so a drain issues one
+        # append per distinct partition, however the partitions interleave —
+        # key-routed workloads (crc32 per record) otherwise degenerate to
+        # one-record runs and one RPC each. Per-partition record order is
+        # preserved; cross-partition order is not a log guarantee.
         # None-partition records are key-routed by append_batch itself
         # (resolved eagerly with the same rule when idempotence needs
-        # per-partition sequences). The buffer is trimmed only as runs
-        # land, so an append failure (disk full, bad partition) keeps the
-        # unsent suffix for retry — the at-least-once producer contract;
+        # per-partition sequences). Only records whose append landed leave
+        # the buffer, so a failure (disk full, bad partition) keeps the
+        # unsent groups for retry — the at-least-once producer contract;
         # with a producer_id the retried run dedups store-side.
         if self.producer_id is not None:
             # resend frozen runs first (identical composition, same
@@ -141,19 +145,23 @@ class Producer:
             for i, p in enumerate(parts):
                 if p is None:
                     parts[i] = route_partition(records[i][0], self._nparts)
-        i = 0
+        groups: dict[int | None, list[int]] = {}
+        order: list[int | None] = []
+        for i, p in enumerate(parts):
+            g = groups.get(p)
+            if g is None:
+                groups[p] = g = []
+                order.append(p)
+            g.append(i)
+        landed = bytearray(n)
         try:
-            while i < n:
-                j = i + 1
-                while j < n and parts[j] == parts[i]:
-                    j += 1
+            for p in order:
+                idxs = groups[p]
+                run = [records[i] for i in idxs]
                 if self.producer_id is None:
-                    self.log.append_batch(self.topic, records[i:j],
-                                          partition=parts[i])
+                    self.log.append_batch(self.topic, run, partition=p)
                 else:
-                    p = parts[i]
                     seq = self._seqs.get(p, 0)
-                    run = records[i:j]
                     try:
                         self.log.append_batch(
                             self.topic, run, partition=p,
@@ -162,18 +170,21 @@ class Producer:
                         # ambiguous: the server may have applied it. Freeze
                         # the run with its reserved sequence range; the
                         # buffer moves on so later sends can't extend it
-                        self._seqs[p] = seq + (j - i)
+                        self._seqs[p] = seq + len(run)
                         self._inflight.append((run, p, seq))
-                        i = j
+                        for i in idxs:
+                            landed[i] = 1
                         raise
-                    self._seqs[p] = seq + (j - i)
-                self.delivered += j - i
-                i = j
+                    self._seqs[p] = seq + len(run)
+                self.delivered += len(run)
+                for i in idxs:
+                    landed[i] = 1
         finally:
-            if i:
-                del records[:i]
-                del parts[:i]
-                self._buf_bytes = sum(len(k) + len(v) for k, v in records)
+            if any(landed):
+                self._buf = [records[i] for i in range(n) if not landed[i]]
+                self._buf_parts = [parts[i] for i in range(n)
+                                   if not landed[i]]
+                self._buf_bytes = sum(len(k) + len(v) for k, v in self._buf)
 
     def flush(self, fsync: bool = False) -> None:
         """Drain the accumulator; optionally fsync the topic's partitions."""

@@ -273,6 +273,10 @@ class IngestionFabric:
         self._wm_history: list[float] = []
         self.reassignments: list[tuple[str, str, str, int]] = []
         self._group_errors: dict[str, str] = {}
+        #: per (group, epoch) RemoteLogStore transport counters reported at
+        #: group completion — status() aggregates them fabric-wide so the
+        #: benches can track round trips per record
+        self._transport: dict[str, dict] = {}
         self._all_done = threading.Event()
         self._started = False
 
@@ -380,12 +384,19 @@ class IngestionFabric:
         with self._lock:
             wm_hist = list(self._wm_history)
             errors = dict(self._group_errors)
+            transports = [dict(t) for t in self._transport.values()]
+        transport: dict[str, int] = {}
+        for t in transports:
+            for k, v in t.items():
+                if isinstance(v, (int, float)):
+                    transport[k] = transport.get(k, 0) + v
         return {
             "leases": self.leases.snapshot(),
             "reassignments": list(self.reassignments),
             "low_watermark": wm_hist[-1] if wm_hist else None,
             "watermark_history": wm_hist,
             "group_errors": errors,
+            "transport": transport,
         }
 
     def low_watermark_history(self) -> list[float]:
@@ -434,6 +445,10 @@ class IngestionFabric:
                 self.leases.heartbeat(wid, time.monotonic())
                 self._ingest_watermarks(msg)
             elif kind == "group_done":
+                if msg.get("transport"):
+                    with self._lock:
+                        self._transport[f"{msg['group']}@e{msg['epoch']}"] = \
+                            msg["transport"]
                 if self.leases.mark_done(msg["group"], wid, msg["epoch"]):
                     for conn_name in msg.get("finished", []):
                         with self._lock:
@@ -577,7 +592,8 @@ def _worker_main(worker_id: str, control_addr: tuple[str, int],
             send({"t": "group_done", "group": gid, "epoch": epoch,
                   "finished": [n for n, s in status.items()
                                if s.get("state") in ("COMPLETED",
-                                                     "STOPPED")]})
+                                                     "STOPPED")],
+                  "transport": log.transport_stats()})
         except Exception as e:   # noqa: BLE001 — report, don't kill worker
             send({"t": "group_failed", "group": gid, "epoch": epoch,
                   "fenced": _is_fenced(e),

@@ -33,6 +33,16 @@ Built-in sites (fired by the library itself):
                                connector, cursor`` — ``"raise"`` drops the
                                session mid-stream (reconnect + redelivery),
                                ``"delay"`` stalls the feed
+  ``transport.server.recv``    in the LogServer after a request frame is
+                               decoded, before dispatch, ``ctx: op, corr``
+                               — a raised fault drops the connection with
+                               the request *unapplied* (lost request)
+  ``transport.server.respond`` after dispatch, before the response frame,
+                               ``ctx: op, corr`` — a raised fault drops the
+                               connection with the op *applied but unacked*
+                               (the ambiguous window; tears a
+                               partially-acked client pipeline
+                               deterministically)
 
 Schedules: ``arm(site, action, nth=N)`` fires on the Nth call only;
 ``arm(site, action, nth=N, every=M)`` fires on call N, N+M, N+2M, ...

@@ -39,11 +39,15 @@ class ComponentStats:
     watermark: float | None = None
     # congestion-response counters (ConnectorPolicy.congestion_mode):
     # records dropped by priority-aware load shedding, records diverted to /
-    # replayed from the durable spill topic, and poll-throttle engagements
+    # replayed from the durable spill topic, poll-throttle engagements,
+    # catch-up boosts (throttle released below the base interval because the
+    # endpoint's own lag is deep), and spill segments reclaimed by GC
     shed: int = 0
     spilled: int = 0
     spill_replayed: int = 0
     throttle_engagements: int = 0
+    throttle_boosts: int = 0
+    spill_gc: int = 0
     # elastic worker-pool gauges (flow engine; see core/processor.py)
     workers: int = 1
     scale_ups: int = 0
@@ -81,6 +85,8 @@ class ComponentStats:
                 "shed": self.shed, "spilled": self.spilled,
                 "spill_replayed": self.spill_replayed,
                 "throttle_engagements": self.throttle_engagements,
+                "throttle_boosts": self.throttle_boosts,
+                "spill_gc": self.spill_gc,
                 "workers": self.workers, "scale_ups": self.scale_ups,
                 "scale_downs": self.scale_downs,
             }

@@ -10,27 +10,89 @@ store *is* the protocol: each operation is one length-prefixed binary frame
 over TCP, so a remote store behaves like a local one — same dense offsets,
 same at-least-once append semantics, same range reads.
 
+Wire protocol
+-------------
+Every frame is length-prefixed and carries a **correlation id**::
+
+    request:  u32 length | u8 opcode | u32 corr | body
+    response: u32 length | u8 status | u32 corr | body
+
+``length`` counts everything after itself (opcode + corr + body) and is
+capped at :data:`MAX_FRAME` (mirroring the WebSocket connector's frame cap);
+a peer announcing a larger frame is protocol-corrupt (or hostile) and the
+connection is dropped instead of allocating unbounded buffers. A short read
+mid-frame raises :class:`TransportError` (torn frame) rather than yielding a
+half-decoded record batch. Control frames (``OP_CTRL``, the fabric's
+coordinator/worker channel) use ``corr = 0`` — they are a message stream,
+not request/response.
+
+Pipelining rules
+----------------
+The server handles each connection **serially in arrival order** and echoes
+the request's ``corr`` on its response, so a client may keep a bounded
+window of requests in flight on one socket and demultiplex completions:
+
+* :class:`RemoteLogStore` assigns monotonically increasing correlation ids
+  and keeps at most ``max_inflight`` unacknowledged requests outstanding; a
+  dedicated reader thread matches responses to waiters, so the client lock
+  is held only to send — never across a round trip. Concurrent threads
+  sharing one client overlap their round trips instead of convoying.
+* On a connection failure, the first thread to notice reconnects and
+  **replays every unacknowledged request, byte-identical and in original
+  submit order** (acknowledged requests are never re-sent). Order-preserving
+  replay keeps per-partition producer sequences dense; byte-identical
+  replay lets the store's :class:`~repro.core.logstore.ProducerDedupTable`
+  recognize a batch the server applied before the ack was lost — a
+  partially-acked pipeline retries exactly-once for idempotent appends and
+  at-least-once otherwise.
+* The dedup table holds one window per ``(topic, partition, producer_id)``,
+  so a producer must keep at most ONE unacknowledged batch in flight per
+  partition (the batching :class:`~repro.core.delivery.Producer` serializes
+  its drains, satisfying this by construction); the wire layer itself does
+  not reorder or merge producer-stamped batches.
+* Epoch fencing survives replay unchanged: the epoch is baked into the
+  frozen frame at submit time, and the server re-checks the
+  :class:`FenceTable` on every (re)delivery.
+
+Client-side append coalescing
+-----------------------------
+Plain appends — no ``producer_id``, explicit partition — to the same
+``(topic, partition)`` coalesce into one wire call when they arrive while
+an earlier append to that key is still on the wire (group commit), bounded
+by ``coalesce_max_records``/``coalesce_max_bytes`` and an optional
+``coalesce_linger_sec`` accumulation window. Each caller still gets exactly
+its own dense ``(partition, offset)`` slice back; a failed wire call fails
+every caller it carried. WAL journals, checkpoint appends, and spill
+parking — one small RPC each before — ride the same frame under load.
+Producer-stamped appends never coalesce: merging would change the batch
+composition between retries and break the byte-identical dedup contract.
+
+Read-ahead and the end-offset cache
+-----------------------------------
+The server advertises the partition's end offset on every read and append
+response; the client caches it per ``(topic, partition)``. ``end_offset``
+is served from the cache within ``end_cache_ttl_sec`` (same-client appends
+refresh it for free, so read-your-writes stays exact; cross-client
+staleness is bounded by the TTL), which makes an idle
+:class:`~repro.core.delivery.Consumer.poll` over a remote store cost zero
+round trips — mirroring the local cached-end gate. ``read`` fetches up to
+``readahead_records`` beyond the request and serves subsequent sequential
+reads from the buffer (log records are immutable by offset, so the buffer
+can never go stale); a read past the buffered run falls through to the
+wire.
+
 Three pieces:
 
-  * a framed codec — ``u32 length | u8 opcode | body`` with a hard 16 MiB
-    frame cap (mirroring the WebSocket connector's frame cap) and torn-frame
-    detection: a short read mid-frame raises :class:`TransportError` rather
-    than yielding a half-decoded record batch;
+  * the framed codec above, with torn-frame detection;
   * :class:`LogServer` — hosts any ``LogStore`` behind a listening socket
-    (thread per connection, like the test fixtures' WS/HTTP servers). The
-    server optionally enforces **write fencing**: appends carry a leader
-    epoch, and a :class:`FenceTable` bumped by the fabric coordinator
-    rejects stale-epoch writers (the Kafka broker/controller split:
-    storage enforces the controller's epoch decisions);
-  * :class:`RemoteLogStore` — a ``LogStore`` client. Reads and offset
-    queries retry transparently across reconnects (they are idempotent);
-    ``append_batch`` retries make delivery at-least-once, upgraded to
-    exactly-once when the caller stamps idempotent producer ids
-    (``producer_id``/``base_seq``, deduped store-side — see
-    ``logstore.ProducerDedupTable``).
-
-The request/response cycle is strictly serial per connection; concurrency
-comes from opening more connections (each fabric worker holds its own).
+    (thread per connection). The server optionally enforces **write
+    fencing**: appends carry a leader epoch, and a :class:`FenceTable`
+    bumped by the fabric coordinator rejects stale-epoch writers (the
+    Kafka broker/controller split: storage enforces the controller's epoch
+    decisions);
+  * :class:`RemoteLogStore` — the pipelined ``LogStore`` client described
+    above. ``transport_stats()`` exposes RPC/coalescing/cache counters so
+    benchmarks can report round trips per record.
 """
 from __future__ import annotations
 
@@ -39,9 +101,11 @@ import socket
 import struct
 import threading
 import time
+from collections import deque
 from pathlib import Path
 from typing import Sequence
 
+from . import faults
 from .log import PartitionedLog, route_partition
 from .logstore import LogRecord, LogStore
 
@@ -52,11 +116,22 @@ __all__ = [
     "serve_store",
 ]
 
-#: Hard cap on one wire frame (header excluded) — mirrors the 16 MiB frame
-#: cap of the WebSocket connector. A peer announcing a larger frame is
+#: Hard cap on one wire frame (length prefix excluded) — mirrors the 16 MiB
+#: frame cap of the WebSocket connector. A peer announcing a larger frame is
 #: protocol-corrupt (or hostile); both sides drop the connection instead of
 #: allocating unbounded buffers.
 MAX_FRAME = 16 << 20
+
+#: Server-side byte budget for one read response: the server stops encoding
+#: records once the body crosses this (at least one record always ships), so
+#: a read-ahead fetch of large records can never build an oversized frame —
+#: callers loop on short reads anyway (the LogStore read contract returns
+#: *up to* ``max_records``).
+_READ_RESP_BUDGET = 8 << 20
+
+#: Reader-thread poll granularity: how quickly a demux loop notices its
+#: session was replaced / the client closed.
+_READER_POLL_SEC = 0.5
 
 _LEN = struct.Struct("<I")
 _U16 = struct.Struct("<H")
@@ -66,7 +141,7 @@ _I32 = struct.Struct("<i")
 _I64 = struct.Struct("<q")
 _REC = struct.Struct("<II")          # key_len, val_len
 _OFFREC = struct.Struct("<QII")      # offset, key_len, val_len
-_PARTOFF = struct.Struct("<iQ")      # partition, offset
+_PARTOFF = struct.Struct("<iQ")      # partition, offset (also partition, end)
 
 # -- opcodes ----------------------------------------------------------------
 OP_CREATE_TOPIC = 0x01
@@ -130,20 +205,27 @@ def recv_exact(sock: socket.socket, n: int) -> bytes:
     return b"".join(chunks)
 
 
-def send_frame(sock: socket.socket, op: int, body: bytes = b"") -> None:
-    if 1 + len(body) > MAX_FRAME:
+def frame_bytes(op: int, corr: int, body: bytes = b"") -> bytes:
+    """Assemble one wire frame (``u32 len | u8 op | u32 corr | body``)."""
+    if 5 + len(body) > MAX_FRAME:
         raise FrameTooLarge(
-            f"frame of {1 + len(body)} bytes exceeds cap of {MAX_FRAME}")
-    sock.sendall(_LEN.pack(1 + len(body)) + bytes([op]) + body)
+            f"frame of {5 + len(body)} bytes exceeds cap of {MAX_FRAME}")
+    return _LEN.pack(5 + len(body)) + bytes([op]) + _U32.pack(corr) + body
 
 
-def recv_frame(sock: socket.socket) -> tuple[int, bytes]:
+def send_frame(sock: socket.socket, op: int, body: bytes = b"",
+               corr: int = 0) -> None:
+    sock.sendall(frame_bytes(op, corr, body))
+
+
+def recv_frame(sock: socket.socket) -> tuple[int, int, bytes]:
+    """Receive one frame; returns ``(opcode_or_status, corr, body)``."""
     (length,) = _LEN.unpack(recv_exact(sock, 4))
-    if length < 1 or length > MAX_FRAME:
+    if length < 5 or length > MAX_FRAME:
         raise FrameTooLarge(f"peer announced {length}-byte frame "
                             f"(cap {MAX_FRAME})")
     payload = recv_exact(sock, length)
-    return payload[0], payload[1:]
+    return payload[0], _U32.unpack_from(payload, 1)[0], payload[5:]
 
 
 def _pack_str(s: str) -> bytes:
@@ -218,7 +300,7 @@ def send_ctrl(sock: socket.socket, obj: dict) -> None:
 
 
 def recv_ctrl(sock: socket.socket) -> dict:
-    op, body = recv_frame(sock)
+    op, _corr, body = recv_frame(sock)
     if op != OP_CTRL:
         raise TransportError(f"expected control frame, got opcode {op:#x}")
     return json.loads(body)
@@ -263,12 +345,21 @@ class FenceTable:
 
 class LogServer:
     """Host a ``LogStore`` behind a TCP listener (one thread per
-    connection, serial request/response per connection).
+    connection; requests on a connection are served serially in arrival
+    order, which is what lets clients pipeline against it).
 
     ``fences`` (a :class:`FenceTable`) arms write fencing: appends with a
     non-zero epoch are validated against it; appends with epoch 0 bypass
     fencing (single-writer setups). ``store`` must be thread-safe — both
-    shipped stores are."""
+    shipped stores are.
+
+    Fault sites (see :mod:`repro.core.faults`): ``transport.server.recv``
+    fires after a request frame is decoded and before dispatch (a raised
+    fault drops the connection with the request unapplied);
+    ``transport.server.respond`` fires after dispatch and before the
+    response frame (a raised fault drops the connection *inside the
+    ambiguous ack window* — the op applied but the client never hears it),
+    which is how tests tear a partially-acked pipeline deterministically."""
 
     def __init__(self, store: LogStore, host: str = "127.0.0.1",
                  port: int = 0, *, fences: FenceTable | None = None) -> None:
@@ -338,11 +429,15 @@ class LogServer:
         try:
             while not self._stop.is_set():
                 try:
-                    op, body = recv_frame(conn)
+                    op, corr, body = recv_frame(conn)
                 except socket.timeout:
                     continue
                 except (TransportError, FrameTooLarge, OSError):
                     return   # peer gone or protocol-corrupt: drop the conn
+                try:
+                    faults.fire("transport.server.recv", op=op, corr=corr)
+                except Exception:   # noqa: BLE001 — injected conn drop
+                    return          # request lost before it was applied
                 try:
                     status, resp = ST_OK, self._dispatch(op, body)
                 except KeyError as e:
@@ -354,7 +449,11 @@ class LogServer:
                 except Exception as e:   # noqa: BLE001 — survive bad requests
                     status, resp = ST_ERR, f"{type(e).__name__}: {e}".encode()
                 try:
-                    send_frame(conn, status, resp)
+                    faults.fire("transport.server.respond", op=op, corr=corr)
+                except Exception:   # noqa: BLE001 — injected conn drop
+                    return          # applied but unacked: ambiguous window
+                try:
+                    send_frame(conn, status, resp, corr)
                 except (OSError, FrameTooLarge):
                     return
         finally:
@@ -391,21 +490,33 @@ class LogServer:
                 kwargs = {"producer_id": producer_id, "base_seq": base_seq}
             placed = store.append_batch(topic, records, partition=partition,
                                         **kwargs)
-            return _U32.pack(len(placed)) + b"".join(
-                _PARTOFF.pack(p, off) for p, off in placed)
+            # advertise the end offset of every touched partition so the
+            # client's cache stays read-your-writes exact for free
+            pset = sorted({p for p, _ in placed})
+            return (_U32.pack(len(placed))
+                    + b"".join(_PARTOFF.pack(p, off) for p, off in placed)
+                    + _U32.pack(len(pset))
+                    + b"".join(_PARTOFF.pack(p, store.end_offset(topic, p))
+                               for p in pset))
         if op == OP_READ:
             topic, partition = r.string(), r.u32()
             offset, max_records = r.u64(), r.u32()
             r.done()
             recs = store.read(topic, partition, offset,
                               max_records=max_records)
-            parts = [_U32.pack(len(recs))]
+            parts = []
+            total = count = 0
             for rec in recs:
                 parts.append(_OFFREC.pack(rec.offset, len(rec.key),
                                           len(rec.value)))
                 parts.append(rec.key)
                 parts.append(rec.value)
-            return b"".join(parts)
+                total += 16 + len(rec.key) + len(rec.value)
+                count += 1
+                if total >= _READ_RESP_BUDGET:
+                    break   # short read; callers loop (contract: up to N)
+            return (_U64.pack(store.end_offset(topic, partition))
+                    + _U32.pack(count) + b"".join(parts))
         if op == OP_BEGIN_OFFSET or op == OP_END_OFFSET:
             topic, partition = r.string(), r.u32()
             r.done()
@@ -455,26 +566,73 @@ class LogServer:
 # -- client -----------------------------------------------------------------
 
 
+class _Pending:
+    """One in-flight request: the frozen frame (byte-identical replay is
+    what makes retried idempotent appends dedup) and its completion slot."""
+
+    __slots__ = ("corr", "op", "frame", "status", "resp")
+
+    def __init__(self, corr: int, op: int, frame: bytes) -> None:
+        self.corr = corr
+        self.op = op
+        self.frame = frame
+        self.status: int | None = None
+        self.resp = b""
+
+
+class _CoalesceEntry:
+    """One caller's records queued at the append coalescer."""
+
+    __slots__ = ("records", "nbytes", "event", "result", "error")
+
+    def __init__(self, records: Sequence[tuple[bytes, bytes]]) -> None:
+        self.records = list(records)
+        self.nbytes = sum(len(k) + len(v) for k, v in self.records)
+        self.event = threading.Event()
+        self.result: list[tuple[int, int]] | None = None
+        self.error: Exception | None = None
+
+
+class _CoalesceQueue:
+    __slots__ = ("entries", "draining")
+
+    def __init__(self) -> None:
+        self.entries: deque[_CoalesceEntry] = deque()
+        self.draining = False
+
+
 class RemoteLogStore(LogStore):
-    """``LogStore`` client over the framed TCP protocol.
+    """Pipelined ``LogStore`` client over the framed TCP protocol (see the
+    module docstring for the wire format, pipelining rules, coalescer
+    semantics, and the read-ahead / end-offset caches).
 
     * ``root`` is **client-local scratch** (consumer-group offset stores
       default into it); the server's segment files live under the server
       store's own root.
-    * Idempotent operations (reads, offsets, topic admin, flush) reconnect
-      and retry transparently. ``append_batch`` also retries — delivery is
-      at-least-once, exactly-once when the caller stamps
-      ``producer_id``/``base_seq`` (the server-side store dedups retried
-      batches).
+    * Up to ``max_inflight`` requests share one socket; a failed connection
+      is re-established by the first waiter to notice and every
+      unacknowledged frame is replayed byte-identical in original order.
+      Delivery is therefore at-least-once, exactly-once when the caller
+      stamps ``producer_id``/``base_seq`` (the server-side store dedups
+      replayed batches).
     * ``set_fence_epoch(e)`` attaches a leader epoch to every subsequent
       append; a fenced server rejects the write with :class:`FencedError`
       once the coordinator has raised the fence (zombie writer).
-    * ``close()`` closes this client session only — never the server store.
+    * ``close()`` closes this client session only — never the server store;
+      a later call transparently reconnects.
     """
 
     def __init__(self, address: tuple[str, int], root: Path | str, *,
                  connect_timeout: float = 5.0, op_timeout: float = 30.0,
-                 retries: int = 3, retry_backoff_sec: float = 0.05) -> None:
+                 retries: int = 3, retry_backoff_sec: float = 0.05,
+                 max_inflight: int = 32,
+                 coalesce_appends: bool = True,
+                 coalesce_max_records: int = 4096,
+                 coalesce_max_bytes: int = 1 << 20,
+                 coalesce_linger_sec: float = 0.0,
+                 readahead_records: int = 1024,
+                 readahead_max_bytes: int = 4 << 20,
+                 end_cache_ttl_sec: float = 0.05) -> None:
         self.address = (address[0], int(address[1]))
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
@@ -482,11 +640,44 @@ class RemoteLogStore(LogStore):
         self.op_timeout = op_timeout
         self.retries = retries
         self.retry_backoff_sec = retry_backoff_sec
+        self.max_inflight = max(1, int(max_inflight))
+        self.coalesce_appends = coalesce_appends
+        self.coalesce_max_records = coalesce_max_records
+        self.coalesce_max_bytes = coalesce_max_bytes
+        self.coalesce_linger_sec = coalesce_linger_sec
+        self.readahead_records = readahead_records
+        self.readahead_max_bytes = readahead_max_bytes
+        self.end_cache_ttl_sec = end_cache_ttl_sec
+        # session state: socket, correlation space, in-flight window. The
+        # lock guards bookkeeping and sends; it is NEVER held across a recv.
         self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
         self._sock: socket.socket | None = None
+        self._gen = 0                      # session generation (reader tag)
+        self._corr = 0
+        self._pending: dict[int, _Pending] = {}   # corr -> req, submit order
         self._epoch = 0
         self._nparts: dict[str, int] = {}
         self.reconnects = 0
+        # append coalescer (plain appends only; see module docstring)
+        self._co_lock = threading.Lock()
+        self._co: dict[tuple[str, int], _CoalesceQueue] = {}
+        # read-ahead runs and advertised end offsets per (topic, partition)
+        self._cache_lock = threading.Lock()
+        self._ends: dict[tuple[str, int], tuple[int, float]] = {}
+        self._ra: dict[tuple[str, int], tuple[int, list[LogRecord]]] = {}
+        self._stats = {
+            "rpcs": 0,                # request/response cycles issued
+            "replayed_frames": 0,     # unacked frames re-sent on reconnect
+            "append_rpcs": 0,
+            "appended_records": 0,
+            "coalesced_appends": 0,   # caller appends merged into a carrier
+            "read_rpcs": 0,
+            "read_records": 0,
+            "readahead_hits": 0,      # reads served with zero round trips
+            "end_offset_rpcs": 0,
+            "end_cache_hits": 0,      # end_offsets served from the cache
+        }
 
     # -- connection management --
     def set_fence_epoch(self, epoch: int) -> None:
@@ -494,55 +685,162 @@ class RemoteLogStore(LogStore):
         with self._lock:
             self._epoch = int(epoch)
 
-    def _ensure_sock(self) -> socket.socket:
-        if self._sock is None:
-            s = socket.create_connection(self.address,
-                                         timeout=self.connect_timeout)
-            s.settimeout(self.op_timeout)
-            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            self._sock = s
-        return self._sock
+    def transport_stats(self) -> dict:
+        """Snapshot of the client's RPC/coalescing/cache counters (plus
+        ``reconnects``) — the raw material for round-trips-per-record."""
+        with self._lock:
+            out = dict(self._stats)
+            out["reconnects"] = self.reconnects
+        return out
 
-    def _drop_sock(self) -> None:
+    def _sendall_locked(self, data: bytes) -> None:
+        """Send under the lock on the short-poll socket: partial sends loop,
+        a stall past ``op_timeout`` is a dead peer."""
+        sock = self._sock
+        deadline = time.monotonic() + self.op_timeout
+        view = memoryview(data)
+        while view:
+            try:
+                n = sock.send(view)
+            except socket.timeout as e:
+                if time.monotonic() >= deadline:
+                    raise TransportError(
+                        f"send stalled for {self.op_timeout}s") from e
+                continue
+            view = view[n:]
+
+    def _kill_session_locked(self) -> None:
+        """Tear down the socket (the bound reader exits on the generation
+        bump); pending requests stay queued for replay."""
         if self._sock is not None:
             try:
                 self._sock.close()
             except OSError:
                 pass
             self._sock = None
+            self._gen += 1
+        self._cv.notify_all()
+
+    def _connect_locked(self) -> None:
+        """Establish a session, replay every unacknowledged frame in
+        original submit order (byte-identical), and start its reader."""
+        s = socket.create_connection(self.address,
+                                     timeout=self.connect_timeout)
+        s.settimeout(_READER_POLL_SEC)
+        s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        if self._gen:
+            self.reconnects += 1
+            self._stats["replayed_frames"] += len(self._pending)
+        self._gen += 1
+        self._sock = s
+        try:
+            if self._pending:
+                for p in self._pending.values():   # dict == submit order
+                    self._sendall_locked(p.frame)
+        except (socket.timeout, OSError, TransportError):
+            self._kill_session_locked()
+            raise
+        threading.Thread(target=self._reader_main, args=(s, self._gen),
+                         name=f"remotelog-demux-{self.address[1]}",
+                         daemon=True).start()
+        self._cv.notify_all()
+
+    def _reader_main(self, sock: socket.socket, gen: int) -> None:
+        """Demultiplex responses for one session; on connection failure mark
+        the session dead and wake the waiters (one of them reconnects)."""
+        while True:
+            try:
+                status, corr, body = recv_frame(sock)
+            except socket.timeout:
+                with self._lock:
+                    if self._gen != gen:
+                        return
+                continue
+            except (TransportError, FrameTooLarge, OSError):
+                with self._cv:
+                    if self._gen == gen:
+                        self._kill_session_locked()
+                return
+            with self._cv:
+                if self._gen != gen:
+                    return
+                p = self._pending.pop(corr, None)
+                if p is None:
+                    continue    # response to a request a waiter abandoned
+                p.status, p.resp = status, body
+                self._cv.notify_all()
 
     def _call(self, op: int, body: bytes) -> bytes:
-        """One request/response cycle with reconnect-retry. All LogStore
-        operations are safe to retry: reads/offsets are pure, appends are
-        made idempotent by producer ids (or degrade to at-least-once)."""
-        with self._lock:
-            last: Exception | None = None
-            for attempt in range(self.retries + 1):
-                try:
-                    sock = self._ensure_sock()
-                    send_frame(sock, op, body)
-                    status, resp = recv_frame(sock)
-                except (OSError, TransportError) as e:
-                    self._drop_sock()
-                    last = e
-                    if attempt < self.retries:
-                        self.reconnects += 1
-                        time.sleep(self.retry_backoff_sec * (attempt + 1))
-                        continue
+        """One pipelined request/response cycle. The client lock is held to
+        enqueue and send — never across the round trip — so concurrent
+        callers keep up to ``max_inflight`` requests on the wire at once.
+        All LogStore operations are safe to replay: reads/offsets are pure,
+        appends are made idempotent by producer ids (or degrade to
+        at-least-once)."""
+        if 5 + len(body) > MAX_FRAME:
+            raise FrameTooLarge(
+                f"frame of {5 + len(body)} bytes exceeds cap of {MAX_FRAME}")
+        with self._cv:
+            # admission: bounded in-flight window
+            deadline = time.monotonic() + self.op_timeout
+            while len(self._pending) >= self.max_inflight:
+                if not self._cv.wait(
+                        timeout=max(0.0, deadline - time.monotonic())) \
+                        and len(self._pending) >= self.max_inflight:
                     raise TransportError(
-                        f"log server {self.address} unreachable after "
-                        f"{self.retries + 1} attempts: {e}") from e
-                if status == ST_OK:
-                    return resp
-                msg = resp.decode("utf-8", errors="replace")
-                if status == ST_ERR_KEY:
-                    raise KeyError(msg)
-                if status == ST_ERR_VALUE:
-                    raise ValueError(msg)
-                if status == ST_ERR_FENCED:
-                    raise FencedError(msg)
-                raise RuntimeError(f"server error: {msg}")
-            raise TransportError(str(last))  # pragma: no cover
+                        f"in-flight window ({self.max_inflight}) stalled "
+                        f"for {self.op_timeout}s")
+            self._corr += 1
+            corr = self._corr
+            p = _Pending(corr, op, frame_bytes(op, corr, body))
+            self._pending[corr] = p
+            self._stats["rpcs"] += 1
+            if self._sock is not None:
+                try:
+                    self._sendall_locked(p.frame)
+                except (socket.timeout, OSError, TransportError):
+                    self._kill_session_locked()   # p stays; replay re-sends
+            # completion loop: whoever holds the lock when the session is
+            # down drives the reconnect + ordered replay for everyone
+            attempts = 0
+            last: Exception | None = None
+            while p.status is None:
+                if self._sock is None:
+                    if attempts > self.retries:
+                        self._pending.pop(corr, None)
+                        self._cv.notify_all()
+                        raise TransportError(
+                            f"log server {self.address} unreachable after "
+                            f"{attempts} attempts: {last}") from last
+                    if attempts:
+                        self._cv.wait(self.retry_backoff_sec * attempts)
+                        if p.status is not None:
+                            break
+                        if self._sock is not None:
+                            continue   # another waiter reconnected already
+                    attempts += 1
+                    try:
+                        self._connect_locked()
+                    except (socket.timeout, OSError, TransportError) as e:
+                        last = e
+                elif not self._cv.wait(timeout=self.op_timeout) \
+                        and p.status is None:
+                    # a full op_timeout with zero completions: wedged server
+                    self._pending.pop(corr, None)
+                    self._kill_session_locked()
+                    raise TransportError(
+                        f"op {op:#x} timed out after {self.op_timeout}s")
+        status, resp = p.status, p.resp
+        if status == ST_OK:
+            return resp
+        msg = resp.decode("utf-8", errors="replace")
+        if status == ST_ERR_KEY:
+            raise KeyError(msg)
+        if status == ST_ERR_VALUE:
+            raise ValueError(msg)
+        if status == ST_ERR_FENCED:
+            raise FencedError(msg)
+        raise RuntimeError(f"server error: {msg}")
 
     # -- topic admin --
     def create_topic(self, topic: str, partitions: int = 1) -> None:
@@ -581,6 +879,20 @@ class RemoteLogStore(LogStore):
         if producer_id is not None and partition is None:
             raise ValueError("idempotent appends require an explicit "
                              "partition (the producer resolves routing)")
+        if (self.coalesce_appends and producer_id is None
+                and partition is not None):
+            # plain appends to an explicit partition group-commit; stamped
+            # appends must stay byte-identical across retries, so they
+            # bypass the coalescer (the Producer batches them already)
+            return self._append_coalesced(topic, int(partition), records)
+        return self._append_wire(topic, records, partition,
+                                 producer_id, base_seq)
+
+    def _append_wire(self, topic: str,
+                     records: Sequence[tuple[bytes, bytes]],
+                     partition: int | None,
+                     producer_id: str | None,
+                     base_seq: int | None) -> list[tuple[int, int]]:
         with self._lock:
             epoch = self._epoch
         body = (_pack_str(topic)
@@ -594,7 +906,78 @@ class RemoteLogStore(LogStore):
         if n != len(records):
             raise TransportError(
                 f"append acked {n} records, sent {len(records)}")
-        return [_PARTOFF.unpack(r.take(12)) for _ in range(n)]
+        placed = [_PARTOFF.unpack(r.take(12)) for _ in range(n)]
+        ends = [_PARTOFF.unpack(r.take(12)) for _ in range(r.u32())]
+        now = time.monotonic()
+        with self._cache_lock:
+            self._stats["append_rpcs"] += 1
+            self._stats["appended_records"] += n
+            for part, end in ends:
+                self._note_end_locked(topic, part, end, now)
+        return placed
+
+    def _append_coalesced(self, topic: str, partition: int,
+                          records: Sequence[tuple[bytes, bytes]]
+                          ) -> list[tuple[int, int]]:
+        key = (topic, partition)
+        entry = _CoalesceEntry(records)
+        with self._co_lock:
+            q = self._co.get(key)
+            if q is None:
+                q = self._co[key] = _CoalesceQueue()
+            q.entries.append(entry)
+            drainer = not q.draining
+            q.draining = True
+        if not drainer:
+            # an earlier caller is on the wire for this key; it (or its
+            # successors) will carry these records and post the offsets
+            budget = (self.retries + 2) * (self.op_timeout
+                                           + self.connect_timeout) \
+                + self.coalesce_linger_sec
+            if not entry.event.wait(budget):
+                raise TransportError("coalesced append stalled")
+            if entry.error is not None:
+                raise entry.error
+            return entry.result
+        if self.coalesce_linger_sec > 0:
+            time.sleep(self.coalesce_linger_sec)   # accumulation window
+        while True:
+            with self._co_lock:
+                taken: list[_CoalesceEntry] = []
+                nrec = nbytes = 0
+                while q.entries:
+                    e = q.entries[0]
+                    if taken and (
+                            nrec + len(e.records) > self.coalesce_max_records
+                            or nbytes + e.nbytes > self.coalesce_max_bytes):
+                        break
+                    q.entries.popleft()
+                    taken.append(e)
+                    nrec += len(e.records)
+                    nbytes += e.nbytes
+                if not taken:
+                    q.draining = False
+                    break
+                if len(taken) > 1:
+                    self._stats["coalesced_appends"] += len(taken) - 1
+            merged = (taken[0].records if len(taken) == 1
+                      else [rec for e in taken for rec in e.records])
+            try:
+                placed = self._append_wire(topic, merged, partition,
+                                           None, None)
+            except Exception as err:   # noqa: BLE001 — fanned to callers
+                for e in taken:
+                    e.error = err
+                    e.event.set()
+                continue
+            i = 0
+            for e in taken:
+                e.result = placed[i:i + len(e.records)]
+                i += len(e.records)
+                e.event.set()
+        if entry.error is not None:
+            raise entry.error
+        return entry.result
 
     def flush(self, fsync: bool = True) -> None:
         self._call(OP_FLUSH, bytes([int(fsync)]))
@@ -603,25 +986,79 @@ class RemoteLogStore(LogStore):
         self._call(OP_FLUSH_TOPIC, _pack_str(topic) + bytes([int(fsync)]))
 
     # -- consumer --
+    def _note_end_locked(self, topic: str, partition: int, end: int,
+                         now: float) -> None:
+        key = (topic, partition)
+        cur = self._ends.get(key)
+        if cur is None or end >= cur[0]:
+            self._ends[key] = (end, now)
+
     def read(self, topic: str, partition: int, offset: int,
              max_records: int = 512) -> list[LogRecord]:
+        key = (topic, partition)
+        if self.readahead_records > 0:
+            with self._cache_lock:
+                run = self._ra.get(key)
+                if run is not None:
+                    start, recs = run
+                    if start <= offset < start + len(recs):
+                        i = offset - start
+                        out = recs[i:i + max_records]
+                        known = self._ends.get(key)
+                        # a short slice is served only when the run reaches
+                        # everything this client knows exists — otherwise
+                        # fall through and fetch fresh (same-client appends
+                        # keep `known` exact, so read-your-writes holds)
+                        if (len(out) == max_records or known is None
+                                or start + len(recs) >= known[0]):
+                            self._stats["readahead_hits"] += 1
+                            return list(out)
+        want = max(max_records, self.readahead_records)
         body = (_pack_str(topic) + _U32.pack(partition) + _U64.pack(offset)
-                + _U32.pack(max_records))
+                + _U32.pack(want))
         r = _Reader(self._call(OP_READ, body))
+        end = r.u64()
         out = []
         for _ in range(r.u32()):
             off, klen, vlen = _OFFREC.unpack(r.take(16))
             out.append(LogRecord(topic, partition, off,
                                  r.take(klen), r.take(vlen)))
-        return out
+        now = time.monotonic()
+        with self._cache_lock:
+            self._stats["read_rpcs"] += 1
+            self._stats["read_records"] += len(out)
+            self._note_end_locked(topic, partition, end, now)
+            if self.readahead_records > 0 and out:
+                cached = out
+                total = 0
+                for idx, rec in enumerate(out):
+                    total += 32 + len(rec.key) + len(rec.value)
+                    if total >= self.readahead_max_bytes:
+                        cached = out[:idx + 1]
+                        break
+                if key not in self._ra and len(self._ra) >= 64:
+                    self._ra.pop(next(iter(self._ra)))   # oldest-inserted
+                self._ra[key] = (cached[0].offset, cached)
+        return out[:max_records]
 
     def begin_offset(self, topic: str, partition: int) -> int:
         return _U64.unpack(self._call(
             OP_BEGIN_OFFSET, _pack_str(topic) + _U32.pack(partition)))[0]
 
     def end_offset(self, topic: str, partition: int) -> int:
-        return _U64.unpack(self._call(
+        if self.end_cache_ttl_sec > 0:
+            now = time.monotonic()
+            with self._cache_lock:
+                cur = self._ends.get((topic, partition))
+                if cur is not None and now - cur[1] <= self.end_cache_ttl_sec:
+                    self._stats["end_cache_hits"] += 1
+                    return cur[0]
+        end = _U64.unpack(self._call(
             OP_END_OFFSET, _pack_str(topic) + _U32.pack(partition)))[0]
+        with self._cache_lock:
+            self._stats["end_offset_rpcs"] += 1
+            self._note_end_locked(topic, partition, end, time.monotonic())
+        return end
 
     # -- retention --
     def enforce_retention(self, topic: str, retention_bytes: int) -> int:
@@ -639,8 +1076,8 @@ class RemoteLogStore(LogStore):
         self._call(OP_PING, b"")
 
     def close(self) -> None:
-        with self._lock:
-            self._drop_sock()
+        with self._cv:
+            self._kill_session_locked()
 
 
 # -- standalone server process helper ---------------------------------------

@@ -679,3 +679,96 @@ def test_overload_end_to_end_spill_zero_loss(tmp_path):
     hwm = {c["name"]: c for c in st["connections"]}["__ingress__->slow"]
     assert hwm["high_water_mark"] <= threshold + hwm["requeue_overshoot"]
     log.close()
+
+def test_throttle_lag_catchup_overrides_decay(tmp_path):
+    """ISSUE 8: when the endpoint's own lag is deep and downstream has
+    recovered, throttle mode snaps to the catch-up interval instead of
+    halving its way back — and resumes normal decay once caught up."""
+    g, log, rt = _congestion_rt(tmp_path, "throttle",
+                                throttle_max_interval_sec=0.016,
+                                throttle_catchup_lag=100,
+                                throttle_catchup_interval_sec=0.0)
+    e = rt._entries["ws"]
+    conn = e.dest.connection
+    base = e.policy.poll_interval_sec
+    _fill(conn, 8)                                  # depth 0.8: back off
+    for _ in range(4):
+        rt._adapt_throttle(e)
+    assert e.throttle_interval == pytest.approx(0.016)
+    conn.poll_batch(7)                              # depth 0.1 <= low water
+    e.stats.set(lag=5000)                           # far behind the feed
+    rt._adapt_throttle(e)
+    assert e.throttle_interval == 0.0               # snap, don't decay
+    assert e.stats.throttle_boosts == 1
+    rt._adapt_throttle(e)                           # still lagging: holds
+    assert e.throttle_interval == 0.0
+    assert e.stats.throttle_boosts == 1             # counted per engagement
+    e.stats.set(lag=10)                             # caught up
+    rt._adapt_throttle(e)
+    assert e.throttle_interval == pytest.approx(base)
+    assert e.stats.throttle_boosts == 1
+    log.close()
+
+
+def test_throttle_catchup_disabled_and_unknown_lag_decay_normally(tmp_path):
+    g, log, rt = _congestion_rt(tmp_path, "throttle",
+                                throttle_max_interval_sec=0.016,
+                                throttle_catchup_lag=None)
+    e = rt._entries["ws"]
+    conn = e.dest.connection
+    _fill(conn, 8)
+    for _ in range(4):
+        rt._adapt_throttle(e)
+    conn.poll_batch(7)
+    e.stats.set(lag=5000)                           # deep lag, but disabled
+    rt._adapt_throttle(e)
+    assert e.throttle_interval == pytest.approx(0.008)   # plain halving
+    assert e.stats.throttle_boosts == 0
+    with pytest.raises(ValueError, match="throttle_catchup_lag"):
+        ConnectorPolicy(throttle_catchup_lag=0)
+    with pytest.raises(ValueError, match="throttle_catchup_interval_sec"):
+        ConnectorPolicy(throttle_catchup_interval_sec=-1.0)
+    log.close()
+
+
+def test_spill_gc_reclaims_checkpointed_segments(tmp_path):
+    """ISSUE 8: spill segments wholly beneath the *checkpointed* drain
+    frontier are dropped; anything not yet durable in a checkpoint stays
+    replayable."""
+    log = PartitionedLog(tmp_path / "log", segment_bytes=512)   # tiny: seal often
+    g = FlowGraph("cong")
+    sink = g.add(CollectSink("sink"))
+    rt = AcquisitionRuntime(g, log, name="t")
+    pol = ConnectorPolicy(
+        restart=RestartPolicy(max_restarts=10, backoff_base_sec=0.001),
+        max_poll_records=8, poll_interval_sec=0.001, lateness_sec=1e9,
+        congestion_mode="spill")
+    rt.add_connector(SimulatedEndpoint("ws", WebSocketSource(50), total=50),
+                     sink, policy=pol, object_threshold=10)
+    e = rt._entries["ws"]
+    conn = e.dest.connection
+    _fill(conn, 8)                                  # congested: divert to disk
+    rt._admit(e, [make_flowfile(b"x" * 96, seq=str(i)) for i in range(40)])
+    assert e.stats.snapshot()["spilled"] == 40
+    seg_dir = tmp_path / "log" / e.spill_topic / "0"
+    assert len(list(seg_dir.glob("*.seg"))) > 3     # several sealed segments
+    conn.poll_batch(8)                              # pressure released
+    while e.spill_drained < 40:                     # one slice per pass
+        assert rt._drain_spill(e)
+        conn.poll_batch(8)
+    # drained but not yet CHECKPOINTED: nothing may be reclaimed — a crash
+    # now restarts from the old frontier and must still find the records
+    assert rt._drain_spill(e)
+    assert log.begin_offset(e.spill_topic, 0) == 0
+    assert e.stats.snapshot()["spill_gc"] == 0
+    e.cursor = "8"                  # checkpoints are keyed off a live cursor
+    rt._write_checkpoint(e)                         # frontier now durable
+    assert rt._drain_spill(e)                       # next pass reclaims
+    assert log.begin_offset(e.spill_topic, 0) > 0
+    assert e.stats.snapshot()["spill_gc"] > 0
+    assert len(list(seg_dir.glob("*.seg"))) == 1    # files actually deleted
+    # idempotent: the following pass has nothing more to drop
+    dropped = e.stats.snapshot()["spill_gc"]
+    assert rt._drain_spill(e)
+    assert e.stats.snapshot()["spill_gc"] == dropped
+    log.close()

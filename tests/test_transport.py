@@ -168,9 +168,11 @@ def test_remote_store_reconnects_after_connection_drop(remote):
     client.create_topic("t", partitions=1)
     client.append("t", b"", b"one", partition=0)
     # drop the transport under the client without telling it: the next call
-    # fails mid-flight and must transparently reconnect and retry
-    client._sock.shutdown(socket.SHUT_RDWR)
-    client._sock.close()
+    # fails mid-flight and must transparently reconnect and retry (the demux
+    # reader may notice first and null out the session — keep our own ref)
+    sock = client._sock
+    sock.shutdown(socket.SHUT_RDWR)
+    sock.close()
     client.append("t", b"", b"two", partition=0)
     assert [r.value for r in client.iter_records("t", 0)] == [b"one", b"two"]
     assert client.reconnects >= 1

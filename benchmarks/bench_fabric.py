@@ -29,6 +29,7 @@ import tempfile
 import time
 from pathlib import Path
 
+from repro.core.telemetry import LatencyHistogram, split_metric_key
 from repro.data.pipeline import (build_news_fabric, expected_fabric_doc_ids,
                                  landed_doc_ids_by_shard)
 
@@ -37,6 +38,29 @@ def _cpu_all() -> float:
     """Coordinator + reaped-children CPU seconds."""
     t = os.times()
     return t.user + t.system + t.children_user + t.children_system
+
+
+def _e2e_latency(fab) -> dict:
+    """Fabric-wide ingest→land latency summary: the workers' terminal-sink
+    histograms (heartbeat-shipped + group_done finals) merged across
+    groups."""
+    h = LatencyHistogram()
+    for key, state in fab.telemetry_state().items():
+        if split_metric_key(key)[0] == "ingest_to_land_seconds":
+            h.merge(LatencyHistogram.from_dict(state))
+    return h.summary()
+
+
+def _dump_flight(fab, name: str) -> str | None:
+    """Post-mortem: write the coordinator's flight-recorder ring (the last
+    N status snapshots) to the system temp dir; returns the path."""
+    dump = Path(tempfile.gettempdir()) / f"repro_flight_{name}.json"
+    try:
+        fab.flight.dump(dump)
+    except OSError:
+        return None
+    print(f"# flight recorder dumped to {dump}")
+    return str(dump)
 
 
 def run_fabric_variant(name: str, *, workers: int, n: int,
@@ -50,11 +74,16 @@ def run_fabric_variant(name: str, *, workers: int, n: int,
         fab.start()                      # spawn barrier: workers connected
         t0 = time.monotonic()
         c0 = _cpu_all()
-        st = fab.wait(timeout=600.0)     # joins the workers (reaps CPU)
+        try:
+            st = fab.wait(timeout=600.0)  # joins the workers (reaps CPU)
+        except Exception:
+            _dump_flight(fab, name)
+            raise
         cpu = _cpu_all() - c0
         dt = time.monotonic() - t0
         produced = 2 * (n // 2)
         landed = sum(fab.store.end_offsets("articles"))
+        lat = _e2e_latency(fab)
         fab.store.close()
         # workers report their RemoteLogStore transport counters at group
         # completion; round trips per landed record is the coordination-tax
@@ -68,6 +97,9 @@ def run_fabric_variant(name: str, *, workers: int, n: int,
             "cpu_sec": round(cpu, 3),
             "records_per_cpu_sec": round(produced / cpu, 1) if cpu else 0.0,
             "landed": landed,
+            "latency_p50_ms": lat["p50_ms"],
+            "latency_p99_ms": lat["p99_ms"],
+            "latency_recorded": lat["count"] > 0,
             "rpcs": rpcs,
             "rpcs_per_record": round(rpcs / landed, 4) if landed else 0.0,
             "coalesced_appends": tr.get("coalesced_appends", 0),
@@ -93,7 +125,14 @@ def run_failover_scenario(*, n: int = 24_000, workers: int = 2,
         # construction, at any input size or host speed
         target = int(kill_fraction * n // 2)
         killed = False
+        telemetry_live = False
         while time.monotonic() - t0 < 120.0:
+            if not telemetry_live:
+                # heartbeat-shipped histograms must be visible mid-run
+                telemetry_live = any(
+                    v["count"] > 0
+                    for k, v in fab.status()["telemetry"].items()
+                    if k.startswith("process_seconds"))
             if sum(fab.store.end_offsets("articles")) >= target:
                 fab.kill_worker("w0")
                 killed = True
@@ -103,7 +142,18 @@ def run_failover_scenario(*, n: int = 24_000, workers: int = 2,
         if not killed:
             fab.kill_worker("w0")        # late, but still exercise takeover
             killed = True
-        st = fab.wait(timeout=600.0)
+        while not telemetry_live and not fab.leases.all_done() \
+                and time.monotonic() - t0 < 120.0:
+            telemetry_live = any(
+                v["count"] > 0
+                for k, v in fab.status()["telemetry"].items()
+                if k.startswith("process_seconds"))
+            time.sleep(0.05)
+        try:
+            st = fab.wait(timeout=600.0)
+        except Exception:
+            _dump_flight(fab, "fabric_failover")
+            raise
         dt = time.monotonic() - t0
         exp = expected_fabric_doc_ids(list(fab.shards.values()))
         ids, counts = landed_doc_ids_by_shard(fab.store)
@@ -116,8 +166,9 @@ def run_failover_scenario(*, n: int = 24_000, workers: int = 2,
         # group; what must never happen is dupes scaling with `n`.
         dup_bound = 64 + 4096 * len(st["reassignments"])
         hist = st["watermark_history"]
+        lat = _e2e_latency(fab)
         fab.store.close()
-        return {
+        row = {
             "name": "fabric_failover", "records": n, "workers": workers,
             "wall_sec": round(dt, 3),
             "killed_mid_ingest": killed and not done_before_kill,
@@ -130,7 +181,17 @@ def run_failover_scenario(*, n: int = 24_000, workers: int = 2,
             "watermark_samples": len(hist),
             "watermark_monotonic":
                 all(a <= b for a, b in zip(hist, hist[1:])),
+            "telemetry_live_midrun": telemetry_live,
+            "latency_p99_ms": lat["p99_ms"],
+            "latency_recorded": lat["count"] > 0,
         }
+        if not all(row[f] for f in ("zero_record_loss", "duplicates_bounded",
+                                    "watermark_monotonic", "lease_takeover",
+                                    "latency_recorded")):
+            dump = _dump_flight(fab, "fabric_failover")
+            if dump:
+                row["flight_dump"] = dump
+        return row
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
 

@@ -16,12 +16,13 @@ from repro.data.pipeline import build_news_pipeline
 
 
 def run_variant(name: str, *, n_rss: int, n_fire: int, dedup_mode: str,
-                partitions: int = 8) -> dict:
+                partitions: int = 8, telemetry: bool = True) -> dict:
     tmp = Path(tempfile.mkdtemp(prefix="bench_ingest_"))
     try:
         flow, log = build_news_pipeline(tmp, n_rss=n_rss, n_firehose=n_fire,
                                         n_ws=0, partitions=partitions,
-                                        dedup_mode=dedup_mode)
+                                        dedup_mode=dedup_mode,
+                                        telemetry=telemetry)
         t0 = time.monotonic()
         c0 = time.process_time()
         flow.run_to_completion(timeout=600)
@@ -31,6 +32,11 @@ def run_variant(name: str, *, n_rss: int, n_fire: int, dedup_mode: str,
         landed = sum(log.end_offsets("articles"))
         st = flow.status()
         log.close()
+        # end-to-end ingest→land latency off the per-stage histograms
+        # (merged over the terminal sinks); zeros when telemetry is off
+        lat = {"count": 0, "p50_ms": 0.0, "p99_ms": 0.0}
+        if flow.telemetry is not None:
+            lat = flow.telemetry.merged("ingest_to_land_seconds").summary()
         return {
             "name": name, "records": produced, "wall_sec": round(dt, 3),
             "records_per_sec": round(produced / dt, 1),
@@ -40,6 +46,9 @@ def run_variant(name: str, *, n_rss: int, n_fire: int, dedup_mode: str,
             "cpu_sec": round(cpu, 3),
             "records_per_cpu_sec": round(produced / cpu, 1) if cpu else 0.0,
             "landed": landed,
+            "latency_p50_ms": lat["p50_ms"],
+            "latency_p99_ms": lat["p99_ms"],
+            "latency_recorded": lat["count"] > 0,
             "dropped_junk": st["processors"]["parse"]["dropped"],
             "duplicates": produced - landed
                           - st["processors"]["parse"]["dropped"],

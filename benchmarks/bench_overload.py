@@ -28,6 +28,7 @@ from repro.core import (ExecuteScript, FlowGraph, PartitionedLog,
 from repro.core.acquisition import (AcquisitionRuntime, ConnectorPolicy,
                                     EndOfStream, SourceConnector)
 from repro.core.flowfile import make_flowfile
+from repro.core.telemetry import FlightRecorder
 
 #: ingress queue object threshold — small, so the burst actually congests
 _THRESHOLD = 400
@@ -156,14 +157,18 @@ def run_overload_scenario(mode: str, *, steady_rate: float = 400.0,
         bottleneck = g.nodes["slow"].input
 
         # sample (elapsed, depth, workers) concurrently with the run; the
-        # recovery window and peak pool size are derived from these
+        # recovery window and peak pool size are derived from these. The
+        # flight recorder keeps the last N samples for the post-mortem
+        # dump a failed acceptance flag triggers.
         samples: list[tuple[float, int, int]] = []
+        flight = FlightRecorder(capacity=256)
         done = threading.Event()
 
         def sampler() -> None:
             while not done.is_set():
-                samples.append((time.monotonic(), len(bottleneck),
-                                slow.stats.workers))
+                depth, workers = len(bottleneck), slow.stats.workers
+                samples.append((time.monotonic(), depth, workers))
+                flight.record({"depth": depth, "workers": workers})
                 done.wait(0.02)
 
         st_thread = threading.Thread(target=sampler, daemon=True)
@@ -199,7 +204,7 @@ def run_overload_scenario(mode: str, *, steady_rate: float = 400.0,
         peak_workers = max((w for _, _, w in samples), default=1)
         slow_snap = flow_st["processors"]["slow"]
         log.close()
-        return {
+        row = {
             "name": f"overload_{mode}",
             "records": ep.total,
             "wall_sec": round(wall, 3),
@@ -226,6 +231,19 @@ def run_overload_scenario(mode: str, *, steady_rate: float = 400.0,
             "overload_recovered": (recovery_sec is not None
                                    and recovery_sec <= recover_within_sec),
         }
+        if not all(row[f] for f in ("overload_bounded_memory",
+                                    "overload_zero_unaccounted_loss",
+                                    "overload_recovered")):
+            # post-mortem: the depth/worker trajectory around the failure
+            dump = (Path(tempfile.gettempdir())
+                    / f"repro_flight_overload_{mode}.json")
+            try:
+                flight.dump(dump)
+                row["flight_dump"] = str(dump)
+                print(f"# flight recorder dumped to {dump}")
+            except OSError:
+                pass
+        return row
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
 

@@ -17,6 +17,7 @@ Run:  PYTHONPATH=src python examples/news_ingestion.py
 """
 import tempfile
 import time
+import urllib.request
 from pathlib import Path
 
 from repro.core import (ConsumerGroup, DeadLetterQueue, FileSink, FlowFile,
@@ -109,11 +110,15 @@ def fabric_demo() -> None:
                                         n_ws=1000, partitions=4,
                                         durable=True, workers=2)
     fabric.start()
+    srv = fabric.serve_metrics()        # Prometheus-style text exposition
     t0 = time.monotonic()
     while (sum(store.end_offsets("articles")) < 1000
            and time.monotonic() - t0 < 60.0):
         time.sleep(0.05)
     fabric.kill_worker("w0")
+    # scrape mid-run (wait() shuts the endpoint down with the workers):
+    # merged per-worker histograms are already visible over heartbeats
+    body = urllib.request.urlopen(srv.url, timeout=10).read().decode()
     st = fabric.wait(timeout=300.0)
     dt = time.monotonic() - t0
     exp = expected_fabric_doc_ids(list(fabric.shards.values()))
@@ -126,6 +131,19 @@ def fabric_demo() -> None:
           f"{sum(counts.values())} articles landed in {dt:.2f}s "
           f"(lost={missing}, duplicates={dupes}, takeovers=[{moves}], "
           f"low watermark={st['low_watermark']:.0f})")
+    # fabric-wide telemetry: per-worker histograms merged over heartbeats
+    # + group-done finals, scraped as Prometheus-style text
+    e2e = [v for k, v in st["telemetry"].items()
+           if k.startswith("ingest_to_land_seconds")]
+    print(f"  merged ingest→land e2e across workers: "
+          f"n={sum(v['count'] for v in e2e)}, "
+          f"worst p99={max((v['p99_ms'] for v in e2e), default=0.0):.1f}ms")
+    sample = [ln for ln in body.splitlines()
+              if ln.startswith(("repro_fabric_", "repro_ingest_to_land"))][:6]
+    print(f"  scraped {srv.url} mid-run "
+          f"({len(body.splitlines())} lines); sample:")
+    for ln in sample:
+        print(f"    {ln}")
     store.close()
 
 
@@ -145,6 +163,18 @@ def main() -> None:
           f"({total/dt:,.0f} rec/s) → {landed} clean articles landed")
     print("per-processor:", {n: s["in_records"]
                              for n, s in st["processors"].items()})
+
+    # per-stage latency histograms (ISSUE 9): process time per processor
+    # and the end-to-end ingest→land distribution at the terminal sinks
+    tel = st["telemetry"]
+    print("per-stage latency (p50/p99 ms):")
+    for key in sorted(k for k in tel if k.startswith("process_seconds")):
+        s = tel[key]
+        print(f"  {key:45s} n={s['count']:6d} "
+              f"p50={s['p50_ms']:.3f} p99={s['p99_ms']:.3f}")
+    e2e = flow.telemetry.merged("ingest_to_land_seconds").summary()
+    print(f"ingest→land e2e: n={e2e['count']} "
+          f"p50={e2e['p50_ms']:.1f}ms p99={e2e['p99_ms']:.1f}ms")
 
     # provenance lineage (paper Fig. 4): walk one record's path
     ev = flow.provenance.events(event_type="CREATE")[0]

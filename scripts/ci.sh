@@ -14,7 +14,10 @@
 # noise), or when an acceptance flag breaks in the recovery /
 # flapping-connector acquisition scenarios — simulated AND wire-real
 # localhost HTTP/WebSocket (record loss, watermark regression, unbounded
-# duplicates, window closes outrunning the low watermark).
+# duplicates, window closes outrunning the low watermark, missing
+# per-stage latency telemetry). The quick pass also A/B-guards the
+# telemetry hot path: instrumented ingest must stay within 2% of a
+# telemetry=off run measured back to back (either wall or cpu rate).
 # The tier-1 pass includes the `net` marker's localhost-socket tests.
 set -euo pipefail
 cd "$(dirname "$0")/.."

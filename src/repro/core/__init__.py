@@ -13,7 +13,9 @@ Layers (paper Fig. 1):
                   merge) + watermark-driven event-time windows (windows.py)
   distribution  — LogStore (pluggable durable pub-sub: single-host
                   PartitionedLog or N-replica ReplicatedLog) + ConsumerGroup
-cross-cutting: Connection backpressure, ProvenanceRepository lineage, metrics.
+cross-cutting: Connection backpressure, ProvenanceRepository lineage, and
+telemetry — per-stage latency histograms, sampled record traces, and a
+metrics registry with Prometheus-style export (metrics.py + telemetry.py).
 
 Failure-handling model (paper: "robustness in handling failures")
 -----------------------------------------------------------------
@@ -97,6 +99,8 @@ from .net_connectors import HttpPollConnector, WebSocketConnector
 from .provenance import ProvenanceEvent, ProvenanceRepository
 from .sources import (FirehoseSource, RssAggregatorSource, WebSocketSource,
                       corpus_documents, synth_article)
+from .telemetry import (FlightRecorder, LatencyHistogram, MetricsRegistry,
+                        ScrapeServer, serve_scrape)
 from .transport import (FencedError, FenceTable, FrameTooLarge,
                         LogServer, RemoteLogStore, TransportError)
 from .watermark import LowWatermarkClock, WatermarkTracker
@@ -110,21 +114,24 @@ __all__ = [
     "DEFAULT_OBJECT_THRESHOLD", "DEFAULT_SIZE_THRESHOLD", "DeadLetterQueue",
     "DetectDuplicate", "DurableConnection", "EndOfStream",
     "ExecuteScript", "FabricError", "FaultInjector", "FenceTable",
-    "FencedError", "FileSink", "FirehoseSource", "FrameTooLarge",
-    "FlowError", "FlowFile",
+    "FencedError", "FileSink", "FirehoseSource", "FlightRecorder",
+    "FrameTooLarge", "FlowError", "FlowFile",
     "FlowGraph", "HttpPollConnector", "INJECTOR", "IngestionFabric",
-    "InjectedFault", "LeaseTable", "LogRecord", "LogServer", "LogStore",
+    "InjectedFault", "LatencyHistogram", "LeaseTable", "LogRecord",
+    "LogServer", "LogStore",
     "LookupEnrich", "LowWatermarkClock",
-    "MergeContent", "OffsetStore",
+    "MergeContent", "MetricsRegistry", "OffsetStore",
     "PartitionRecords", "PartitionedLog", "Processor", "Producer",
     "ProvenanceEvent",
     "ProvenanceRepository", "PublishToLog", "RateThrottle", "REL_DROP",
     "REL_FAILURE", "REL_SUCCESS", "ReplicatedLog", "ReplicationError",
     "RestartPolicy", "RouteOnAttribute",
-    "RssAggregatorSource", "SimulatedEndpoint", "Source", "SourceConnector",
+    "RssAggregatorSource", "ScrapeServer", "SimulatedEndpoint", "Source",
+    "SourceConnector",
     "RemoteLogStore", "StaleEpoch", "StaleGeneration", "Throttle",
     "TransportError", "WatermarkTracker",
     "WebSocketConnector", "WebSocketSource", "WindowedAggregate",
     "corpus_documents", "default_event_ts", "emission_order",
-    "make_flowfile", "range_assign", "route_partition", "synth_article",
+    "make_flowfile", "range_assign", "route_partition", "serve_scrape",
+    "synth_article",
 ]

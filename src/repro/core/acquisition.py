@@ -387,6 +387,11 @@ class _ConnectorEntry:
     #: highest frontier already handed to ``drop_segments_below`` (avoids
     #: re-issuing the GC RPC every drain pass)
     spill_gc_below: int = 0
+    # -- telemetry (set by add_connector when the flow carries a registry) ----
+    #: endpoint poll latency histogram (one sample per poll RPC)
+    poll_hist: object = field(default=None, repr=False)
+    #: endpoint ack latency histogram (one sample per cursor ack)
+    ack_hist: object = field(default=None, repr=False)
 
 
 class AcquisitionRuntime:
@@ -419,6 +424,9 @@ class AcquisitionRuntime:
         self._ckpt_lock = threading.Lock()
         self._ckpt_appends = 0
         self._saved: dict[str, dict] = {}
+        if flow.telemetry is not None:
+            flow.telemetry.register_source(
+                "connector", lambda: self.status()["connectors"])
         if log is not None:
             log.create_topic(self.checkpoint_topic, partitions=1)
             for r in log.iter_records(self.checkpoint_topic, 0):
@@ -468,6 +476,12 @@ class AcquisitionRuntime:
         if pol.congestion_mode == "spill":
             spill_topic = f"__spill__.{self.name}.{name}"
             self.log.create_topic(spill_topic, partitions=1)
+        poll_hist = ack_hist = None
+        if self.flow.telemetry is not None:
+            poll_hist = self.flow.telemetry.histogram(
+                "acquire_poll_seconds", connector=name)
+            ack_hist = self.flow.telemetry.histogram(
+                "acquire_ack_seconds", connector=name)
         self._entries[name] = _ConnectorEntry(
             connector=connector, policy=pol, dest=handle,
             late_dest=late_handle, tracker=tracker,
@@ -477,6 +491,7 @@ class AcquisitionRuntime:
             # resumed state forward verbatim
             ckpt_payload=json.dumps(saved).encode() if saved else None,
             throttle_interval=pol.poll_interval_sec,
+            poll_hist=poll_hist, ack_hist=ack_hist,
             spill_topic=spill_topic,
             spill_drained=int(saved.get("spill_drained", 0)),
             ckpt_spill_drained=int(saved.get("spill_drained", 0)))
@@ -589,6 +604,7 @@ class AcquisitionRuntime:
                         e.stats.add(reconnects=1)
                     e.ever_connected = True
                     e.stats.set(duplicates=c.redelivered())
+                t_poll = time.perf_counter()
                 try:
                     faults.fire("acquire.poll", connector=c.name,
                                 cursor=e.cursor)
@@ -608,6 +624,8 @@ class AcquisitionRuntime:
                         return
                     continue
                 failures = 0
+                if e.poll_hist is not None:     # one sample per poll RPC
+                    e.poll_hist.record(time.perf_counter() - t_poll)
                 if not batch:
                     if not self._drain_spill(e):
                         return
@@ -625,8 +643,11 @@ class AcquisitionRuntime:
                 e.since_ckpt += len(batch)
                 if e.since_ckpt >= pol.checkpoint_every_records:
                     e.since_ckpt = 0
+                    t_ack = time.perf_counter()
                     try:
                         c.ack(e.cursor)
+                        if e.ack_hist is not None:
+                            e.ack_hist.record(time.perf_counter() - t_ack)
                     except Exception:
                         connected = False     # ack lost: reconnect, re-ack
                         e.state = "RECONNECTING"
@@ -648,8 +669,11 @@ class AcquisitionRuntime:
                 e.state = "STOPPED"
             if not self._abort:
                 if e.cursor is not None:
+                    t_ack = time.perf_counter()
                     try:
                         c.ack(e.cursor)
+                        if e.ack_hist is not None:
+                            e.ack_hist.record(time.perf_counter() - t_ack)
                     except Exception:
                         pass
                     self._write_checkpoint(e)
@@ -799,6 +823,7 @@ class AcquisitionRuntime:
         backpressure. True only when every surviving record was admitted
         (shed and spilled records count as handled, not admitted)."""
         from .flow import ATTR_INGRESS_PRIORITY
+        batch = self.flow.sample_trace(batch)   # stamp trace.id at admission
         if e.dest.priority:
             p = str(e.dest.priority)
             batch = [ff.with_attributes(**{ATTR_INGRESS_PRIORITY: p})

@@ -93,6 +93,45 @@ class Connection:
         # overload scenario's memory check must allow for
         self.requeued = 0
         self.requeue_overshoot = 0
+        # queue-dwell telemetry (attach_dwell_histogram); None == off, and
+        # the hot path pays nothing beyond one None check per batch
+        self._dwell_hist = None
+        self._dwell_log: deque[list] | None = None
+        self._dwell_clock: Callable[[], float] = time.monotonic
+
+    # -- queue-dwell telemetry ------------------------------------------------
+    def attach_dwell_histogram(self, hist, clock: Callable[[], float]
+                               | None = None) -> None:
+        """Record how long records sit queued into ``hist`` (a
+        :class:`~repro.core.telemetry.LatencyHistogram`). Batch-amortized:
+        one clock read logs a whole ``(timestamp, count)`` chunk on offer,
+        one more consumes chunks FIFO on poll. Under a prioritizer (or a
+        durable replay that predates the attach) the pairing is
+        *approximate* — mass is conserved, order is assumed FIFO."""
+        with self._lock:
+            self._dwell_hist = hist
+            self._dwell_log = deque()
+            if clock is not None:
+                self._dwell_clock = clock
+
+    def _log_enqueue_locked(self, n: int) -> None:
+        if self._dwell_log is not None and n > 0:
+            self._dwell_log.append([self._dwell_clock(), n])
+
+    def _log_dequeue_locked(self, n: int) -> None:
+        log = self._dwell_log
+        if log is None or n <= 0:
+            return
+        now = self._dwell_clock()
+        while n > 0 and log:
+            ts, cnt = log[0]
+            take = cnt if cnt <= n else n
+            self._dwell_hist.record(max(0.0, now - ts), take)
+            if take == cnt:
+                log.popleft()
+            else:
+                log[0][1] = cnt - take
+            n -= take
 
     # -- queue internals (call with lock held) --------------------------------
     def _count_locked(self) -> int:
@@ -182,6 +221,7 @@ class Connection:
                             f"({self._count_locked()} objects / {self._bytes} B)")
                 self._not_full.wait(remaining)
             self._push_locked(ff)
+            self._log_enqueue_locked(1)
             self._not_empty.notify()
             return True
 
@@ -195,6 +235,8 @@ class Connection:
         shutdown checks. Backpressure engages per stall, not per record."""
         deadline = None if timeout is None else time.monotonic() + timeout
         accepted = 0
+        logged = 0          # dwell-log high-water mark; flushed before any
+                            # point where a consumer could observe the pushes
         with self._not_full:
             engaged = False
             for ff in ffs:
@@ -204,11 +246,15 @@ class Connection:
                         engaged = True
                     if not block:
                         if accepted:
+                            self._log_enqueue_locked(accepted - logged)
+                            logged = accepted
                             self._not_empty.notify_all()
                         return accepted
                     # wake consumers before sleeping: they drain the records
                     # already pushed and free space for the rest of the batch
                     if accepted:
+                        self._log_enqueue_locked(accepted - logged)
+                        logged = accepted
                         self._not_empty.notify_all()
                     remaining = None
                     if deadline is not None:
@@ -225,6 +271,7 @@ class Connection:
                 self._push_locked(ff)
                 accepted += 1
             if accepted:
+                self._log_enqueue_locked(accepted - logged)
                 self._not_empty.notify_all()
             return accepted
 
@@ -240,6 +287,7 @@ class Connection:
                     self.requeue_overshoot += 1
                 self._push_locked(ff)
             self.requeued += len(ffs)
+            self._log_enqueue_locked(len(ffs))
             self._not_empty.notify_all()
 
     # -- consumer side -------------------------------------------------------
@@ -257,6 +305,7 @@ class Connection:
                         return None
                 self._not_empty.wait(remaining)
             ff = self._pop_locked()
+            self._log_dequeue_locked(1)
             self._not_full.notify()
             return ff
 
@@ -269,8 +318,11 @@ class Connection:
             return out
         out.append(first)
         with self._not_empty:
+            more = 0
             while self._count_locked() and len(out) < max_items:
                 out.append(self._pop_locked())
+                more += 1
+            self._log_dequeue_locked(more)
             if out:
                 self._not_full.notify_all()
         return out
@@ -401,6 +453,7 @@ class DurableConnection(Connection):
         self.log.flush_topic(self.topic, fsync=self.wal_fsync)
         for ff in ffs:
             self._push_locked(ff)
+        self._log_enqueue_locked(len(ffs))
         self._not_empty.notify_all()
 
     def offer_batch(self, ffs: Sequence[FlowFile], block: bool = True,

@@ -59,6 +59,9 @@ from pathlib import Path
 from typing import Callable, Sequence
 
 from .logstore import LogStore
+from .telemetry import (FlightRecorder, ScrapeServer, merge_histogram_states,
+                        render_histogram_state_text, serve_scrape,
+                        summarize_histogram_state)
 from .transport import (FenceTable, LogServer, RemoteLogStore, recv_ctrl,
                         send_ctrl, TransportError)
 
@@ -277,6 +280,19 @@ class IngestionFabric:
         #: group completion — status() aggregates them fabric-wide so the
         #: benches can track round trips per record
         self._transport: dict[str, dict] = {}
+        #: ``wid -> {gid -> histogram state}``: each worker's latest
+        #: heartbeat view of its ACTIVE groups (replaced wholesale per wid,
+        #: so lost beats are harmless and a dead worker's last report keeps
+        #: counting its in-flight work). Finished groups are evicted from
+        #: the live view and move to ``_telemetry_final`` via their
+        #: ``group_done`` report — groups routinely complete inside one
+        #: heartbeat period, so the beats alone could miss an entire run.
+        self._telemetry: dict[str, dict] = {}
+        self._telemetry_final: dict[str, dict] = {}
+        #: ring of recent status snapshots — dumped to flight-<wid>.json
+        #: when the failure detector declares a worker dead
+        self.flight = FlightRecorder(capacity=64)
+        self._scrape: ScrapeServer | None = None
         self._all_done = threading.Event()
         self._started = False
 
@@ -377,6 +393,8 @@ class IngestionFabric:
             self._ctrl_sock.close()
         except OSError:
             pass
+        if self._scrape is not None:
+            self._scrape.close()
         self.data_server.stop()
 
     # -- observability --
@@ -397,7 +415,49 @@ class IngestionFabric:
             "watermark_history": wm_hist,
             "group_errors": errors,
             "transport": transport,
+            "telemetry": summarize_histogram_state(self.telemetry_state()),
         }
+
+    def telemetry_state(self) -> dict:
+        """Raw fabric-wide histogram state, merged bucket-wise: every
+        finished group's exact final report plus each worker's latest
+        heartbeat view of its still-active groups. A dead worker's last
+        beat keeps counting the work it did before dying — replayed
+        records are then *observed* twice (once per attempt), which is the
+        honest reading for latency telemetry."""
+        with self._lock:
+            reports = [dict(t) for t in self._telemetry_final.values()]
+            reports += [dict(t) for by_gid in self._telemetry.values()
+                        for t in by_gid.values()]
+        merged: dict = {}
+        for state in reports:
+            merge_histogram_states(merged, state)
+        return merged
+
+    def render_metrics_text(self) -> str:
+        """Prometheus-style text exposition of the merged fabric
+        telemetry plus a few coordinator gauges."""
+        status = self.status()
+        lines = [render_histogram_state_text(self.telemetry_state())]
+        lw = status["low_watermark"]
+        if lw is not None:
+            lines.append(f"repro_fabric_low_watermark {lw}")
+        lines.append(
+            f"repro_fabric_reassignments {len(status['reassignments'])}")
+        lines.append(
+            f"repro_fabric_group_errors {len(status['group_errors'])}")
+        for k, v in sorted(status["transport"].items()):
+            lines.append(f'repro_fabric_transport{{counter="{k}"}} {v}')
+        return "\n".join(ln for ln in lines if ln) + "\n"
+
+    def serve_metrics(self, port: int = 0,
+                      host: str = "127.0.0.1") -> ScrapeServer:
+        """Start (or return the already-running) HTTP scrape endpoint
+        serving :meth:`render_metrics_text` at ``GET /metrics``."""
+        if self._scrape is None:
+            self._scrape = serve_scrape(
+                self.render_metrics_text, port=port, host=host)
+        return self._scrape
 
     def low_watermark_history(self) -> list[float]:
         with self._lock:
@@ -444,12 +504,25 @@ class IngestionFabric:
             if kind == "hb":
                 self.leases.heartbeat(wid, time.monotonic())
                 self._ingest_watermarks(msg)
+                tel = msg.get("telemetry")
+                if tel is not None:
+                    with self._lock:
+                        self._telemetry[wid] = tel
             elif kind == "group_done":
                 if msg.get("transport"):
                     with self._lock:
                         self._transport[f"{msg['group']}@e{msg['epoch']}"] = \
                             msg["transport"]
                 if self.leases.mark_done(msg["group"], wid, msg["epoch"]):
+                    with self._lock:
+                        if msg.get("telemetry"):
+                            self._telemetry_final[
+                                f"{msg['group']}@e{msg['epoch']}"] = \
+                                msg["telemetry"]
+                        # evict the group from every live heartbeat view:
+                        # its exact final state supersedes the lagging beat
+                        for t in self._telemetry.values():
+                            t.pop(msg["group"], None)
                     for conn_name in msg.get("finished", []):
                         with self._lock:
                             self._wm_finished.add(
@@ -509,6 +582,7 @@ class IngestionFabric:
         interval = max(0.05, self.heartbeat_sec / 2)
         while not self._stop.is_set():
             time.sleep(interval)
+            self.flight.record(self.status())
             for wid in self.leases.expired_workers(time.monotonic()):
                 try:
                     moved = self.leases.declare_dead(wid)
@@ -517,6 +591,10 @@ class IngestionFabric:
                         self._group_errors["<fabric>"] = str(e)
                     self._all_done.set()
                     return
+                try:
+                    self.flight.dump(self.root / f"flight-{wid}.json")
+                except OSError:
+                    pass
                 for gid, new_wid, epoch in moved:
                     for topic, parts in self.shards[gid]["partitions"].items():
                         for p in parts:
@@ -574,8 +652,15 @@ def _worker_main(worker_id: str, control_addr: tuple[str, int],
 
     send({"t": "hello", "worker": worker_id})
     stop = threading.Event()
-    groups: dict[str, dict] = {}   # gid -> {"runtime", "flow", "epoch"}
+    groups: dict[str, dict] = {}   # gid -> {"runtime", "flow", "log", ...}
     groups_lock = threading.Lock()
+
+    def _group_telemetry(flow, log) -> dict:
+        tel: dict = {}
+        if flow.telemetry is not None:
+            merge_histogram_states(tel, flow.telemetry.histograms_state())
+        merge_histogram_states(tel, log.rpc_histograms_state())
+        return tel
 
     def run_group(spec: dict) -> None:
         gid, epoch = spec["group"], spec["epoch"]
@@ -586,14 +671,23 @@ def _worker_main(worker_id: str, control_addr: tuple[str, int],
         try:
             flow, rt = resolve_factory(spec["factory"])(log, spec)
             with groups_lock:
-                groups[gid] = {"runtime": rt, "flow": flow, "epoch": epoch}
+                groups[gid] = {"runtime": rt, "flow": flow, "log": log,
+                               "epoch": epoch}
             rt.run_with_flow(timeout=spec.get("timeout_sec", 300.0))
             status = rt.status()["connectors"]
+            # final histogram state rides the completion report: groups
+            # routinely finish inside one heartbeat period, so the beat
+            # alone could miss the run entirely
+            try:
+                tel = _group_telemetry(flow, log)
+            except Exception:   # noqa: BLE001 — best-effort telemetry
+                tel = {}
             send({"t": "group_done", "group": gid, "epoch": epoch,
                   "finished": [n for n, s in status.items()
                                if s.get("state") in ("COMPLETED",
                                                      "STOPPED")],
-                  "transport": log.transport_stats()})
+                  "transport": log.transport_stats(),
+                  "telemetry": tel})
         except Exception as e:   # noqa: BLE001 — report, don't kill worker
             send({"t": "group_failed", "group": gid, "epoch": epoch,
                   "fenced": _is_fenced(e),
@@ -609,9 +703,11 @@ def _worker_main(worker_id: str, control_addr: tuple[str, int],
     def heartbeat_loop() -> None:
         while not stop.is_set():
             payload: dict = {}
+            tel: dict = {}
             with groups_lock:
-                active = {g: v["runtime"] for g, v in groups.items()}
-            for gid, rt in active.items():
+                active = {g: dict(v) for g, v in groups.items()}
+            for gid, v in active.items():
+                rt = v["runtime"]
                 try:
                     conns = rt.status()["connectors"]
                 except Exception:   # noqa: BLE001 — racing teardown
@@ -620,7 +716,16 @@ def _worker_main(worker_id: str, control_addr: tuple[str, int],
                     n: {"watermark": s.get("watermark"),
                         "state": s.get("state")}
                     for n, s in conns.items()}
-            send({"t": "hb", "worker": worker_id, "groups": payload})
+                try:
+                    tel[gid] = _group_telemetry(v["flow"], v["log"])
+                except Exception:   # noqa: BLE001 — racing teardown
+                    pass
+            # telemetry is keyed per group and always present (even empty):
+            # the live view covers ACTIVE groups only — once a group's
+            # exact final state ships via group_done, the coordinator
+            # evicts its live entry so the two never double-count
+            send({"t": "hb", "worker": worker_id, "groups": payload,
+                  "telemetry": tel})
             stop.wait(heartbeat_sec)
 
     hb = threading.Thread(target=heartbeat_loop, daemon=True)

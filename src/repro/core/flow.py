@@ -12,6 +12,7 @@ plain graph keeps the seed's fail-fast semantics.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from typing import Callable, Optional, TYPE_CHECKING
@@ -22,8 +23,10 @@ from .flowfile import FlowFile
 if TYPE_CHECKING:
     from .acquisition import AcquisitionRuntime
     from .logstore import LogStore
-from .processor import FlowNode, Processor, RestartPolicy, Source, _Worker
+from .processor import (ATTR_TRACE_ID, FlowNode, Processor, RestartPolicy,
+                        Source, _Worker)
 from .provenance import ProvenanceRepository
+from .telemetry import MetricsRegistry
 
 
 class FlowError(RuntimeError):
@@ -79,7 +82,9 @@ class IngressHandle:
 
 class FlowGraph:
     def __init__(self, name: str = "flow",
-                 provenance: ProvenanceRepository | None = None) -> None:
+                 provenance: ProvenanceRepository | None = None,
+                 telemetry: bool = True,
+                 trace_sample_rate: float = 0.0) -> None:
         self.name = name
         self.provenance = provenance or ProvenanceRepository()
         self.nodes: dict[str, FlowNode] = {}
@@ -94,6 +99,29 @@ class FlowGraph:
         #: live-source runtime feeding this graph (set by AcquisitionRuntime;
         #: surfaces per-connector stats through status())
         self.acquisition: "AcquisitionRuntime | None" = None
+        #: per-process metric surface (paper §IV.C status history); ``None``
+        #: when built with ``telemetry=False`` — every engine hook is gated
+        #: on that, so an untelemetered graph pays zero instrumentation cost
+        self.telemetry: MetricsRegistry | None = \
+            MetricsRegistry() if telemetry else None
+        if self.telemetry is not None:
+            self.telemetry.register_source("processor", self._processor_gauges)
+            self.telemetry.register_source(
+                "connection",
+                lambda: {c.name: c.snapshot() for c in self.connections})
+        # trace sampling: every k-th admitted record is stamped (k =
+        # round(1/rate)); 0 disables. The counter is a shared stride across
+        # all admission points, so the sample is uniform over admissions.
+        if trace_sample_rate < 0.0 or trace_sample_rate > 1.0:
+            raise ValueError("trace_sample_rate must be within [0, 1]")
+        self.trace_sample_rate = trace_sample_rate
+        self._trace_every = (0 if trace_sample_rate <= 0.0
+                             else max(1, round(1.0 / trace_sample_rate)))
+        self._trace_counter = itertools.count(1)
+
+    def _processor_gauges(self) -> dict:
+        return {n: fn.processor.stats.snapshot()
+                for n, fn in self.nodes.items()}
 
     # -- assembly -------------------------------------------------------------
     def add(self, processor: Processor,
@@ -106,9 +134,13 @@ class FlowGraph:
         type is known."""
         if processor.name in self.nodes:
             raise FlowError(f"duplicate processor name {processor.name!r}")
-        self.nodes[processor.name] = FlowNode(
+        node = FlowNode(
             processor, restart_policy,
             min_workers=min_workers, max_workers=max_workers)
+        if self.telemetry is not None:
+            node.proc_hist = self.telemetry.histogram(
+                "process_seconds", processor=processor.name)
+        self.nodes[processor.name] = node
         return processor
 
     def connect(self, src: Processor | str, relationship: str,
@@ -153,6 +185,10 @@ class FlowGraph:
                 conn = DurableConnection(name, durable, **kwargs)
             else:
                 conn = Connection(name, prioritizer=prioritizer, **kwargs)
+            if self.telemetry is not None:
+                conn.attach_dwell_histogram(self.telemetry.histogram(
+                    "queue_dwell_seconds",
+                    processor=src_name, relationship=relationship))
             dst_node.input = conn
             self.connections.append(conn)
         else:
@@ -211,6 +247,10 @@ class FlowGraph:
                 if priority != 0:
                     prioritizer = lambda ff: -ingress_priority(ff)  # noqa: E731
                 conn = Connection(conn_name, prioritizer=prioritizer, **kwargs)
+            if self.telemetry is not None:
+                conn.attach_dwell_histogram(self.telemetry.histogram(
+                    "queue_dwell_seconds",
+                    processor=dst_name, relationship="ingress"))
             dst_node.input = conn
             self.connections.append(conn)
         elif (priority != 0
@@ -245,6 +285,10 @@ class FlowGraph:
             if object_threshold is not None:
                 kwargs["object_threshold"] = object_threshold
             node.input = Connection(f"__dead_letters__->{name}", **kwargs)
+            if self.telemetry is not None:
+                node.input.attach_dwell_histogram(self.telemetry.histogram(
+                    "queue_dwell_seconds",
+                    processor=name, relationship="dead_letters"))
             self.connections.append(node.input)
         elif object_threshold is not None:
             raise FlowError(
@@ -267,6 +311,16 @@ class FlowGraph:
             # of them before its drain-and-done termination check may pass
             self._dlq_node.upstreams = [n for n in self.nodes.values()
                                         if n is not self._dlq_node]
+        if self.telemetry is not None:
+            # terminal nodes are where a record "lands": stamp ingest→land
+            # latency there, measured against the FlowFile's admission time
+            # (entry_ts survives log round-trips, so fabric workers report
+            # true end-to-end latency, not post-replay latency)
+            for node in self.nodes.values():
+                if not node.outputs and node.e2e_hist is None:
+                    node.e2e_hist = self.telemetry.histogram(
+                        "ingest_to_land_seconds",
+                        processor=node.processor.name)
         for node in self.nodes.values():
             w = _Worker(node, self)
             self._workers.append(w)
@@ -344,7 +398,47 @@ class FlowGraph:
             "provenance_counts": self.provenance.counts(),
             "failed": sorted(n for n, fn in self.nodes.items()
                              if fn.state == "FAILED"),
+            "telemetry": (self.telemetry.summaries()
+                          if self.telemetry is not None else {}),
         }
         if self.acquisition is not None:
             out["acquisition"] = self.acquisition.status()
         return out
+
+    # -- tracing (paper Fig. 4: lineage, extended with per-hop timing) -------
+    def sample_trace(self, ffs: list[FlowFile]) -> list[FlowFile]:
+        """Stamp every k-th record (k = round(1/``trace_sample_rate``)) with
+        :data:`ATTR_TRACE_ID` at an admission point. Traced records get a
+        timed span event recorded per hop (see ``_Worker._process_batch``);
+        identity passthrough when tracing is off."""
+        if self._trace_every <= 0 or not ffs:
+            return ffs
+        out = list(ffs)
+        for i, ff in enumerate(out):
+            if next(self._trace_counter) % self._trace_every == 0:
+                out[i] = ff.derive(
+                    attributes={ATTR_TRACE_ID: ff.lineage_id})
+        return out
+
+    def trace_spans(self, trace_id: str) -> list[dict]:
+        """Timed span tree of one traced record, reconstructed from its
+        provenance lineage: every ``span`` event this graph recorded for it,
+        in time order, with the hop's batch-amortized elapsed time. Each
+        entry carries ``uuid``/``parent`` so callers can rebuild the
+        derivation tree; the flat list is already the Fig. 4 path."""
+        spans = []
+        for ev in self.provenance.lineage(trace_id):
+            if not ev.details.startswith("span "):
+                continue
+            fields = dict(kv.split("=", 1)
+                          for kv in ev.details.split()[1:] if "=" in kv)
+            spans.append({
+                "component": ev.component,
+                "event_type": ev.event_type,
+                "ts": ev.ts,
+                "uuid": ev.flowfile_uuid,
+                "elapsed_us": int(fields.get("elapsed_us", 0)),
+                "batch": int(fields.get("batch", 1)),
+            })
+        spans.sort(key=lambda s: s["ts"])
+        return spans

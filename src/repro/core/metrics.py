@@ -13,7 +13,8 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
+from typing import Callable, Optional
 
 
 @dataclass
@@ -70,39 +71,37 @@ class ComponentStats:
                 setattr(self, k, v)
 
     def snapshot(self) -> dict:
+        """One consistent view of every declared field. Derived from
+        ``dataclasses.fields()`` so a counter added to the dataclass can
+        never silently vanish from ``FlowGraph.status()`` (the hand-written
+        literal this replaced had to be edited in lockstep)."""
         with self._lock:
-            return {
-                "name": self.name,
-                "in_records": self.in_records, "in_bytes": self.in_bytes,
-                "out_records": self.out_records, "out_bytes": self.out_bytes,
-                "dropped": self.dropped,
-                "restarts": self.restarts, "retries": self.retries,
-                "dead_lettered": self.dead_lettered,
-                "reconnects": self.reconnects,
-                "late_records": self.late_records,
-                "duplicates": self.duplicates,
-                "lag": self.lag, "watermark": self.watermark,
-                "shed": self.shed, "spilled": self.spilled,
-                "spill_replayed": self.spill_replayed,
-                "throttle_engagements": self.throttle_engagements,
-                "throttle_boosts": self.throttle_boosts,
-                "spill_gc": self.spill_gc,
-                "workers": self.workers, "scale_ups": self.scale_ups,
-                "scale_downs": self.scale_downs,
-            }
+            return {f.name: getattr(self, f.name)
+                    for f in fields(self) if f.name != "_lock"}
 
 
 class WindowedCounter:
-    """Rolling-window rate counter (default 5-minute window, 1 s buckets)."""
+    """Rolling-window rate counter (default 5-minute window, 1 s buckets).
 
-    def __init__(self, window_sec: float = 300.0, bucket_sec: float = 1.0) -> None:
+    ``clock`` (a zero-arg seconds callable) makes decay/eviction tests
+    deterministic — no sleeping against real ``time.monotonic()`` on a
+    load-spiky host. When omitted, the monotonic clock is looked up at
+    call time, not captured at construction.
+    """
+
+    def __init__(self, window_sec: float = 300.0, bucket_sec: float = 1.0,
+                 clock: Optional[Callable[[], float]] = None) -> None:
         self.window_sec = window_sec
         self.bucket_sec = bucket_sec
+        self._clock = clock
         self._buckets: deque[tuple[int, float]] = deque()
         self._lock = threading.Lock()
 
+    def _now(self) -> float:
+        return self._clock() if self._clock is not None else time.monotonic()
+
     def add(self, n: float = 1.0) -> None:
-        now = time.monotonic()
+        now = self._now()
         bucket = int(now / self.bucket_sec)
         with self._lock:
             if self._buckets and self._buckets[-1][0] == bucket:
@@ -119,7 +118,7 @@ class WindowedCounter:
 
     def total(self) -> float:
         with self._lock:
-            self._evict(time.monotonic())
+            self._evict(self._now())
             return sum(v for _, v in self._buckets)
 
     def rate_per_sec(self) -> float:
@@ -129,7 +128,7 @@ class WindowedCounter:
         window after the burst ends — the rate must decay as idle time
         accumulates, reaching 0 only when the window fully evicts."""
         with self._lock:
-            now = time.monotonic()
+            now = self._now()
             self._evict(now)
             if not self._buckets:
                 return 0.0

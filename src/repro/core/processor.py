@@ -75,6 +75,11 @@ REL_FAILURE = "failure"
 #: Relationship name whose FlowFiles are dropped (with DROP provenance).
 REL_DROP = "__drop__"
 
+#: FlowFile attribute marking a record sampled for end-to-end tracing (the
+#: value is the trace id == lineage_id). Stamped by ``FlowGraph.sample_trace``
+#: at admission; every hop then records a timed ``span`` provenance event.
+ATTR_TRACE_ID = "trace.id"
+
 #: FlowFile attributes stamped by the retry / dead-letter machinery.
 ATTR_RETRY_COUNT = "retry.count"
 ATTR_LAST_ERROR = "retry.last.error"
@@ -284,11 +289,18 @@ class _Worker(threading.Thread):
         batch: list[FlowFile] = []
 
         def trigger(batch: list[FlowFile]) -> None:
+            hist = node.proc_hist
+            t0 = time.perf_counter() if hist is not None else 0.0
             faults.fire(site, batch=batch)
+            batch = self.graph.sample_trace(batch)
             self.graph.provenance.record_batch("CREATE", batch, proc.name)
             proc.stats.add(in_records=len(batch),
                            in_bytes=sum(ff.size for ff in batch))
             self._emit_all(proc.on_trigger(batch))
+            if hist is not None and batch:
+                # one perf_counter pair per batch; includes downstream offer
+                # time, so a backpressured source shows up here, not nowhere
+                hist.record(time.perf_counter() - t0, len(batch))
             # counted only after a full emit: a supervisor restart replays
             # the replayable generator from here (at-least-once — a crash
             # mid-emit re-emits the whole batch, duplicates allowed)
@@ -546,11 +558,18 @@ class _Worker(threading.Thread):
         lost) or, when retry/dead-letter routing is configured, isolate the
         poison record. Returns True when every record is settled (emitted,
         re-queued, or dead-lettered)."""
-        proc = self.node.processor
+        node = self.node
+        proc = node.processor
         graph = self.graph
+        # time only top-level triggers: the poison-isolation recursion below
+        # re-runs the same records record-at-a-time (top=False) and must not
+        # double-count them. One perf_counter pair per batch, the batch size
+        # folded in as the bucket weight — per-record cost ~amortized to zero.
+        hist = node.proc_hist if top else None
+        t0 = time.perf_counter() if hist is not None else 0.0
         try:
             faults.fire(site, batch=batch)
-            return self._emit_all(proc.on_trigger(batch))
+            settled = self._emit_all(proc.on_trigger(batch))
         except Exception as e:
             # retry only when the connection opted in; a wired DLQ alone must
             # not turn every transient failure into an instant quarantine
@@ -582,6 +601,27 @@ class _Worker(threading.Thread):
             for ff in batch:
                 settled &= self._process_batch(conn, [ff], site, top=False)
             return settled
+        # telemetry — reached only on the non-exception path
+        if hist is not None and batch:
+            elapsed = time.perf_counter() - t0
+            hist.record(elapsed, len(batch))
+            if node.e2e_hist is not None:
+                # terminal hop: ingest→land latency off the admission stamp
+                # (entry_ts survives log round-trips — fabric workers report
+                # the record's true fabric-entry time). One wall-clock read
+                # per batch.
+                now = time.time()
+                node.e2e_hist.record_many(
+                    max(0.0, now - ff.entry_ts) for ff in batch)
+            if graph._trace_every:
+                traced = [ff for ff in batch
+                          if ATTR_TRACE_ID in ff.attributes]
+                if traced:
+                    graph.provenance.record_batch(
+                        "TRANSFORM", traced, proc.name,
+                        details=f"span elapsed_us={int(elapsed * 1e6)} "
+                                f"batch={len(batch)}")
+        return settled
 
     def _retry_or_dead_letter(self, conn: Connection, ff: FlowFile,
                               err: Exception) -> bool:
@@ -644,6 +684,11 @@ class FlowNode:
         self.outputs: dict[str, list[Connection]] = {}
         self.upstreams: list[FlowNode] = []
         self.done = threading.Event()
+        # -- telemetry (set by FlowGraph when telemetry is on) ----------------
+        #: process-time histogram for this node's triggers (None == off)
+        self.proc_hist = None
+        #: ingest→land latency histogram; set at start() on terminal nodes
+        self.e2e_hist = None
         # -- supervision state (see module docstring) -------------------------
         self.restart_policy = restart_policy or RestartPolicy()
         self.state = "PENDING"   # RUNNING|RESTARTING|COMPLETED|STOPPED|FAILED

@@ -108,6 +108,7 @@ from typing import Sequence
 from . import faults
 from .log import PartitionedLog, route_partition
 from .logstore import LogRecord, LogStore
+from .telemetry import LatencyHistogram, metric_key
 
 __all__ = [
     "MAX_FRAME", "TransportError", "FrameTooLarge", "FencedError",
@@ -159,6 +160,16 @@ OP_PING = 0x0C
 #: JSON control frame — not part of the LogStore surface; the fabric's
 #: coordinator/worker control channel reuses this framing (see core/fabric).
 OP_CTRL = 0x20
+
+#: opcode -> human-readable name (the ``op`` label on per-op RPC latency
+#: histograms; see :meth:`RemoteLogStore.rpc_histograms_state`)
+OP_NAMES = {
+    0x01: "create_topic", 0x02: "topics", 0x03: "num_partitions",
+    0x04: "append_batch", 0x05: "read", 0x06: "begin_offset",
+    0x07: "end_offset", 0x08: "flush", 0x09: "flush_topic",
+    0x0A: "enforce_retention", 0x0B: "drop_segments_below",
+    0x0C: "ping", 0x20: "ctrl",
+}
 
 # -- response status codes --------------------------------------------------
 ST_OK = 0
@@ -678,6 +689,9 @@ class RemoteLogStore(LogStore):
             "end_offset_rpcs": 0,
             "end_cache_hits": 0,      # end_offsets served from the cache
         }
+        # per-op RPC latency histograms (telemetry layer; lazily created on
+        # first call per opcode — one perf_counter pair per round trip)
+        self._op_hist: dict[int, "LatencyHistogram"] = {}
 
     # -- connection management --
     def set_fence_epoch(self, epoch: int) -> None:
@@ -692,6 +706,13 @@ class RemoteLogStore(LogStore):
             out = dict(self._stats)
             out["reconnects"] = self.reconnects
         return out
+
+    def rpc_histograms_state(self) -> dict:
+        """Serialized per-op RPC latency histograms, keyed in the metric
+        registry's canonical form (``rpc_seconds{op="append_batch"}``) so
+        fabric workers can merge them straight into heartbeat telemetry."""
+        return {metric_key("rpc_seconds", {"op": OP_NAMES.get(op, hex(op))}):
+                h.to_dict() for op, h in list(self._op_hist.items())}
 
     def _sendall_locked(self, data: bytes) -> None:
         """Send under the lock on the short-poll socket: partial sends loop,
@@ -780,6 +801,7 @@ class RemoteLogStore(LogStore):
         if 5 + len(body) > MAX_FRAME:
             raise FrameTooLarge(
                 f"frame of {5 + len(body)} bytes exceeds cap of {MAX_FRAME}")
+        t0 = time.perf_counter()
         with self._cv:
             # admission: bounded in-flight window
             deadline = time.monotonic() + self.op_timeout
@@ -831,6 +853,12 @@ class RemoteLogStore(LogStore):
                     raise TransportError(
                         f"op {op:#x} timed out after {self.op_timeout}s")
         status, resp = p.status, p.resp
+        # latency per completed cycle (admission wait + wire + demux); the
+        # unreachable/timeout raise paths above never complete a cycle
+        h = self._op_hist.get(op)
+        if h is None:
+            h = self._op_hist.setdefault(op, LatencyHistogram())
+        h.record(time.perf_counter() - t0)
         if status == ST_OK:
             return resp
         msg = resp.decode("utf-8", errors="replace")

@@ -60,7 +60,9 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
                         redelivery: int = 4,
                         socket_endpoints: dict[str, tuple] | None = None,
                         window_sec: float | None = None,
-                        workers: int = 1
+                        workers: int = 1,
+                        telemetry: bool = True,
+                        trace_sample_rate: float = 0.0
                         ) -> tuple[FlowGraph, LogStore]:
     """The paper §IV case study: returns (flow, log) with topic ``articles``
     (clean, deduped, enriched news) and topic ``events`` (websocket feed).
@@ -114,6 +116,13 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
     elastic worker-pool bounds (``{"enrich": (1, 4)}`` — incompatible with
     ``durable=True``, which makes every interior input FIFO-prefix-acked).
 
+    Telemetry (on by default, within the 2%-overhead budget):
+    ``telemetry=False`` strips every per-stage latency histogram from the
+    hot path (the overhead guard's A/B baseline); ``trace_sample_rate=r``
+    stamps roughly every ``1/r``-th admitted record with a ``trace.id``
+    attribute and records per-stage span events into provenance —
+    ``flow.trace_spans(trace_id)`` rebuilds the timed span tree.
+
     ``window_sec`` (any live mode; defaults to 64 event-time seconds when
     ``live="socket"``) adds the watermark-driven aggregation stage: a
     :class:`~repro.core.windows.WindowedAggregate` fans out from the
@@ -151,7 +160,8 @@ def build_news_pipeline(root: str | Path, *, n_rss: int = 2000,
 
     from ..core import ProvenanceRepository
     g = FlowGraph("news-pipeline",
-                  provenance=ProvenanceRepository(route_sample=route_sample))
+                  provenance=ProvenanceRepository(route_sample=route_sample),
+                  telemetry=telemetry, trace_sample_rate=trace_sample_rate)
     conn_kw = {"max_retries": max_retries} if max_retries else {}
     if durable:
         conn_kw["durable"] = log

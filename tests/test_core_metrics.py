@@ -1,6 +1,11 @@
 """Metrics correctness (ISSUE 7 bugfix sweep): the windowed rate gauge must
 decay after a burst, and ``ComponentStats`` must tolerate concurrent writers
-without losing increments or tearing paired gauges."""
+without losing increments or tearing paired gauges.
+
+The time-dependent tests inject ``clock=`` (ISSUE 9) instead of
+monkeypatching ``time.monotonic`` module-wide — the old approach broke as
+soon as anything else in the module read the real clock."""
+import dataclasses
 import threading
 
 from repro.core.metrics import ComponentStats, WindowedCounter
@@ -8,15 +13,13 @@ from repro.core.metrics import ComponentStats, WindowedCounter
 
 # -- WindowedCounter.rate_per_sec decay regression ---------------------------
 
-def test_rate_decays_with_idle_time(monkeypatch):
+def test_rate_decays_with_idle_time():
     """Regression: rate_per_sec divided by the occupied-bucket span only, so
     a 1-second burst reported its peak rate for the full 5-minute window.
     The divisor must be elapsed-time-to-now, clamped to the window."""
-    import repro.core.metrics as m
     fake_now = [1000.0]
-    monkeypatch.setattr(m.time, "monotonic", lambda: fake_now[0])
-
-    wc = WindowedCounter(window_sec=300.0, bucket_sec=1.0)
+    wc = WindowedCounter(window_sec=300.0, bucket_sec=1.0,
+                         clock=lambda: fake_now[0])
     wc.add(600)                       # burst: 600 records in one bucket
     fake_now[0] += 0.5
     assert wc.rate_per_sec() == 600.0 / 1.0   # sub-bucket elapse clamps up
@@ -33,13 +36,12 @@ def test_rate_decays_with_idle_time(monkeypatch):
     assert wc.rate_per_sec() == 0.0
 
 
-def test_rate_clamps_to_window(monkeypatch):
+def test_rate_clamps_to_window():
     """A steady stream's divisor never exceeds window_sec, so the steady
     rate is reported correctly rather than diluted by forgotten history."""
-    import repro.core.metrics as m
     fake_now = [0.0]
-    monkeypatch.setattr(m.time, "monotonic", lambda: fake_now[0])
-    wc = WindowedCounter(window_sec=10.0, bucket_sec=1.0)
+    wc = WindowedCounter(window_sec=10.0, bucket_sec=1.0,
+                         clock=lambda: fake_now[0])
     for i in range(40):               # 40s of 5 rec/s; window keeps last 10s
         fake_now[0] = float(i)
         wc.add(5)
@@ -47,11 +49,10 @@ def test_rate_clamps_to_window(monkeypatch):
     assert abs(wc.rate_per_sec() - 5.0) < 1.0
 
 
-def test_total_evicts_expired_buckets(monkeypatch):
-    import repro.core.metrics as m
+def test_total_evicts_expired_buckets():
     fake_now = [0.0]
-    monkeypatch.setattr(m.time, "monotonic", lambda: fake_now[0])
-    wc = WindowedCounter(window_sec=5.0, bucket_sec=1.0)
+    wc = WindowedCounter(window_sec=5.0, bucket_sec=1.0,
+                         clock=lambda: fake_now[0])
     wc.add(10)
     fake_now[0] = 3.0
     wc.add(7)
@@ -120,3 +121,15 @@ def test_snapshot_carries_congestion_and_pool_fields():
     assert snap["workers"] == 4
     assert snap["scale_ups"] == 1 and snap["scale_downs"] == 1
     assert snap["lag"] == 7 and snap["watermark"] == 123.0
+
+
+def test_snapshot_tracks_dataclass_fields():
+    """Regression (ISSUE 9 bugfix): ``snapshot()`` was a hand-maintained
+    dict that silently dropped fields added to the dataclass (it missed
+    ``shed``/``spilled``/... when they were added). It must now mirror
+    ``dataclasses.fields`` exactly, minus the lock."""
+    stats = ComponentStats("schema")
+    expected = {f.name for f in dataclasses.fields(ComponentStats)
+                if f.name != "_lock"}
+    assert set(stats.snapshot()) == expected
+    assert "_lock" not in stats.snapshot()

@@ -1,0 +1,146 @@
+"""Golden-schema tests (ISSUE 9): pin the keys of ``FlowGraph.status()``
+and ``IngestionFabric.status()`` so a refactor that silently drops an
+observability surface fails loudly, plus the end-to-end telemetry
+acceptance — merged per-stage histograms visible mid-run via heartbeats,
+the HTTP scrape endpoint, and sampled record traces through provenance.
+"""
+import time
+import urllib.request
+
+import pytest
+
+from repro.core import (ExecuteScript, FlowGraph, PartitionedLog,
+                        PublishToLog, Source)
+
+
+def _tiny_flow(tmp_path, **graph_kw):
+    log = PartitionedLog(tmp_path / "log")
+    log.create_topic("out", partitions=1)
+    g = FlowGraph("schema", **graph_kw)
+
+    def gen():
+        from repro.core.flowfile import make_flowfile
+        for i in range(40):
+            yield make_flowfile(f'{{"i": {i}}}', seq=str(i))
+
+    src = g.add(Source("src", gen))
+    echo = g.add(ExecuteScript("echo", lambda ff: ff))
+    sink = g.add(PublishToLog("sink", log, "out"))
+    g.connect(src, "success", echo)
+    g.connect(echo, "success", sink)
+    return g, log
+
+
+# -- FlowGraph.status() golden schema ----------------------------------------
+
+FLOW_STATUS_KEYS = {"processors", "connections", "provenance_counts",
+                    "failed", "telemetry"}
+
+PROCESSOR_KEYS = {"name", "in_records", "in_bytes", "out_records",
+                  "out_bytes", "dropped", "retries", "dead_lettered",
+                  "restarts", "state", "pending_retries"}
+
+TELEMETRY_SUMMARY_KEYS = {"count", "mean_ms", "p50_ms", "p90_ms", "p99_ms"}
+
+
+def test_flow_status_schema(tmp_path):
+    g, log = _tiny_flow(tmp_path)
+    g.run_to_completion(timeout=60)
+    st = g.status()
+    assert set(st) == FLOW_STATUS_KEYS
+    for snap in st["processors"].values():
+        assert PROCESSOR_KEYS <= set(snap)
+    # per-stage histograms: process time per processor, queue dwell per
+    # (processor, relationship) edge, ingest→land at the terminal sink
+    tel = st["telemetry"]
+    assert tel['process_seconds{processor="echo"}']["count"] == 40
+    assert tel['queue_dwell_seconds{processor="echo",'
+               'relationship="success"}']["count"] == 40
+    e2e = tel['ingest_to_land_seconds{processor="sink"}']
+    assert set(e2e) == TELEMETRY_SUMMARY_KEYS
+    assert e2e["count"] == 40
+    assert e2e["p50_ms"] <= e2e["p99_ms"]
+    log.close()
+
+
+def test_flow_status_telemetry_off(tmp_path):
+    g, log = _tiny_flow(tmp_path, telemetry=False)
+    g.run_to_completion(timeout=60)
+    st = g.status()
+    assert set(st) == FLOW_STATUS_KEYS      # same schema, empty body
+    assert st["telemetry"] == {}
+    log.close()
+
+
+# -- sampled traces through provenance ---------------------------------------
+
+def test_trace_sampling_spans(tmp_path):
+    g, log = _tiny_flow(tmp_path, trace_sample_rate=1.0)
+    # sources are admission points: every record gets a trace.id at rate 1
+    g.run_to_completion(timeout=60)
+    span_events = [e for e in g.provenance.events()
+                   if e.details.startswith("span ")]
+    assert span_events, "no span events recorded at rate 1.0"
+    trace_id = span_events[0].lineage_id
+    spans = g.trace_spans(trace_id)
+    assert spans, "trace_spans found nothing for a traced record"
+    for s in spans:
+        assert s["elapsed_us"] >= 0
+        assert s["batch"] >= 1
+        assert s["component"]
+    assert [s["ts"] for s in spans] == sorted(s["ts"] for s in spans)
+    log.close()
+
+
+def test_trace_sampling_off_by_default(tmp_path):
+    g, log = _tiny_flow(tmp_path)
+    g.run_to_completion(timeout=60)
+    assert g._trace_every == 0
+    log.close()
+
+
+def test_bad_trace_rate_rejected():
+    with pytest.raises(ValueError):
+        FlowGraph("bad", trace_sample_rate=1.5)
+
+
+# -- IngestionFabric.status() golden schema + live telemetry ------------------
+
+FABRIC_STATUS_KEYS = {"leases", "reassignments", "low_watermark",
+                      "watermark_history", "group_errors", "transport",
+                      "telemetry"}
+
+
+def test_fabric_status_schema_and_live_telemetry(tmp_path):
+    from repro.data.pipeline import build_news_fabric
+    fab = build_news_fabric(tmp_path, workers=2, n_rss=1_500,
+                            n_firehose=1_500, n_ws=300)
+    fab.start()
+    srv = fab.serve_metrics()
+    try:
+        assert set(fab.status()) == FABRIC_STATUS_KEYS
+        # heartbeat-shipped per-stage histograms must become visible
+        # MID-RUN (before wait() returns)
+        deadline = time.monotonic() + 60.0
+        live = {}
+        while time.monotonic() < deadline and not fab.leases.all_done():
+            tel = fab.status()["telemetry"]
+            live = {k: v for k, v in tel.items()
+                    if k.startswith("process_seconds") and v["count"] > 0}
+            if live:
+                break
+            time.sleep(0.05)
+        assert live, "no mid-run telemetry arrived over heartbeats"
+        body = urllib.request.urlopen(srv.url, timeout=10).read().decode()
+        assert "repro_" in body
+        st = fab.wait(timeout=120.0)
+    finally:
+        fab.shutdown(force=True)
+        fab.store.close()
+    tel = st["telemetry"]
+    # final state is exact: shipped with each group_done, not a lagging beat
+    e2e = [v for k, v in tel.items()
+           if k.startswith("ingest_to_land_seconds")]
+    assert sum(v["count"] for v in e2e) > 0
+    rpc = [k for k in tel if k.startswith("rpc_seconds")]
+    assert rpc, "worker RemoteLogStore RPC histograms missing"

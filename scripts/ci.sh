@@ -24,8 +24,21 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== invariant analysis (repro.analysis --check) =="
+# AST pass over src/: fails on any unbaselined finding, any stale baseline
+# entry (drift in either direction), or any unused suppression pragma.
+# Rules + the committed baseline: src/repro/analysis/, analysis-baseline.json.
+python -m repro.analysis --check src/
+
 echo "== tier-1 pytest =="
 python -m pytest -q "$@"
+
+echo "== lock-order detector over the fast concurrency subset =="
+# Re-run the `lockorder`-marked modules with threading.Lock/RLock wrapped
+# (opt-in via REPRO_LOCK_ORDER=1; zero patching otherwise). Exit 3 if the
+# recorded acquisition graph contains a held-across cycle — a deadlock
+# waiting for the right interleaving, even when every test passed.
+REPRO_LOCK_ORDER=1 python -m pytest -q -m lockorder
 
 echo "== bench smoke + acquisition/ingest guards (--quick) =="
 python benchmarks/run.py --quick

@@ -1,0 +1,23 @@
+"""Repo-specific static analysis + dynamic lock-order detection.
+
+The fabric's concurrency and durability contracts — hard-won across PRs
+2/5/7/8/9 — are encoded as machine-checked invariants:
+
+* ``python -m repro.analysis --check src/`` runs the AST lint pass
+  (see :mod:`repro.analysis.rules`) against the committed baseline; any new
+  finding OR stale baseline entry fails. Gated by ``scripts/ci.sh``.
+* ``REPRO_LOCK_ORDER=1`` arms the dynamic lock-order detector
+  (:mod:`repro.analysis.lockorder`) — the tier-1 fast subset runs under it
+  in CI and fails on any held-across lock-acquisition cycle.
+"""
+from .engine import (AnalysisConfig, Engine, Finding, ModuleContext, Rule,
+                     load_config)
+from .lockorder import (LockOrderMonitor, LockOrderViolation,
+                        monitor_enabled_by_env)
+from .rules import default_rules
+
+__all__ = [
+    "AnalysisConfig", "Engine", "Finding", "ModuleContext", "Rule",
+    "load_config", "default_rules",
+    "LockOrderMonitor", "LockOrderViolation", "monitor_enabled_by_env",
+]

@@ -1,0 +1,82 @@
+"""CLI for the invariant analysis pass.
+
+    python -m repro.analysis --check [paths...]     lint against the baseline
+    python -m repro.analysis --write-baseline       regenerate the baseline
+    python -m repro.analysis --list-rules           print rule ids + docs
+
+``--check`` exits non-zero on any NEW finding, any STALE baseline entry
+(drift in either direction), or any unused suppression pragma. Paths
+default to ``[tool.repro-analysis] paths`` in pyproject.toml.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .engine import Engine, load_config
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to scan (default: configured paths)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on unbaselined findings and baseline drift")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the committed baseline from this scan")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--verbose", "-v", action="store_true",
+                    help="also print suppressed (pragma'd) findings")
+    args = ap.parse_args(argv)
+
+    config = load_config()
+    engine = Engine(config)
+
+    if args.list_rules:
+        for rule in engine.rules:
+            print(f"{rule.id:24s} {rule.doc}")
+        return 0
+
+    result = engine.scan(args.paths or None)
+
+    if args.write_baseline:
+        path = engine.write_baseline(result)
+        print(f"baseline: {len(result.findings)} finding(s) -> {path}")
+        return 0
+
+    baseline = engine.load_baseline()
+    new, stale = result.partition_against(baseline)
+
+    if args.verbose and result.suppressed:
+        print(f"-- {len(result.suppressed)} suppressed (pragma'd):")
+        for f in result.suppressed:
+            print(f"   {f.render()}")
+    status = 0
+    if new:
+        print(f"-- {len(new)} unbaselined finding(s):")
+        for f in new:
+            print(f"   {f.render()}")
+        status = 1
+    if stale:
+        print(f"-- {len(stale)} stale baseline entr(y/ies) — fixed or moved; "
+              "regenerate with --write-baseline:")
+        for f in stale:
+            print(f"   {f.render()}")
+        status = 1
+    if result.unused_pragmas:
+        print(f"-- {len(result.unused_pragmas)} unused pragma(s) — the "
+              "finding they suppressed is gone; delete them:")
+        for path, line in result.unused_pragmas:
+            print(f"   {path}:{line}")
+        status = 1
+    matched = len(result.findings) - len(new)
+    print(f"repro.analysis: {result.files_scanned} files, "
+          f"{len(result.findings)} finding(s) "
+          f"({len(new)} new, {len(result.suppressed)} suppressed, "
+          f"{matched} baselined)"
+          + (" — FAIL" if status else " — ok"))
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

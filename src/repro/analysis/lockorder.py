@@ -1,0 +1,347 @@
+"""Dynamic lock-order detector: the deadlock class AST rules cannot see.
+
+The static ``lock-blocking-call`` rule catches *blocking while holding a
+lock*; it cannot catch two threads taking the same two locks in opposite
+orders (connection ⇄ flow ⇄ transport is the codebase's most
+deadlock-prone layer). This module wraps ``threading.Lock``/``RLock``
+construction — **opt-in** via the ``REPRO_LOCK_ORDER=1`` env var, zero
+cost otherwise (nothing is patched, callers get stock locks) — and records
+the per-thread lock-*acquisition order* graph while the instrumented tier-1
+subset runs:
+
+* every lock constructed from code under the tracked prefixes (``repro/``
+  by default) is identified by its **construction site** (``file:line``),
+  so all instances of e.g. ``Connection._lock`` collapse into one node —
+  which is exactly what makes cycles meaningful across object instances;
+* when a thread acquires lock B while holding lock A, the edge ``A -> B``
+  is recorded (first witness thread kept for the report);
+* a cycle in that graph — including a self-edge: two *instances* of the
+  same site held across each other — is a deadlock waiting for the right
+  interleaving. :meth:`LockOrderMonitor.check` raises
+  :class:`LockOrderViolation` with every cycle and its witnesses.
+
+``Condition``/``Event`` built on tracked locks stay accurate for free:
+they acquire/release through the lock object itself, so a ``wait()``
+(which releases the lock while parked) correctly drops it from the held
+set. Locks constructed outside the tracked prefixes (stdlib internals,
+third-party) are returned unwrapped and never observed.
+"""
+from __future__ import annotations
+
+import _thread
+import os
+import sys
+import threading
+from typing import Iterable
+
+__all__ = ["LockOrderMonitor", "LockOrderViolation", "monitor_enabled_by_env",
+           "ENV_VAR"]
+
+ENV_VAR = "REPRO_LOCK_ORDER"
+
+#: path fragments a construction frame must contain to be tracked
+_DEFAULT_PREFIXES = ("repro",)
+
+#: frames to walk up looking for a tracked construction site (skips
+#: dataclasses' generated ``__init__`` and other stdlib trampolines)
+_MAX_FRAME_WALK = 12
+
+
+class LockOrderViolation(RuntimeError):
+    """Raised by :meth:`LockOrderMonitor.check` when the recorded
+    acquisition graph contains a cycle."""
+
+
+class _TrackedLock:
+    """Proxy over a stock lock that reports acquire/release to the monitor.
+    Implements the subset of the lock protocol the codebase (and
+    ``threading.Condition``) uses."""
+
+    __slots__ = ("_inner", "_site", "_mon")
+
+    def __init__(self, inner, site: str, mon: "LockOrderMonitor") -> None:
+        self._inner = inner
+        self._site = site
+        self._mon = mon
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        ok = self._inner.acquire(blocking, timeout)
+        if ok:
+            self._mon._note_acquire(self)
+        return ok
+
+    def release(self) -> None:
+        self._mon._note_release(self)
+        self._inner.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:         # pragma: no cover - debugging aid
+        return f"<TrackedLock {self._site} {self._inner!r}>"
+
+
+class _TrackedRLock:
+    """Reentrant variant: only the 0→1 acquisition (and the 1→0 release)
+    touch the held-set, so recursion never self-edges. Exposes the
+    ``_release_save``/``_acquire_restore``/``_is_owned`` trio so a
+    ``Condition`` wrapping it keeps its recursion count across ``wait()``."""
+
+    __slots__ = ("_inner", "_site", "_mon", "_count")
+
+    def __init__(self, inner, site: str, mon: "LockOrderMonitor") -> None:
+        self._inner = inner
+        self._site = site
+        self._mon = mon
+        self._count = 0      # mutated only by the owning thread
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        ok = self._inner.acquire(blocking, timeout)
+        if ok:
+            self._count += 1
+            if self._count == 1:
+                self._mon._note_acquire(self)
+        return ok
+
+    def release(self) -> None:
+        if self._count == 1:
+            self._mon._note_release(self)
+        self._count -= 1
+        self._inner.release()
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    # -- Condition integration (full release across wait()) -------------------
+    def _release_save(self):
+        count = self._count
+        self._count = 0
+        self._mon._note_release(self)
+        return (self._inner._release_save(), count)
+
+    def _acquire_restore(self, state) -> None:
+        inner_state, count = state
+        self._inner._acquire_restore(inner_state)
+        self._count = count
+        self._mon._note_acquire(self)
+
+    def _is_owned(self) -> bool:
+        return self._inner._is_owned()
+
+    def __repr__(self) -> str:         # pragma: no cover - debugging aid
+        return f"<TrackedRLock {self._site} {self._inner!r}>"
+
+
+class LockOrderMonitor:
+    """Records the lock-acquisition-order graph; detects cycles.
+
+    Usage (what the conftest does under ``REPRO_LOCK_ORDER=1``)::
+
+        mon = LockOrderMonitor()
+        mon.install()
+        try:
+            ...  # run the workload
+        finally:
+            mon.uninstall()
+        mon.check()     # raises LockOrderViolation on any cycle
+    """
+
+    def __init__(self, prefixes: Iterable[str] = _DEFAULT_PREFIXES) -> None:
+        self.prefixes = tuple(prefixes)
+        # edge (site_a, site_b) -> witness thread name; the map lock is a RAW
+        # lock so the monitor never observes itself
+        self._edges: dict[tuple[str, str], str] = {}
+        self._edge_lock = _thread.allocate_lock()
+        self._tls = threading.local()
+        self._installed = False
+        self._orig_lock = None
+        self._orig_rlock = None
+        self.tracked_sites: set[str] = set()
+
+    # -- construction-site resolution -----------------------------------------
+    def _caller_site(self) -> str | None:
+        """First frame up the stack whose file lives under a tracked prefix
+        (skipping this module). None == construction outside our code."""
+        f = sys._getframe(2)
+        for _ in range(_MAX_FRAME_WALK):
+            if f is None:
+                return None
+            fn = f.f_code.co_filename
+            if fn != __file__ and any(p in fn for p in self.prefixes) \
+                    and "analysis" + os.sep + "lockorder" not in fn:
+                parts = fn.replace("\\", "/").split("/")
+                tail = "/".join(parts[-2:])
+                return f"{tail}:{f.f_lineno}"
+            f = f.f_back
+        return None
+
+    # -- factories (installed over threading.Lock / threading.RLock) ----------
+    def _make_lock(self):
+        site = self._caller_site()
+        inner = _thread.allocate_lock()
+        if site is None:
+            return inner
+        self.tracked_sites.add(site)
+        return _TrackedLock(inner, site, self)
+
+    def _make_rlock(self):
+        site = self._caller_site()
+        inner = _thread.RLock()
+        if site is None:
+            return inner
+        self.tracked_sites.add(site)
+        return _TrackedRLock(inner, site, self)
+
+    def install(self) -> "LockOrderMonitor":
+        if self._installed:
+            return self
+        self._orig_lock = threading.Lock
+        self._orig_rlock = threading.RLock
+        threading.Lock = self._make_lock          # type: ignore[assignment]
+        threading.RLock = self._make_rlock        # type: ignore[assignment]
+        self._installed = True
+        return self
+
+    def uninstall(self) -> None:
+        if not self._installed:
+            return
+        threading.Lock = self._orig_lock          # type: ignore[assignment]
+        threading.RLock = self._orig_rlock        # type: ignore[assignment]
+        self._installed = False
+
+    def __enter__(self) -> "LockOrderMonitor":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
+
+    # -- acquisition tracking --------------------------------------------------
+    def _held(self) -> list:
+        stack = getattr(self._tls, "stack", None)
+        if stack is None:
+            stack = self._tls.stack = []
+        return stack
+
+    def _note_acquire(self, lock) -> None:
+        stack = self._held()
+        site = lock._site
+        for held_site, held_lock in stack:
+            if held_lock is lock:
+                continue
+            edge = (held_site, site)
+            if edge not in self._edges:
+                with self._edge_lock:
+                    self._edges.setdefault(
+                        edge, threading.current_thread().name)
+        stack.append((site, lock))
+
+    def _note_release(self, lock) -> None:
+        stack = self._held()
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i][1] is lock:
+                del stack[i]
+                return
+
+    # -- analysis ---------------------------------------------------------------
+    def edges(self) -> dict[tuple[str, str], str]:
+        with self._edge_lock:
+            return dict(self._edges)
+
+    def cycles(self) -> list[list[str]]:
+        """Every elementary cycle's node set, as sorted site lists: the
+        strongly connected components of the edge graph with more than one
+        node, plus self-loops (same site held across another instance of
+        itself)."""
+        edges = self.edges()
+        graph: dict[str, set[str]] = {}
+        for (a, b) in edges:
+            graph.setdefault(a, set()).add(b)
+            graph.setdefault(b, set())
+        # Tarjan SCC, iterative (worker threads can nest deep graphs)
+        index: dict[str, int] = {}
+        low: dict[str, int] = {}
+        on_stack: set[str] = set()
+        stack: list[str] = []
+        counter = [0]
+        sccs: list[list[str]] = []
+
+        for start in graph:
+            if start in index:
+                continue
+            work = [(start, iter(graph[start]))]
+            index[start] = low[start] = counter[0]
+            counter[0] += 1
+            stack.append(start)
+            on_stack.add(start)
+            while work:
+                node, it = work[-1]
+                advanced = False
+                for nxt in it:
+                    if nxt not in index:
+                        index[nxt] = low[nxt] = counter[0]
+                        counter[0] += 1
+                        stack.append(nxt)
+                        on_stack.add(nxt)
+                        work.append((nxt, iter(graph[nxt])))
+                        advanced = True
+                        break
+                    if nxt in on_stack:
+                        low[node] = min(low[node], index[nxt])
+                if advanced:
+                    continue
+                work.pop()
+                if work:
+                    parent = work[-1][0]
+                    low[parent] = min(low[parent], low[node])
+                if low[node] == index[node]:
+                    comp = []
+                    while True:
+                        w = stack.pop()
+                        on_stack.discard(w)
+                        comp.append(w)
+                        if w == node:
+                            break
+                    if len(comp) > 1:
+                        sccs.append(sorted(comp))
+        loops = [[a] for (a, b) in edges if a == b]
+        return sorted(sccs + loops)
+
+    def report(self) -> str:
+        edges = self.edges()
+        cyc = self.cycles()
+        lines = [f"lock-order monitor: {len(self.tracked_sites)} lock "
+                 f"site(s), {len(edges)} ordering edge(s), "
+                 f"{len(cyc)} cycle(s)"]
+        for comp in cyc:
+            lines.append("  CYCLE through: " + " ; ".join(comp))
+            members = set(comp)
+            for (a, b), thread in sorted(edges.items()):
+                if a in members and b in members:
+                    lines.append(f"    {a} -> {b}   (first seen on "
+                                 f"thread {thread!r})")
+        return "\n".join(lines)
+
+    def check(self) -> None:
+        """Raise :class:`LockOrderViolation` if any held-across cycle was
+        recorded. Call after the workload, with the monitor uninstalled or
+        quiescent."""
+        if self.cycles():
+            raise LockOrderViolation(self.report())
+
+
+def monitor_enabled_by_env() -> LockOrderMonitor | None:
+    """The conftest hook: a fresh monitor iff ``REPRO_LOCK_ORDER`` is set
+    to a truthy value, else None (and nothing is ever patched)."""
+    val = os.environ.get(ENV_VAR, "").strip().lower()
+    if val in ("", "0", "false", "no", "off"):
+        return None
+    return LockOrderMonitor()

@@ -1,0 +1,360 @@
+"""The repo-specific invariant rules. Each one encodes a bug class this
+codebase actually shipped and fixed (the PR numbers refer to CHANGES.md
+postmortems; the ROADMAP "Invariants as lint rules" table is the index):
+
+* ``lock-blocking-call``   — PR 2 (`_wal_lock` held across a backpressure
+  wait) and PR 8 (`_call` held the client lock across a round trip): no
+  blocking call inside a ``with <lock>:`` body.
+* ``durability-rename``    — PR 5 torn-rename sweep: every rename/replace
+  of a freshly written file goes through ``logstore.atomic_write_bytes``
+  (fsync file, rename, fsync parent dir) or it can lose acked data on a
+  machine crash.
+* ``fault-site-registry``  — a ``fire("...")`` / ``arm("...")`` site name
+  must be declared in ``core/faults.py::SITES``; a typo'd site silently
+  never fires, and the test that armed it silently tests nothing.
+* ``naked-clock``          — PR 9 monkeypatch cleanup: a class that accepts
+  an injected ``clock=`` must route every time read through it; a direct
+  ``time.monotonic()``/``time.time()`` resurrects the untestable path.
+* ``stats-direct-mutation``— PR 7 stats races: ``ComponentStats`` counters
+  are mutated from several threads; writes must go through the locked
+  ``add()``/``set()`` helpers (``+=`` is three bytecodes and loses updates).
+
+Rules are syntactic and conservative by design: they key on the idioms this
+codebase actually uses (lock-ish attribute names, ``x.stats.<field>``
+chains). A deliberate exception takes a one-line pragma —
+``# lint: ok(<rule>) — <reason>`` — so it documents itself in place.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, Sequence
+
+from .engine import AnalysisConfig, Finding, ModuleContext, Rule
+
+__all__ = ["default_rules", "LockBlockingCallRule", "DurabilityRenameRule",
+           "FaultSiteRegistryRule", "NakedClockRule",
+           "StatsDirectMutationRule"]
+
+#: with-context names that count as "holding a lock". Matches the terminal
+#: attribute/name: ``self._lock``, ``node.pool_lock``, ``self._cv``,
+#: ``self._not_full`` (a Condition wraps its lock), ``self._send_locks[w]``.
+_LOCK_NAME_RE = re.compile(
+    r"(^|_)(lock|locks|rlock|mutex|cv|cond|condition|not_full|not_empty)$",
+    re.IGNORECASE)
+
+
+def _terminal_name(node: ast.expr) -> str | None:
+    """The rightmost identifier of a Name/Attribute/Subscript chain
+    (``self._send_locks[wid]`` -> ``_send_locks``)."""
+    if isinstance(node, ast.Subscript):
+        return _terminal_name(node.value)
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _dotted(node: ast.expr) -> str:
+    """Best-effort dotted rendering (``os.path.rename`` -> "os.path.rename";
+    non-name parts render as ``?``)."""
+    if isinstance(node, ast.Attribute):
+        return f"{_dotted(node.value)}.{node.attr}"
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Call):
+        return f"{_dotted(node.func)}()"
+    return "?"
+
+
+def _is_lockish(node: ast.expr) -> bool:
+    name = _terminal_name(node)
+    return bool(name and _LOCK_NAME_RE.search(name))
+
+
+class LockBlockingCallRule(Rule):
+    id = "lock-blocking-call"
+    doc = ("no socket recv/sendall, untimed Condition.wait()/.join(), "
+           "offer/offer_batch, time.sleep, or os.fsync inside a "
+           "`with <lock>:` body (PR 2 _wal_lock, PR 8 transport _call)")
+
+    #: attribute calls that block on a peer or another thread, flagged on
+    #: any receiver
+    _BLOCKING_ATTRS = frozenset({
+        "recv", "recv_into", "recvfrom", "sendall", "accept",
+        "offer", "offer_batch",
+    })
+    #: ``send`` blocks too but is too common a method name; only flag it on
+    #: receivers that look like sockets
+    _SOCKISH_RE = re.compile(r"(^|_)(sock|socket|conn)s?$", re.IGNORECASE)
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.With, ast.AsyncWith)):
+                continue
+            lock_names = [_dotted(item.context_expr)
+                          for item in node.items
+                          if _is_lockish(item.context_expr)]
+            if not lock_names:
+                continue
+            held = ", ".join(lock_names)
+            for call in self._calls_in_body(node.body):
+                msg = self._blocking_reason(call)
+                if msg:
+                    yield self.finding(
+                        ctx, call, f"{msg} while holding {held}")
+
+    def _calls_in_body(self, body: Sequence[ast.stmt]) -> Iterator[ast.Call]:
+        """Every Call in the with-body, skipping nested function/class
+        definitions (defining is not calling) but descending into nested
+        with/if/for/try blocks (the lock is still held there)."""
+        stack: list[ast.AST] = list(body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda, ast.ClassDef)):
+                continue
+            if isinstance(node, ast.Call):
+                yield node
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _blocking_reason(self, call: ast.Call) -> str | None:
+        func = call.func
+        dotted = _dotted(func)
+        if dotted in ("time.sleep", "sleep"):
+            return "time.sleep()"
+        if dotted in ("os.fsync", "fsync"):
+            return "os.fsync()"
+        if not isinstance(func, ast.Attribute):
+            return None
+        attr = func.attr
+        if attr in self._BLOCKING_ATTRS:
+            return f"blocking .{attr}()"
+        if attr == "send" and (
+                (n := _terminal_name(func.value)) and self._SOCKISH_RE.search(n)):
+            return "blocking socket .send()"
+        if attr == "wait" and not call.args and not call.keywords:
+            # cond.wait() with a timeout is a bounded stall the caller chose;
+            # without one it parks the thread until a notify that a crashed
+            # or fenced peer may never deliver
+            return "untimed .wait()"
+        if attr == "join" and not call.args and not call.keywords:
+            return "untimed .join()"
+        return None
+
+
+class DurabilityRenameRule(Rule):
+    id = "durability-rename"
+    doc = ("os.rename/os.replace/Path.rename outside "
+           "logstore.atomic_write_bytes — a bare write+rename tears on "
+           "machine crash (PR 5 fsync-before-rename sweep)")
+
+    #: the one blessed home of the fsync+rename+dirfsync idiom
+    _ALLOWED = ("logstore.py", "atomic_write_bytes")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        allowed_file = ctx.path.endswith(self._ALLOWED[0])
+        for func, call in self._walk_calls(ctx.tree):
+            dotted = _dotted(call.func)
+            is_rename = dotted in ("os.rename", "os.replace")
+            if not is_rename and isinstance(call.func, ast.Attribute) \
+                    and call.func.attr == "rename":
+                is_rename = True
+                dotted = f"{_dotted(call.func.value)}.rename"
+            if not is_rename:
+                continue
+            if allowed_file and func is not None \
+                    and func.name == self._ALLOWED[1]:
+                continue
+            yield self.finding(
+                ctx, call,
+                f"{dotted}() outside logstore.atomic_write_bytes — "
+                "fsync-before-rename is not enforced here")
+
+    def _walk_calls(self, tree: ast.Module
+                    ) -> Iterator[tuple[ast.FunctionDef | None, ast.Call]]:
+        """Yield (enclosing function, call) pairs."""
+        def visit(node: ast.AST, func: ast.FunctionDef | None
+                  ) -> Iterator[tuple[ast.FunctionDef | None, ast.Call]]:
+            for child in ast.iter_child_nodes(node):
+                f = child if isinstance(
+                    child, (ast.FunctionDef, ast.AsyncFunctionDef)) else func
+                if isinstance(child, ast.Call):
+                    yield func, child
+                yield from visit(child, f)
+        yield from visit(tree, None)
+
+
+class FaultSiteRegistryRule(Rule):
+    id = "fault-site-registry"
+    doc = ("every fire(\"...\")/arm(\"...\") string literal must be declared "
+           "in core/faults.py SITES (a typo'd site silently never fires)")
+
+    def __init__(self, config: AnalysisConfig) -> None:
+        self._registry_rel = config.fault_registry.replace("\\", "/")
+        self._sites, self._prefixes = self._load_registry(config)
+
+    @staticmethod
+    def _load_registry(config: AnalysisConfig
+                       ) -> tuple[frozenset[str], tuple[str, ...]]:
+        """Extract SITES from the registry module's AST (no import — the
+        analyzer must run on a checkout that may not even import cleanly)."""
+        path = config.root / config.fault_registry
+        sites: set[str] = set()
+        if path.is_file():
+            tree = ast.parse(path.read_text())
+            for node in ast.walk(tree):
+                if isinstance(node, ast.Assign):
+                    if not any(isinstance(t, ast.Name) and t.id == "SITES"
+                               for t in node.targets):
+                        continue
+                elif isinstance(node, ast.AnnAssign):
+                    if not (isinstance(node.target, ast.Name)
+                            and node.target.id == "SITES"):
+                        continue
+                else:
+                    continue
+                value = node.value
+                if isinstance(value, ast.Dict):
+                    # {site: one-line doc}: the keys are the registry
+                    for k in value.keys:
+                        if isinstance(k, ast.Constant) \
+                                and isinstance(k.value, str):
+                            sites.add(k.value)
+                elif value is not None:
+                    for sub in ast.walk(value):
+                        if isinstance(sub, ast.Constant) \
+                                and isinstance(sub.value, str):
+                            sites.add(sub.value)
+        exact = frozenset(s for s in sites if not s.endswith(".*"))
+        prefixes = tuple(s[:-1] for s in sites if s.endswith(".*"))
+        return exact, prefixes
+
+    def declared(self, site: str) -> bool:
+        return site in self._sites or site.startswith(self._prefixes)
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if ctx.path == self._registry_rel:
+            return      # the registry's own docstrings/keys are not calls
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = (node.func.attr if isinstance(node.func, ast.Attribute)
+                    else node.func.id if isinstance(node.func, ast.Name)
+                    else None)
+            if name not in ("fire", "arm"):
+                continue
+            site_arg: ast.expr | None = node.args[0] if node.args else None
+            for kw in node.keywords:
+                if kw.arg == "site":
+                    site_arg = kw.value
+            if not isinstance(site_arg, ast.Constant) \
+                    or not isinstance(site_arg.value, str):
+                continue          # dynamic site (f-string/var): runtime check
+            site = site_arg.value
+            if not self.declared(site):
+                yield self.finding(
+                    ctx, node,
+                    f"fault site {site!r} is not declared in "
+                    "core/faults.py SITES")
+
+
+class NakedClockRule(Rule):
+    id = "naked-clock"
+    doc = ("direct time.monotonic()/time.time() inside a class that accepts "
+           "clock= — route it through the injected clock (PR 9 cleanup)")
+
+    _CLOCK_CALLS = frozenset({"time.monotonic", "time.time",
+                              "monotonic"})
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for cls in ast.walk(ctx.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            if not self._accepts_clock(cls):
+                continue
+            for method in cls.body:
+                if not isinstance(method, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef)):
+                    continue
+                if method.name == "_now":
+                    # the designated clock-routing helper: its body is where
+                    # the injected-clock-or-real-clock dispatch lives
+                    continue
+                for node in ast.walk(method):
+                    if isinstance(node, ast.Call) \
+                            and _dotted(node.func) in self._CLOCK_CALLS:
+                        yield self.finding(
+                            ctx, node,
+                            f"{_dotted(node.func)}() in clock-injectable "
+                            f"class {cls.name} — use the injected clock")
+
+    @staticmethod
+    def _accepts_clock(cls: ast.ClassDef) -> bool:
+        for method in cls.body:
+            if isinstance(method, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and method.name == "__init__":
+                args = method.args
+                names = [a.arg for a in args.args + args.kwonlyargs]
+                return "clock" in names
+        return False
+
+
+class StatsDirectMutationRule(Rule):
+    id = "stats-direct-mutation"
+    doc = ("assignment to a ComponentStats field bypassing the locked "
+           "add()/set() helpers loses concurrent updates (PR 7 sweep)")
+
+    def __init__(self, config: AnalysisConfig) -> None:
+        self._fields = self._load_fields(config)
+        self._stats_rel = config.stats_module.replace("\\", "/")
+
+    @staticmethod
+    def _load_fields(config: AnalysisConfig) -> frozenset[str]:
+        path = config.root / config.stats_module
+        fields: set[str] = set()
+        if path.is_file():
+            tree = ast.parse(path.read_text())
+            for node in ast.walk(tree):
+                if isinstance(node, ast.ClassDef) \
+                        and node.name == "ComponentStats":
+                    for stmt in node.body:
+                        if isinstance(stmt, ast.AnnAssign) \
+                                and isinstance(stmt.target, ast.Name) \
+                                and not stmt.target.id.startswith("_"):
+                            fields.add(stmt.target.id)
+        return frozenset(fields)
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if ctx.path == self._stats_rel or not self._fields:
+            # the helpers themselves (and the dataclass defaults) live here
+            return
+        for node in ast.walk(ctx.tree):
+            targets: list[ast.expr] = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            for t in targets:
+                if not isinstance(t, ast.Attribute) \
+                        or t.attr not in self._fields:
+                    continue
+                owner = t.value
+                if isinstance(owner, ast.Attribute) and owner.attr == "stats" \
+                        or isinstance(owner, ast.Name) and owner.id == "stats":
+                    aug = "+= " if isinstance(node, ast.AugAssign) else "= "
+                    yield self.finding(
+                        ctx, node,
+                        f"direct write {_dotted(t)} {aug.strip()}... — use "
+                        "the locked ComponentStats.add()/set() helpers")
+
+
+def default_rules(config: AnalysisConfig) -> list[Rule]:
+    return [
+        LockBlockingCallRule(),
+        DurabilityRenameRule(),
+        FaultSiteRegistryRule(config),
+        NakedClockRule(),
+        StatsDirectMutationRule(config),
+    ]

@@ -59,7 +59,8 @@ class Connection:
                  size_threshold: int = DEFAULT_SIZE_THRESHOLD,
                  prioritizer: Optional[Callable[[FlowFile], float]] = None,
                  max_retries: int = 0,
-                 retry_penalty_sec: float = 0.01) -> None:
+                 retry_penalty_sec: float = 0.01,
+                 clock: Optional[Callable[[], float]] = None) -> None:
         if object_threshold <= 0 or size_threshold <= 0:
             raise ValueError("backpressure thresholds must be positive")
         if max_retries < 0 or retry_penalty_sec < 0:
@@ -93,11 +94,15 @@ class Connection:
         # overload scenario's memory check must allow for
         self.requeued = 0
         self.requeue_overshoot = 0
+        #: monotonic time source for offer/poll deadlines; injectable so
+        #: tests can drive backpressure timeouts deterministically
+        self._clock: Callable[[], float] = \
+            clock if clock is not None else time.monotonic
         # queue-dwell telemetry (attach_dwell_histogram); None == off, and
         # the hot path pays nothing beyond one None check per batch
         self._dwell_hist = None
         self._dwell_log: deque[list] | None = None
-        self._dwell_clock: Callable[[], float] = time.monotonic
+        self._dwell_clock: Callable[[], float] = self._clock
 
     # -- queue-dwell telemetry ------------------------------------------------
     def attach_dwell_histogram(self, hist, clock: Callable[[], float]
@@ -203,7 +208,7 @@ class Connection:
         """Enqueue. With ``block`` the caller (upstream processor) is stalled
         while backpressure is engaged — this is the NiFi 'source no longer
         scheduled' behaviour. Non-blocking offer returns False when full."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else self._clock() + timeout
         with self._not_full:
             engaged = False
             while self._full_locked():
@@ -214,7 +219,7 @@ class Connection:
                     return False
                 remaining = None
                 if deadline is not None:
-                    remaining = deadline - time.monotonic()
+                    remaining = deadline - self._clock()
                     if remaining <= 0:
                         raise BackpressureTimeout(
                             f"connection {self.name!r} full "
@@ -233,7 +238,7 @@ class Connection:
         no ``timeout``). Unlike ``offer`` this never raises on timeout — the
         caller retries the unaccepted suffix, so partial progress survives
         shutdown checks. Backpressure engages per stall, not per record."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else self._clock() + timeout
         accepted = 0
         logged = 0          # dwell-log high-water mark; flushed before any
                             # point where a consumer could observe the pushes
@@ -258,7 +263,7 @@ class Connection:
                         self._not_empty.notify_all()
                     remaining = None
                     if deadline is not None:
-                        remaining = deadline - time.monotonic()
+                        remaining = deadline - self._clock()
                         if remaining <= 0:
                             if accepted:
                                 # records pushed since the last stall were
@@ -293,14 +298,14 @@ class Connection:
     # -- consumer side -------------------------------------------------------
     def poll(self, block: bool = True, timeout: float | None = None
              ) -> FlowFile | None:
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else self._clock() + timeout
         with self._not_empty:
             while not self._count_locked():
                 if not block:
                     return None
                 remaining = None
                 if deadline is not None:
-                    remaining = deadline - time.monotonic()
+                    remaining = deadline - self._clock()
                     if remaining <= 0:
                         return None
                 self._not_empty.wait(remaining)
@@ -386,10 +391,11 @@ class DurableConnection(Connection):
                  object_threshold: int = DEFAULT_OBJECT_THRESHOLD,
                  size_threshold: int = DEFAULT_SIZE_THRESHOLD,
                  max_retries: int = 0, retry_penalty_sec: float = 0.01,
-                 wal_fsync: bool = False) -> None:
+                 wal_fsync: bool = False,
+                 clock: Optional[Callable[[], float]] = None) -> None:
         super().__init__(name, object_threshold, size_threshold,
                          prioritizer=None, max_retries=max_retries,
-                         retry_penalty_sec=retry_penalty_sec)
+                         retry_penalty_sec=retry_penalty_sec, clock=clock)
         self.log = log
         self.topic = topic or "__wal__." + name.replace("/", "_")
         self.ack_topic = self.topic + ".__acks__"
@@ -462,7 +468,7 @@ class DurableConnection(Connection):
         # order == queue order), but wait for backpressure space with the
         # lock RELEASED — holding it across a stall would convoy every other
         # producer (and the consumer's requeue path) behind one full queue.
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else self._clock() + timeout
         n = len(ffs)
         accepted = 0
         engaged = False
@@ -491,7 +497,7 @@ class DurableConnection(Connection):
                 break
             remaining = None
             if deadline is not None:
-                remaining = deadline - time.monotonic()
+                remaining = deadline - self._clock()
                 if remaining <= 0:
                     break
             with self._not_full:
@@ -553,17 +559,20 @@ class RateThrottle:
     """Token-bucket rate limiter — the paper's 'rate throttling' backpressure
     example (§II.E). Thread-safe; ``acquire`` blocks until a permit exists."""
 
-    def __init__(self, rate_per_sec: float, burst: int | None = None) -> None:
+    def __init__(self, rate_per_sec: float, burst: int | None = None,
+                 clock: Optional[Callable[[], float]] = None) -> None:
         if rate_per_sec <= 0:
             raise ValueError("rate must be positive")
         self.rate = float(rate_per_sec)
         self.capacity = float(burst if burst is not None else max(1, int(rate_per_sec)))
         self._tokens = self.capacity
-        self._last = time.monotonic()
+        self._clock: Callable[[], float] = \
+            clock if clock is not None else time.monotonic
+        self._last = self._clock()
         self._lock = threading.Lock()
 
     def _refill_locked(self) -> None:
-        now = time.monotonic()
+        now = self._clock()
         self._tokens = min(self.capacity,
                            self._tokens + (now - self._last) * self.rate)
         self._last = now

@@ -33,7 +33,7 @@ import json
 import threading
 import time
 from pathlib import Path
-from typing import Iterable
+from typing import Callable, Iterable
 
 from . import faults
 from .log import route_partition
@@ -62,9 +62,13 @@ class Producer:
                  max_batch_records: int = 512,
                  max_batch_bytes: int = 1 << 20,
                  linger_sec: float = 0.05,
-                 producer_id: str | None = None) -> None:
+                 producer_id: str | None = None,
+                 clock: Callable[[], float] | None = None) -> None:
         if max_batch_records <= 0 or max_batch_bytes <= 0:
             raise ValueError("batch bounds must be positive")
+        #: monotonic source for the linger bound (injectable)
+        self._clock: Callable[[], float] = \
+            clock if clock is not None else time.monotonic
         self.log = log
         self.topic = topic
         self.max_batch_records = max_batch_records
@@ -97,7 +101,7 @@ class Producer:
         callers (e.g. a whole processor trigger)."""
         with self._lock:
             if not self._buf:
-                self._oldest = time.monotonic()
+                self._oldest = self._clock()
             n = 0
             for key, value, partition in items:
                 self._buf.append((key, value))
@@ -107,7 +111,7 @@ class Producer:
             self.sent += n
             if (len(self._buf) >= self.max_batch_records
                     or self._buf_bytes >= self.max_batch_bytes
-                    or time.monotonic() - self._oldest >= self.linger_sec):
+                    or self._clock() - self._oldest >= self.linger_sec):
                 self._drain_locked()
 
     def _drain_locked(self) -> None:

@@ -239,7 +239,8 @@ class IngestionFabric:
                  heartbeat_sec: float = 0.2,
                  lease_timeout_sec: float = 2.0,
                  group_timeout_sec: float = 300.0,
-                 spawn_timeout_sec: float = 60.0) -> None:
+                 spawn_timeout_sec: float = 60.0,
+                 clock: Callable[[], float] | None = None) -> None:
         if workers < 1:
             raise ValueError("workers must be >= 1")
         for spec in shards:
@@ -255,6 +256,10 @@ class IngestionFabric:
         self.heartbeat_sec = heartbeat_sec
         self.group_timeout_sec = group_timeout_sec
         self.spawn_timeout_sec = spawn_timeout_sec
+        #: monotonic source for spawn deadlines, lease heartbeats, and the
+        #: failure detector (injectable; LeaseTable stays pure over it)
+        self._clock: Callable[[], float] = \
+            clock if clock is not None else time.monotonic
         self.fences = FenceTable()
         self.leases = LeaseTable(lease_timeout_sec)
         self.data_server = LogServer(store, fences=self.fences)
@@ -321,10 +326,10 @@ class IngestionFabric:
                 name=f"{self.name}-{wid}", daemon=True)
             p.start()
             self._procs[wid] = p
-        deadline = time.monotonic() + self.spawn_timeout_sec
+        deadline = self._clock() + self.spawn_timeout_sec
         for _ in range(self.n_workers):
             if not self._hello.acquire(timeout=max(
-                    0.0, deadline - time.monotonic())):
+                    0.0, deadline - self._clock())):
                 self.shutdown(force=True)
                 raise FabricError(
                     f"workers failed to connect within "
@@ -487,7 +492,7 @@ class IngestionFabric:
             conn.close()
             return
         wid = msg["worker"]
-        now = time.monotonic()
+        now = self._clock()
         with self._lock:
             self._conns[wid] = conn
             self._send_locks[wid] = threading.Lock()
@@ -502,7 +507,7 @@ class IngestionFabric:
                 return          # EOF: the monitor declares death by lease
             kind = msg.get("t")
             if kind == "hb":
-                self.leases.heartbeat(wid, time.monotonic())
+                self.leases.heartbeat(wid, self._clock())
                 self._ingest_watermarks(msg)
                 tel = msg.get("telemetry")
                 if tel is not None:
@@ -583,7 +588,7 @@ class IngestionFabric:
         while not self._stop.is_set():
             time.sleep(interval)
             self.flight.record(self.status())
-            for wid in self.leases.expired_workers(time.monotonic()):
+            for wid in self.leases.expired_workers(self._clock()):
                 try:
                     moved = self.leases.declare_dead(wid)
                 except FabricError as e:

@@ -44,6 +44,13 @@ Built-in sites (fired by the library itself):
                                partially-acked client pipeline
                                deterministically)
 
+Every built-in site above is *declared* in :data:`SITES`; ``arm()`` refuses
+an undeclared site (:class:`UndeclaredFaultSite`), so a typo'd site name in
+a test can never silently never-fire. New runtime fire-sites must be added
+to the registry (one-line doc each) — the ``fault-site-registry`` lint rule
+(``python -m repro.analysis``) checks the string literals at ``fire(...)``
+call sites against the same registry statically.
+
 Schedules: ``arm(site, action, nth=N)`` fires on the Nth call only;
 ``arm(site, action, nth=N, every=M)`` fires on call N, N+M, N+2M, ...
 
@@ -66,8 +73,53 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Mapping
 
-__all__ = ["FaultInjector", "InjectedFault", "INJECTOR", "compose", "fire",
+__all__ = ["FaultInjector", "InjectedFault", "INJECTOR", "SITES",
+           "UndeclaredFaultSite", "compose", "declared", "fire",
            "raise_on", "raise_every_records"]
+
+
+#: Central registry of every legal fault site. A trailing ``.*`` declares a
+#: dynamic family (the concrete name is only known at runtime). ``arm()``
+#: validates against this at arming time; the ``fault-site-registry`` lint
+#: rule validates ``fire("...")`` string literals against it statically.
+SITES: dict[str, str] = {
+    "proc.*":
+        "once per processor trigger (site is 'proc.<processor name>')",
+    "log.segment.append_batch":
+        "per contiguous chunk write, before the write(2)",
+    "delivery.producer.drain":
+        "per Producer drain into the log",
+    "delivery.consumer.poll":
+        "per Consumer.poll",
+    "replica.leader":
+        "before each leader-store append of a ReplicatedLog partition",
+    "replica.fence":
+        "after a leader append, before the epoch re-validation (zombie window)",
+    "replica.ship":
+        "before each follower range-ship",
+    "acquire.connect":
+        "before each connector session open in the acquisition runtime",
+    "acquire.poll":
+        "before each connector poll",
+    "transport.server.recv":
+        "LogServer: request decoded, before dispatch (lost-request window)",
+    "transport.server.respond":
+        "LogServer: dispatched, before the response frame (applied-but-"
+        "unacked ambiguous window)",
+}
+
+_SITE_PREFIXES = tuple(s[:-1] for s in SITES if s.endswith(".*"))
+
+
+def declared(site: str) -> bool:
+    """True iff ``site`` is in the registry (exact, or under a declared
+    dynamic family like ``proc.*``)."""
+    return site in SITES or site.startswith(_SITE_PREFIXES)
+
+
+class UndeclaredFaultSite(ValueError):
+    """Raised by ``arm()`` for a site name missing from :data:`SITES` — a
+    typo'd site would otherwise arm successfully and simply never fire."""
 
 
 class InjectedFault(RuntimeError):
@@ -114,6 +166,11 @@ class FaultInjector:
             raise ValueError(f"unknown fault action {action!r}")
         if nth < 1 or (every is not None and every < 1):
             raise ValueError("nth/every must be >= 1")
+        if not declared(site):
+            raise UndeclaredFaultSite(
+                f"fault site {site!r} is not declared in faults.SITES — "
+                "a typo here would arm a site that never fires; declare "
+                "new sites in the registry (one-line doc each)")
         self._sites[site] = _Arming(action=action, nth=nth, every=every,
                                     delay_sec=delay_sec, exit_code=exit_code)
 

@@ -84,8 +84,13 @@ class FlowGraph:
     def __init__(self, name: str = "flow",
                  provenance: ProvenanceRepository | None = None,
                  telemetry: bool = True,
-                 trace_sample_rate: float = 0.0) -> None:
+                 trace_sample_rate: float = 0.0,
+                 clock: Callable[[], float] | None = None) -> None:
         self.name = name
+        #: monotonic source shared with the graph's workers (join deadlines,
+        #: source linger, retry penalties); injectable for deterministic tests
+        self._clock: Callable[[], float] = \
+            clock if clock is not None else time.monotonic
         self.provenance = provenance or ProvenanceRepository()
         self.nodes: dict[str, FlowNode] = {}
         self.connections: list[Connection] = []
@@ -362,11 +367,11 @@ class FlowGraph:
         self.join(timeout=10.0)
 
     def join(self, timeout: float | None = None) -> None:
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else self._clock() + timeout
         for w in self._workers:
             remaining = None
             if deadline is not None:
-                remaining = max(0.0, deadline - time.monotonic())
+                remaining = max(0.0, deadline - self._clock())
             w.join(remaining)
         if self._errors:
             comp, err = self._errors[0]

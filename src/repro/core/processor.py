@@ -313,12 +313,12 @@ class _Worker(threading.Thread):
                                   node.source_emitted), None)
         pull_was_slow = True     # deliver the first record immediately
         while True:
-            t_pull = time.monotonic()
+            t_pull = self.graph._clock()
             try:
                 ff = next(it)
             except StopIteration:
                 break
-            now = time.monotonic()
+            now = self.graph._clock()
             # a live source (yields separated by real time) degrades to
             # per-record delivery; only back-to-back yields batch up. The
             # residual worst case is a fast burst followed by a long stall:
@@ -356,7 +356,7 @@ class _Worker(threading.Thread):
         defer_acks = durable and proc.buffers_across_triggers
         deferred = 0
         idle_every = proc.idle_trigger_sec
-        last_trigger = time.monotonic()
+        last_trigger = self.graph._clock()
         # -- elastic pool governor state (primary worker only) ---------------
         for _ in range(max(0, node.min_workers - 1)):
             self._spawn_helper(governor=False)
@@ -401,16 +401,16 @@ class _Worker(threading.Thread):
                             and node.pool_size == 1:
                         break
                     if (idle_every is not None
-                            and time.monotonic() - last_trigger >= idle_every):
+                            and self.graph._clock() - last_trigger >= idle_every):
                         # opt-in empty trigger: lets state-driven processors
                         # (watermark window closes) fire while the queue is
                         # quiet. Nothing to ack — the batch is empty.
-                        last_trigger = time.monotonic()
+                        last_trigger = self.graph._clock()
                         self._process_batch(conn, [], site)
                     continue
                 if durable and conn.max_retries > 0:
                     self._wait_for_penalties(batch)
-                last_trigger = time.monotonic()
+                last_trigger = self.graph._clock()
                 proc.stats.add(in_records=len(batch),
                                in_bytes=sum(ff.size for ff in batch))
                 settled = self._process_batch(conn, batch, site)
@@ -523,7 +523,7 @@ class _Worker(threading.Thread):
         delayed copies cannot live outside the journal), carrying a
         ``retry.not.before`` stamp instead. Honor it at delivery time —
         head-of-line, like NiFi's penalized FlowFiles."""
-        now = time.monotonic()
+        now = self.graph._clock()
         wait = 0.0
         for ff in batch:
             nb = ff.attributes.get(ATTR_RETRY_NOT_BEFORE)
@@ -538,7 +538,7 @@ class _Worker(threading.Thread):
         queue (on a DurableConnection they were already re-journaled and
         re-queued at failure time, so this list stays empty there)."""
         node = self.node
-        now = time.monotonic()
+        now = self.graph._clock()
         # the filter-and-swap below races with pool helpers appending via
         # _retry_or_dead_letter — an unguarded swap would drop their records
         with node.retry_lock:
@@ -632,7 +632,7 @@ class _Worker(threading.Thread):
         rc = int(ff.attributes.get(ATTR_RETRY_COUNT, "0"))
         if rc >= conn.max_retries:
             return self._dead_letter([ff], err)
-        due = time.monotonic() + conn.retry_penalty_sec * (2 ** rc)
+        due = self.graph._clock() + conn.retry_penalty_sec * (2 ** rc)
         penalized = ff.with_attributes(**{
             ATTR_RETRY_COUNT: str(rc + 1),
             ATTR_LAST_ERROR: type(err).__name__,

@@ -204,8 +204,12 @@ class MergeContent(Processor):
 
     def __init__(self, name: str = "MergeContent", max_records: int = 64,
                  max_bytes: int = 1 << 20, max_latency_sec: float = 1.0,
-                 separator: bytes = b"\n") -> None:
+                 separator: bytes = b"\n",
+                 clock: Callable[[], float] | None = None) -> None:
         super().__init__(name)
+        #: monotonic source for the latency-bounded flush (injectable)
+        self._clock: Callable[[], float] = \
+            clock if clock is not None else time.monotonic
         self.max_records = max_records
         self.max_bytes = max_bytes
         self.max_latency_sec = max_latency_sec
@@ -226,13 +230,13 @@ class MergeContent(Processor):
     def on_trigger(self, batch: list[FlowFile]):
         for ff in batch:
             if not self._buf:
-                self._oldest = time.monotonic()
+                self._oldest = self._clock()
             self._buf.append(ff)
             self._buf_bytes += ff.size
             if (len(self._buf) >= self.max_records
                     or self._buf_bytes >= self.max_bytes):
                 yield REL_SUCCESS, self._bundle()
-        if self._buf and time.monotonic() - self._oldest > self.max_latency_sec:
+        if self._buf and self._clock() - self._oldest > self.max_latency_sec:
             yield REL_SUCCESS, self._bundle()
 
     def final_flush(self):

@@ -103,7 +103,7 @@ import threading
 import time
 from collections import deque
 from pathlib import Path
-from typing import Sequence
+from typing import Callable, Sequence
 
 from . import faults
 from .log import PartitionedLog, route_partition
@@ -643,8 +643,12 @@ class RemoteLogStore(LogStore):
                  coalesce_linger_sec: float = 0.0,
                  readahead_records: int = 1024,
                  readahead_max_bytes: int = 4 << 20,
-                 end_cache_ttl_sec: float = 0.05) -> None:
+                 end_cache_ttl_sec: float = 0.05,
+                 clock: Callable[[], float] | None = None) -> None:
         self.address = (address[0], int(address[1]))
+        #: monotonic source for op deadlines and cache TTLs (injectable)
+        self._clock: Callable[[], float] = \
+            clock if clock is not None else time.monotonic
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.connect_timeout = connect_timeout
@@ -718,13 +722,13 @@ class RemoteLogStore(LogStore):
         """Send under the lock on the short-poll socket: partial sends loop,
         a stall past ``op_timeout`` is a dead peer."""
         sock = self._sock
-        deadline = time.monotonic() + self.op_timeout
+        deadline = self._clock() + self.op_timeout
         view = memoryview(data)
         while view:
             try:
                 n = sock.send(view)
             except socket.timeout as e:
-                if time.monotonic() >= deadline:
+                if self._clock() >= deadline:
                     raise TransportError(
                         f"send stalled for {self.op_timeout}s") from e
                 continue
@@ -804,10 +808,10 @@ class RemoteLogStore(LogStore):
         t0 = time.perf_counter()
         with self._cv:
             # admission: bounded in-flight window
-            deadline = time.monotonic() + self.op_timeout
+            deadline = self._clock() + self.op_timeout
             while len(self._pending) >= self.max_inflight:
                 if not self._cv.wait(
-                        timeout=max(0.0, deadline - time.monotonic())) \
+                        timeout=max(0.0, deadline - self._clock())) \
                         and len(self._pending) >= self.max_inflight:
                     raise TransportError(
                         f"in-flight window ({self.max_inflight}) stalled "
@@ -936,7 +940,7 @@ class RemoteLogStore(LogStore):
                 f"append acked {n} records, sent {len(records)}")
         placed = [_PARTOFF.unpack(r.take(12)) for _ in range(n)]
         ends = [_PARTOFF.unpack(r.take(12)) for _ in range(r.u32())]
-        now = time.monotonic()
+        now = self._clock()
         with self._cache_lock:
             self._stats["append_rpcs"] += 1
             self._stats["appended_records"] += n
@@ -1051,7 +1055,7 @@ class RemoteLogStore(LogStore):
             off, klen, vlen = _OFFREC.unpack(r.take(16))
             out.append(LogRecord(topic, partition, off,
                                  r.take(klen), r.take(vlen)))
-        now = time.monotonic()
+        now = self._clock()
         with self._cache_lock:
             self._stats["read_rpcs"] += 1
             self._stats["read_records"] += len(out)
@@ -1075,7 +1079,7 @@ class RemoteLogStore(LogStore):
 
     def end_offset(self, topic: str, partition: int) -> int:
         if self.end_cache_ttl_sec > 0:
-            now = time.monotonic()
+            now = self._clock()
             with self._cache_lock:
                 cur = self._ends.get((topic, partition))
                 if cur is not None and now - cur[1] <= self.end_cache_ttl_sec:
@@ -1085,7 +1089,7 @@ class RemoteLogStore(LogStore):
             OP_END_OFFSET, _pack_str(topic) + _U32.pack(partition)))[0]
         with self._cache_lock:
             self._stats["end_offset_rpcs"] += 1
-            self._note_end_locked(topic, partition, end, time.monotonic())
+            self._note_end_locked(topic, partition, end, self._clock())
         return end
 
     # -- retention --

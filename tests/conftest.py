@@ -16,6 +16,30 @@ if _SRC not in sys.path:
 
 import pytest  # noqa: E402
 
+# -- opt-in lock-order detection (REPRO_LOCK_ORDER=1) ------------------------
+# Installed at conftest-import time — the earliest hook pytest gives us — so
+# locks constructed while test modules import are tracked too. When the env
+# var is unset this is a no-op: nothing is patched, stock locks everywhere.
+from repro.analysis.lockorder import monitor_enabled_by_env  # noqa: E402
+
+_LOCK_MONITOR = monitor_enabled_by_env()
+if _LOCK_MONITOR is not None:
+    _LOCK_MONITOR.install()
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """Under REPRO_LOCK_ORDER=1: fail the whole run (exit 3) if any
+    held-across cycle was recorded in the lock-acquisition graph, even if
+    every test passed — an inversion is a deadlock waiting for the right
+    interleaving, not a flake."""
+    if _LOCK_MONITOR is None:
+        return
+    _LOCK_MONITOR.uninstall()
+    report = _LOCK_MONITOR.report()
+    print("\n" + report)
+    if _LOCK_MONITOR.cycles():
+        pytest.exit("lock-order cycles detected\n" + report, returncode=3)
+
 
 @pytest.fixture()
 def tmp_log(tmp_path):

@@ -1,0 +1,494 @@
+"""Tests for the invariant analysis pass (``repro.analysis``): every rule
+must fire on a violating fixture and stay quiet on a clean one; the pragma /
+baseline machinery must catch drift in both directions; and the dynamic
+lock-order detector must flag a seeded inversion while the instrumented
+tier-1 subset (``-m lockorder`` under ``REPRO_LOCK_ORDER=1``) runs clean.
+
+The fixtures are tiny synthetic modules written into ``tmp_path`` — the
+rules are syntactic, so a handful of lines per bug class is enough to pin
+the exact idiom each rule keys on.
+"""
+import json
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis.engine import (AnalysisConfig, Engine, Finding,
+                                   load_config)
+from repro.analysis.rules import default_rules
+from repro.analysis.lockorder import (ENV_VAR, LockOrderMonitor,
+                                      LockOrderViolation,
+                                      monitor_enabled_by_env)
+
+
+# ---------------------------------------------------------------------------
+# harness: run the engine over one synthetic module
+# ---------------------------------------------------------------------------
+_FAKE_REGISTRY = '''
+SITES: dict[str, str] = {
+    "proc.*": "per processor trigger",
+    "log.append": "per chunk write",
+}
+'''
+
+_FAKE_STATS = '''
+from dataclasses import dataclass
+
+@dataclass
+class ComponentStats:
+    name: str
+    in_records: int = 0
+    out_records: int = 0
+'''
+
+
+def _scan(tmp_path, source, filename="mod.py"):
+    """Write one module plus the fake registry/stats modules; return the
+    rule ids of the (unsuppressed) findings and the full ScanResult."""
+    (tmp_path / "faults.py").write_text(_FAKE_REGISTRY)
+    (tmp_path / "metrics.py").write_text(_FAKE_STATS)
+    target = tmp_path / filename
+    target.parent.mkdir(parents=True, exist_ok=True)
+    target.write_text(textwrap.dedent(source))
+    config = AnalysisConfig(root=tmp_path, paths=[filename],
+                            fault_registry="faults.py",
+                            stats_module="metrics.py")
+    result = Engine(config).scan()
+    return [f.rule for f in result.findings], result
+
+
+# ---------------------------------------------------------------------------
+# lock-blocking-call
+# ---------------------------------------------------------------------------
+def test_lock_blocking_flags_sleep_and_recv(tmp_path):
+    rules, result = _scan(tmp_path, """
+        import time
+
+        class C:
+            def bad(self):
+                with self._lock:
+                    time.sleep(0.1)
+                    self._sock.recv(4096)
+                    self._sock.sendall(b"x")
+                    self.out.offer_batch(batch)
+    """)
+    assert rules == ["lock-blocking-call"] * 4
+    assert "while holding self._lock" in result.findings[0].message
+
+
+def test_lock_blocking_flags_untimed_wait_join_and_fsync(tmp_path):
+    rules, _ = _scan(tmp_path, """
+        import os
+
+        class C:
+            def bad(self):
+                with self._cv:
+                    self._cv.wait()
+                with self._wal_lock:
+                    os.fsync(fd)
+                with node.pool_lock:
+                    helper.join()
+    """)
+    assert rules == ["lock-blocking-call"] * 3
+
+
+def test_lock_blocking_clean_idioms_pass(tmp_path):
+    rules, _ = _scan(tmp_path, """
+        import os, time
+
+        class C:
+            def good(self):
+                with self._lock:
+                    x = self._count          # bookkeeping only
+                time.sleep(0.1)              # blocking OUTSIDE the lock
+                with self._cv:
+                    self._cv.wait(0.05)      # bounded wait is a choice
+                with self._lock:
+                    parts = ", ".join(xs)    # str.join takes args: not Thread.join
+                with self._lock:
+                    def cb():                # defining is not calling
+                        time.sleep(1)
+                with self.buffer:            # not a lock-ish name
+                    time.sleep(0.01)
+    """)
+    assert rules == []
+
+
+# ---------------------------------------------------------------------------
+# durability-rename
+# ---------------------------------------------------------------------------
+def test_durability_rename_flags_bare_replace(tmp_path):
+    rules, _ = _scan(tmp_path, """
+        import os
+        def persist(tmp, final):
+            os.replace(tmp, final)
+        def persist2(tmp, final):
+            os.rename(tmp, final)
+        def persist3(tmp, final):
+            tmp.rename(final)
+    """)
+    assert rules == ["durability-rename"] * 3
+
+
+def test_durability_rename_allows_atomic_write_bytes(tmp_path):
+    rules, _ = _scan(tmp_path, """
+        import os
+        def atomic_write_bytes(path, data):
+            os.replace(str(path) + ".tmp", path)
+    """, filename="logstore.py")
+    assert rules == []
+
+
+# ---------------------------------------------------------------------------
+# fault-site-registry
+# ---------------------------------------------------------------------------
+def test_fault_site_registry_flags_undeclared(tmp_path):
+    rules, result = _scan(tmp_path, """
+        from faults import fire
+        def f(injector):
+            fire("log.apend")               # typo'd: silently never fires
+            injector.arm("nope.site")
+    """)
+    assert rules == ["fault-site-registry"] * 2
+    assert "log.apend" in result.findings[0].message
+
+
+def test_fault_site_registry_accepts_declared_and_wildcards(tmp_path):
+    rules, _ = _scan(tmp_path, """
+        from faults import fire
+        def f(injector, name):
+            fire("log.append")
+            fire("proc.enrich")             # matches the proc.* family
+            injector.arm(site="log.append")
+            fire("proc." + name)            # dynamic: runtime check's job
+    """)
+    assert rules == []
+
+
+# ---------------------------------------------------------------------------
+# naked-clock
+# ---------------------------------------------------------------------------
+def test_naked_clock_flags_direct_reads_in_injectable_class(tmp_path):
+    rules, result = _scan(tmp_path, """
+        import time
+
+        class Injectable:
+            def __init__(self, clock=None):
+                self._clock = clock or time.monotonic
+            def deadline(self, timeout):
+                return time.monotonic() + timeout     # resurrects real time
+            def stamp(self):
+                return time.time()
+    """)
+    assert rules == ["naked-clock"] * 2
+    assert "Injectable" in result.findings[0].message
+
+
+def test_naked_clock_ignores_uninjectable_class_and_now_helper(tmp_path):
+    rules, _ = _scan(tmp_path, """
+        import time
+
+        class NoClockParam:
+            def __init__(self, name):
+                self.name = name
+            def deadline(self, timeout):
+                return time.monotonic() + timeout     # class opted out
+
+        class Injectable:
+            def __init__(self, clock=None):
+                self._clock = clock
+            def _now(self):
+                return self._clock() if self._clock else time.monotonic()
+            def deadline(self, timeout):
+                return self._now() + timeout
+    """)
+    assert rules == []
+
+
+# ---------------------------------------------------------------------------
+# stats-direct-mutation
+# ---------------------------------------------------------------------------
+def test_stats_direct_mutation_flags_bare_writes(tmp_path):
+    rules, _ = _scan(tmp_path, """
+        def bump(proc, stats):
+            proc.stats.in_records += 1      # three bytecodes, loses updates
+            stats.out_records = 5
+    """)
+    assert rules == ["stats-direct-mutation"] * 2
+
+
+def test_stats_direct_mutation_allows_locked_helpers(tmp_path):
+    rules, _ = _scan(tmp_path, """
+        def bump(proc, other):
+            proc.stats.add(in_records=1)
+            proc.stats.set(out_records=5)
+            other.in_records += 1           # not a .stats. chain
+    """)
+    assert rules == []
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+# ---------------------------------------------------------------------------
+def test_pragma_suppresses_with_reason_same_line_and_above(tmp_path):
+    rules, result = _scan(tmp_path, """
+        import time
+
+        class C:
+            def f(self):
+                with self._lock:
+                    time.sleep(0.01)  # lint: ok(lock-blocking-call) — bounded pause, lock is private
+                    # lint: ok(lock-blocking-call) — drain is non-blocking here
+                    self.out.offer_batch(batch)
+    """)
+    assert rules == []
+    assert len(result.suppressed) == 2
+    assert result.unused_pragmas == []
+
+
+def test_pragma_without_reason_does_not_suppress(tmp_path):
+    rules, _ = _scan(tmp_path, """
+        import time
+
+        class C:
+            def f(self):
+                with self._lock:
+                    time.sleep(0.01)  # lint: ok(lock-blocking-call)
+    """)
+    assert rules == ["lock-blocking-call"]
+
+
+def test_unused_pragma_is_reported(tmp_path):
+    _, result = _scan(tmp_path, """
+        x = 1  # lint: ok(lock-blocking-call) — stale suppression
+    """)
+    assert len(result.unused_pragmas) == 1
+
+
+# ---------------------------------------------------------------------------
+# baseline drift (both directions)
+# ---------------------------------------------------------------------------
+def test_baseline_partition_new_and_stale(tmp_path):
+    _, result = _scan(tmp_path, """
+        import os
+        def persist(tmp, final):
+            os.replace(tmp, final)
+    """)
+    assert len(result.findings) == 1
+    # exact match: nothing new, nothing stale
+    new, stale = result.partition_against(list(result.findings))
+    assert new == [] and stale == []
+    # unknown finding in the scan output -> new
+    new, stale = result.partition_against([])
+    assert len(new) == 1 and stale == []
+    # baseline entry whose finding was fixed -> stale
+    ghost = Finding(rule="durability-rename", path=result.findings[0].path,
+                    line=99, message="gone")
+    new, stale = result.partition_against(list(result.findings) + [ghost])
+    assert new == [] and stale == [ghost]
+
+
+def test_baseline_outside_scanned_paths_is_not_stale(tmp_path):
+    _, result = _scan(tmp_path, "x = 1\n")
+    ghost = Finding(rule="durability-rename", path="elsewhere/other.py",
+                    line=1, message="not rescanned")
+    new, stale = result.partition_against([ghost])
+    assert new == [] and stale == []
+
+
+# ---------------------------------------------------------------------------
+# baseline freshness: the real repo against its committed baseline
+# ---------------------------------------------------------------------------
+def test_repo_scan_matches_committed_baseline_exactly():
+    """The meta-test the CI gate rests on: scanning the configured paths of
+    THIS checkout must reproduce the committed baseline exactly — zero new
+    findings, zero stale entries, zero unused pragmas. Any drift (a new
+    violation, or a fix that should shrink the baseline) fails here before
+    it fails in scripts/ci.sh."""
+    config = load_config()
+    engine = Engine(config)
+    result = engine.scan()
+    baseline = engine.load_baseline()
+    new, stale = result.partition_against(baseline)
+    assert new == [], "unbaselined findings:\n" + "\n".join(
+        f.render() for f in new)
+    assert stale == [], "stale baseline entries (fixed? regenerate):\n" + \
+        "\n".join(f.render() for f in stale)
+    assert result.unused_pragmas == []
+    # and the committed JSON itself is the canonical serialization
+    on_disk = json.loads(config.baseline_path().read_text())
+    assert sorted(d["path"] + ":" + str(d["line"]) + ":" + d["rule"]
+                  for d in on_disk["findings"]) == \
+        sorted(f.path + ":" + str(f.line) + ":" + f.rule for f in baseline)
+
+
+def test_default_rules_cover_the_documented_bug_classes():
+    config = load_config()
+    ids = {r.id for r in default_rules(config)}
+    assert ids == {"lock-blocking-call", "durability-rename",
+                   "fault-site-registry", "naked-clock",
+                   "stats-direct-mutation"}
+    for r in default_rules(config):
+        assert r.doc, f"rule {r.id} has no one-line doc"
+
+
+# ---------------------------------------------------------------------------
+# dynamic lock-order detector
+# ---------------------------------------------------------------------------
+def _two_tracked_locks(mon):
+    """Construct two locks at distinct sites inside this (tracked) file."""
+    with mon:
+        lock_a = threading.Lock()   # site A
+        lock_b = threading.Lock()   # site B
+    return lock_a, lock_b
+
+
+def test_lockorder_detects_seeded_inversion():
+    """A -> B then B -> A, recorded from the acquisition ORDER — no actual
+    deadlock has to happen for the hazard to be caught."""
+    mon = LockOrderMonitor(prefixes=("test_analysis",))
+    a, b = _two_tracked_locks(mon)
+    with a:
+        with b:
+            pass
+    with b:
+        with a:             # inversion: the cycle is now in the graph
+            pass
+    cycles = mon.cycles()
+    assert len(cycles) == 1 and len(cycles[0]) == 2
+    with pytest.raises(LockOrderViolation) as ei:
+        mon.check()
+    assert "CYCLE" in str(ei.value)
+    # both edges (and their witness thread) appear in the report
+    assert len([e for e in mon.edges() if e[0] != e[1]]) == 2
+
+
+def test_lockorder_consistent_order_is_clean():
+    mon = LockOrderMonitor(prefixes=("test_analysis",))
+    a, b = _two_tracked_locks(mon)
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert mon.cycles() == []
+    mon.check()             # does not raise
+
+
+def test_lockorder_cross_thread_inversion_detected():
+    mon = LockOrderMonitor(prefixes=("test_analysis",))
+    a, b = _two_tracked_locks(mon)
+    with a:
+        with b:
+            pass
+    done = threading.Event()
+
+    def inverted():
+        with b:
+            with a:
+                pass
+        done.set()
+
+    t = threading.Thread(target=inverted)
+    t.start()
+    t.join(5)
+    assert done.is_set()
+    assert len(mon.cycles()) == 1
+
+
+def test_lockorder_rlock_reentrancy_is_not_a_self_edge():
+    mon = LockOrderMonitor(prefixes=("test_analysis",))
+    with mon:
+        r = threading.RLock()
+    with r:
+        with r:             # recursion, not a second instance
+            pass
+    assert mon.cycles() == []
+
+
+def test_lockorder_self_edge_between_instances_is_a_cycle():
+    """Two instances from the SAME construction site held across each other
+    (the A.merge(B) / B.merge(A) shape) — reported as a one-node cycle."""
+    mon = LockOrderMonitor(prefixes=("test_analysis",))
+    with mon:
+        def make():
+            return threading.Lock()
+        first, second = make(), make()
+    with first:
+        with second:
+            pass
+    cycles = mon.cycles()
+    assert len(cycles) == 1 and len(cycles[0]) == 1
+
+
+def test_lockorder_condition_wait_releases_the_lock():
+    """cond.wait() parks with the lock RELEASED — a lock taken inside the
+    wait window must not record an edge from the condition's lock."""
+    mon = LockOrderMonitor(prefixes=("test_analysis",))
+    with mon:
+        inner = threading.Lock()
+        cond = threading.Condition(threading.Lock())
+    started = threading.Event()
+    release = threading.Event()
+
+    def waiter():
+        with cond:
+            started.set()
+            cond.wait(5)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    started.wait(5)
+    # while the waiter is parked, take the other lock then notify
+    with inner:
+        release.set()
+    with cond:
+        cond.notify_all()
+    t.join(5)
+    assert all(a != b for a, b in mon.edges()), mon.report()
+    assert mon.cycles() == []
+
+
+def test_lockorder_untracked_construction_returns_stock_locks():
+    mon = LockOrderMonitor(prefixes=("no/such/path",))
+    with mon:
+        lock = threading.Lock()
+    assert type(lock).__name__ == "lock"        # raw _thread.lock
+    assert mon.tracked_sites == set()
+
+
+def test_lockorder_env_gating(monkeypatch):
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    assert monitor_enabled_by_env() is None
+    monkeypatch.setenv(ENV_VAR, "0")
+    assert monitor_enabled_by_env() is None
+    monkeypatch.setenv(ENV_VAR, "1")
+    assert isinstance(monitor_enabled_by_env(), LockOrderMonitor)
+
+
+def test_lockorder_uninstall_restores_factories():
+    orig_lock, orig_rlock = threading.Lock, threading.RLock
+    mon = LockOrderMonitor()
+    mon.install()
+    mon.uninstall()
+    assert threading.Lock is orig_lock and threading.RLock is orig_rlock
+
+
+# ---------------------------------------------------------------------------
+# fault-site registry: runtime half
+# ---------------------------------------------------------------------------
+def test_arm_rejects_undeclared_site():
+    from repro.core.faults import FaultInjector, UndeclaredFaultSite
+    inj = FaultInjector()
+    with pytest.raises(UndeclaredFaultSite):
+        inj.arm("transport.server.recieve")     # typo'd: would never fire
+    inj.arm("transport.server.recv")            # declared: fine
+    inj.arm("proc.anything-goes-here")          # declared family
+    assert inj.armed() == ["proc.anything-goes-here", "transport.server.recv"]
+
+
+def test_declared_registry_docs_are_nonempty():
+    from repro.core.faults import SITES, declared
+    for site, doc in SITES.items():
+        assert doc.strip(), f"site {site} has no one-line doc"
+    assert declared("proc.x") and not declared("procx")

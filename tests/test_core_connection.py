@@ -7,6 +7,10 @@ import pytest
 from repro.core import (BackpressureTimeout, Connection, RateThrottle,
                         make_flowfile)
 
+#: fast concurrency-layer module: CI re-runs it under the
+#: REPRO_LOCK_ORDER=1 lock-order detector (scripts/ci.sh)
+pytestmark = pytest.mark.lockorder
+
 
 def ff(i=0, size=10):
     return make_flowfile(b"x" * size, i=str(i))

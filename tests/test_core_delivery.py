@@ -4,6 +4,10 @@ import pytest
 from repro.core import (ConsumerGroup, OffsetStore, Producer, StaleGeneration,
                         range_assign)
 
+#: fast concurrency-layer module: CI re-runs it under the
+#: REPRO_LOCK_ORDER=1 lock-order detector (scripts/ci.sh)
+pytestmark = pytest.mark.lockorder
+
 
 def fill(log, topic="t", partitions=4, n=40):
     log.create_topic(topic, partitions=partitions)

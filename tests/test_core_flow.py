@@ -13,6 +13,10 @@ from repro.core import (CollectSink, ConsumerGroup, ContentFilter,
                         PublishToLog, RouteOnAttribute, RssAggregatorSource,
                         Source, Throttle, make_flowfile)
 
+#: fast concurrency-layer module: CI re-runs it under the
+#: REPRO_LOCK_ORDER=1 lock-order detector (scripts/ci.sh)
+pytestmark = pytest.mark.lockorder
+
 
 def _mini_news_flow(tmp_path, n=300, log=None):
     """source → parse/filter junk → dedup → publish(unique) to log."""

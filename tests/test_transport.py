@@ -18,6 +18,10 @@ from repro.core.transport import (FencedError, FenceTable, FrameTooLarge,
                                   recv_exact, send_ctrl, send_frame,
                                   serve_store)
 
+#: fast concurrency-layer module: CI re-runs it under the
+#: REPRO_LOCK_ORDER=1 lock-order detector (scripts/ci.sh)
+pytestmark = pytest.mark.lockorder
+
 
 @pytest.fixture()
 def remote(tmp_path):

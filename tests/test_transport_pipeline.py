@@ -15,6 +15,10 @@ from repro.core.faults import INJECTOR
 from repro.core.logstore import LogStore
 from repro.core.transport import LogServer, RemoteLogStore
 
+#: fast concurrency-layer module: CI re-runs it under the
+#: REPRO_LOCK_ORDER=1 lock-order detector (scripts/ci.sh)
+pytestmark = pytest.mark.lockorder
+
 
 @pytest.fixture()
 def remote(tmp_path):
